@@ -1,0 +1,70 @@
+"""Table 3 — time/space complexity accounting.
+
+Measured per-sweep wall time for the inner E-step across K, for the full
+IEM (O(2K·NNZ)) vs the time-efficient IEM (O(λ_kK·NNZ + W_s·K log K)); plus
+the space model of each algorithm evaluated at the PUBMED-scale constants
+(analytic, bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Workload, csv_row, lda_config
+from repro.core import GlobalStats, MinibatchData, foem
+from repro.sparse import MinibatchStream
+
+
+def _per_sweep_time(cfg, batch, sweeps=6):
+    stats = GlobalStats.zeros(cfg)
+    cfg1 = dataclasses.replace(
+        cfg, max_sweeps=sweeps, ppl_check_every=10_000  # no early stop
+    )
+    fn = jax.jit(
+        lambda k, b, s: foem.foem_step(k, b, s, cfg1)[0].phi_k
+    )
+    k = jax.random.PRNGKey(0)
+    fn(k, batch, stats).block_until_ready()          # compile
+    t0 = time.perf_counter()
+    fn(k, batch, stats).block_until_ready()
+    return (time.perf_counter() - t0) / sweeps
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    wl = Workload.make(docs=512, vocab=1500, topics=16, seed=6)
+    mb = next(iter(MinibatchStream(wl.corpus, 256, seed=0)))
+    batch = MinibatchData(jnp.asarray(mb.word_ids), jnp.asarray(mb.counts))
+    for K in (64, 128, 256, 512):
+        full = lda_config(K, 1500, "foem", active_topics=0)
+        sched = lda_config(K, 1500, "foem", active_topics=16)
+        t_full = _per_sweep_time(full, batch)
+        t_sched = _per_sweep_time(sched, batch)
+        rows.append(csv_row(
+            f"table3_time_K{K}", t_full * 1e6,
+            f"full_iem_s={t_full:.4f};foem_s={t_sched:.4f};"
+            f"ratio={t_full/max(t_sched,1e-9):.2f}",
+        ))
+
+    # space models at PUBMED constants (paper Table 3/§2.3), bytes
+    D, W, NNZ, K = 8_200_000, 141_043, 483_450_157, 10_000
+    Ds, NNZs, Ws, Wstar = 1024, 65_536, 20_000, 5_000
+    fp = 4
+    space = {
+        "BEM": (D + 2 * NNZ + 2 * K * (D + W)) * fp,
+        "IEM": (D + 2 * NNZ + K * (D + NNZ + W)) * fp,
+        "SEM": (Ds + 2 * NNZs + K * (Ds + NNZs + W)) * fp,
+        "FOEM": (Ds + 2 * NNZs + K * (Ds + NNZs + Wstar)) * fp,
+    }
+    for name, b in space.items():
+        rows.append(csv_row(
+            f"table3_space_{name}", 0.0, f"bytes={b:.3e};GiB={b/2**30:.1f}"
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

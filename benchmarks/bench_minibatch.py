@@ -1,0 +1,31 @@
+"""Figs. 8/9 — convergence time + predictive perplexity vs minibatch size.
+
+Claims: FOEM's time is flat-ish in D_s (vs OVB which needs fewer, larger
+steps); FOEM attains the lowest predictive perplexity at every D_s.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Workload, csv_row, heldout_ppl, lda_config, run_stream
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    wl = Workload.make(docs=1024, vocab=1500, topics=16, seed=3)
+    tokens_budget = 4 * 512          # equal documents seen per config
+    for Ds in (64, 128, 256, 512):
+        steps = max(2, tokens_budget // Ds)
+        for algo in ("foem", "sem", "ovb", "ogs"):
+            cfg = lda_config(32, 1500, algo)
+            stats, ppls, secs = run_stream(algo, wl, cfg, minibatch=Ds,
+                                           steps=steps)
+            ppl = heldout_ppl(wl, stats, cfg)
+            rows.append(csv_row(
+                f"fig8_9_minibatch_{algo}_Ds{Ds}",
+                secs / max(steps - 1, 1) * 1e6,
+                f"pred_ppl={ppl:.2f};steps={steps};total_s={secs:.2f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

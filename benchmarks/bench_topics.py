@@ -1,0 +1,33 @@
+"""Figs. 10/11 — convergence time + predictive perplexity vs topic count K.
+
+Claim: all baselines scale linearly in K; FOEM's λ_k·K = const scheduling
+keeps its per-step time nearly flat while staying lowest-perplexity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Workload, csv_row, heldout_ppl, lda_config, run_stream
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    wl = Workload.make(docs=768, vocab=1500, topics=24, seed=4)
+    for K in (32, 64, 128, 256):
+        for algo in ("foem", "sem", "ovb"):
+            cfg = lda_config(K, 1500, algo)
+            if algo == "foem":
+                cfg = dataclasses.replace(cfg, active_topics=8)  # λ_k·K const
+            stats, ppls, secs = run_stream(algo, wl, cfg, minibatch=128,
+                                           steps=5)
+            ppl = heldout_ppl(wl, stats, cfg)
+            rows.append(csv_row(
+                f"fig10_11_topics_{algo}_K{K}",
+                secs / 4 * 1e6,
+                f"pred_ppl={ppl:.2f};per_step_s={secs/4:.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

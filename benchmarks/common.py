@@ -1,0 +1,113 @@
+"""Shared benchmark harness.
+
+Corpora are synthetic with UCI-like statistics scaled to CPU (the paper's
+ENRON/WIKI/NYTIMES/PUBMED grid is a cluster-day workload; trends, not
+absolute numbers, are the reproduction target — see EXPERIMENTS.md).
+Every bench prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GlobalStats, LDAConfig, MinibatchData, foem, sem
+from repro.core.baselines import ogs_step, ovb_step, scvb_step
+from repro.core.perplexity import predictive_perplexity, split_heldout_counts
+from repro.data import synthetic_lda_corpus
+from repro.sparse import MinibatchStream
+from repro.sparse.docword import DocWordMatrix, bucketize
+
+ALGOS = {
+    "foem": foem.foem_step,
+    "sem": sem.sem_step,         # ≡ SCVB up to pseudo-counts (Table 3)
+    "scvb": scvb_step,
+    "ovb": ovb_step,
+    "ogs": ogs_step,
+}
+
+
+@dataclasses.dataclass
+class Workload:
+    corpus: DocWordMatrix
+    test: DocWordMatrix
+    true_k: int
+
+    @classmethod
+    def make(cls, docs=1500, vocab=2000, topics=20, doc_len=64, seed=0):
+        corpus, _ = synthetic_lda_corpus(
+            docs, vocab, topics, mean_doc_len=doc_len, seed=seed
+        )
+        rng = np.random.default_rng(seed)
+        train, test = corpus.split_train_test(max(docs // 10, 16), rng)
+        return cls(corpus=train, test=test, true_k=topics)
+
+
+def lda_config(K, W, algo, **kw) -> LDAConfig:
+    base = dict(
+        num_topics=K, vocab_size=W, max_sweeps=16, iem_blocks=4,
+        ppl_check_every=5, ppl_rel_tol=0.01,
+    )
+    if algo == "foem":
+        # λ_k·K active topics with an equal-WORK sweep budget: a scheduled
+        # sweep costs ~λ_k of a full one (paper §3.1 complexity).
+        active = min(16, max(2, K // 8))
+        lam = active / K
+        base.update(
+            active_topics=active,
+            max_sweeps=int(2 + 14 / max(lam, 1e-3)),
+        )
+    if algo in ("sem", "scvb", "ovb", "ogs"):
+        base.update(rho_mode="stepwise")
+    base.update(kw)
+    return LDAConfig(**base)
+
+
+def run_stream(
+    algo: str, wl: Workload, cfg: LDAConfig, minibatch: int, steps: int,
+    seed: int = 0,
+) -> Tuple[GlobalStats, List[float], float]:
+    """Returns (stats, per-step train ppl, wall seconds excl. first compile)."""
+    step_fn = ALGOS[algo]
+    stats = GlobalStats.zeros(cfg)
+    key = jax.random.PRNGKey(seed)
+    ppls: List[float] = []
+    t_total = 0.0
+    stream = MinibatchStream(wl.corpus, minibatch, seed=seed, epochs=None)
+    for i, mb in enumerate(stream):
+        if i >= steps:
+            break
+        batch = MinibatchData(jnp.asarray(mb.word_ids), jnp.asarray(mb.counts))
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        stats, _, diag = step_fn(sub, batch, stats, cfg)
+        jax.block_until_ready(stats.phi_k)
+        dt = time.perf_counter() - t0
+        if i > 0:                      # exclude compile step
+            t_total += dt
+        ppls.append(float(diag.final_train_ppl))
+    return stats, ppls, t_total
+
+
+def heldout_ppl(wl: Workload, stats: GlobalStats, cfg: LDAConfig,
+                seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    ids = list(range(wl.test.num_docs))[:64]
+    w, c = bucketize(wl.test, ids)
+    est, ev = split_heldout_counts(c, rng)
+    return float(predictive_perplexity(
+        jax.random.PRNGKey(seed),
+        MinibatchData(jnp.asarray(w), jnp.asarray(est)),
+        MinibatchData(jnp.asarray(w), jnp.asarray(ev)),
+        stats.phi_wk, stats.phi_k, cfg, fit_sweeps=30,
+    ))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row

@@ -1,0 +1,46 @@
+"""Aggregate the dry-run JSON records into the §Roofline table (markdown)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str = "16x16", tag: str = ""):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def table(mesh: str = "16x16", tag: str = "") -> str:
+    rows = [
+        "| arch | shape | kind | compute_s | memory_s | coll_s | dominant "
+        "| MODEL_FLOPS | useful% | roofline-MFU% |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh, tag):
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+            f"| {rf['model_flops']:.3e} "
+            f"| {rf['useful_flops_fraction']*100:.1f} "
+            f"| {rf['roofline_mfu']*100:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def main(rows=None):
+    print(table())
+    return rows or []
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows for:
+  * Fig. 7   dynamic scheduling λ_k sweep        (bench_scheduling)
+  * Table 5  parameter-streaming buffer sweep    (bench_streaming)
+  * Figs 8/9 minibatch-size sweep                (bench_minibatch)
+  * Figs 10/11 topic-count sweep                 (bench_topics)
+  * Fig. 12  perplexity-vs-time convergence      (bench_convergence)
+  * Table 3  complexity accounting               (bench_complexity)
+
+``python -m benchmarks.run [--only fig7,table5,...]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_complexity,
+    bench_convergence,
+    bench_minibatch,
+    bench_scheduling,
+    bench_streaming,
+    bench_topics,
+)
+
+SUITES = {
+    "fig7": bench_scheduling.main,
+    "table5": bench_streaming.main,
+    "fig8_9": bench_minibatch.main,
+    "fig10_11": bench_topics.main,
+    "fig12": bench_convergence.main,
+    "table3": bench_complexity.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="comma-separated suite filter")
+    args = ap.parse_args()
+    picks = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in picks:
+        t0 = time.time()
+        try:
+            SUITES[name]([])
+        except Exception:                      # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# suite {name} finished in {time.time()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"failed suites: {failures}")
+
+
+if __name__ == "__main__":
+    main()

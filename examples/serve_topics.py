@@ -1,0 +1,33 @@
+"""Serve topic-mixture inference for unseen documents against a trained,
+disk-backed φ̂ (run examples/train_foem_stream.py first, or this script
+trains a small model itself when the workdir is empty).
+
+    PYTHONPATH=src python examples/serve_topics.py
+"""
+import os
+import sys
+
+from repro.launch import serve, train
+
+
+def main():
+    workdir = "/tmp/foem_serve_demo"
+    if not os.path.exists(os.path.join(workdir, "store.json")):
+        print("[demo] no trained store found — training a small one first")
+        sys.argv = [
+            "train.py", "--arch", "foem-lda", "--workdir", workdir,
+            "--steps", "10", "--topics", "100", "--vocab", "5000",
+            "--docs", "1500", "--minibatch", "256", "--active-topics", "8",
+            "--log-every", "5",
+        ]
+        train.main()
+    sys.argv = [
+        "serve.py", "--arch", "foem-lda", "--workdir", workdir,
+        "--topics", "100", "--vocab", "5000", "--requests", "512",
+        "--batch", "64",
+    ]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end driver: lifelong FOEM training with the full system stack —
+streaming minibatches, dynamic scheduling, disk-backed parameter streaming,
+periodic checkpointing, crash recovery and held-out evaluation.
+
+~100M-parameter regime (K x W = 1000 x 20000 = 2·10^7 stats by default; pass
+--topics 2000 --vocab 50000 for the 10^8 regime if you have the minutes).
+
+    PYTHONPATH=src python examples/train_foem_stream.py --steps 40
+    # kill it mid-run, then resume:
+    PYTHONPATH=src python examples/train_foem_stream.py --steps 40 --resume
+"""
+import argparse
+
+from repro.launch.train import main as _train_main
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--topics", type=int, default=1000)
+    ap.add_argument("--vocab", type=int, default=20000)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--workdir", default="/tmp/foem_stream")
+    args = ap.parse_args()
+
+    argv = [
+        "train.py",
+        "--arch", "foem-lda",
+        "--workdir", args.workdir,
+        "--steps", str(args.steps),
+        "--topics", str(args.topics),
+        "--vocab", str(args.vocab),
+        "--docs", "3000",
+        "--doc-len", "64",
+        "--minibatch", "256",
+        "--active-topics", "10",
+        "--max-sweeps", "12",
+        "--buffer-rows", "4096",
+        "--ckpt-every", "5",
+        "--topics-true", "32",
+    ]
+    if args.resume:
+        argv.append("--resume")
+    sys.argv = argv
+    _train_main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Train a reduced-config assigned architecture on synthetic token streams —
+exercises the LM substrate end-to-end (AdamW, checkpointing, resume).
+
+    PYTHONPATH=src python examples/train_lm.py --arch granite-8b --steps 30
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-moe-a2.7b
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2-370m
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as _train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--steps", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    argv = [
+        "train.py", "--arch", args.arch,
+        "--workdir", f"/tmp/lm_{args.arch}",
+        "--steps", str(args.steps),
+        "--minibatch", "8",
+        "--seq-len", "64",
+        "--ckpt-every", "10",
+        "--log-every", "5",
+    ]
+    if args.resume:
+        argv.append("--resume")
+    sys.argv = argv
+    _train_main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro — Fast Online EM (FOEM) for big topic modeling, as a multi-pod JAX framework.
+
+The paper's contribution (Zeng, Liu & Cao, TKDE — DOI 10.1109/TKDE.2015.2492565)
+is implemented as a first-class training technique in ``repro.core``; the
+surrounding substrate (data pipeline, model zoo, parallelism, checkpointing,
+launch/dry-run tooling) makes it deployable at pod scale.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.configs.base import ArchConfig, LM_SHAPES, ShapeConfig
+
+__all__ = ["ArchConfig", "LM_SHAPES", "ShapeConfig"]

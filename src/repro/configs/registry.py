@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch/dryrun/train."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, LM_SHAPES, ShapeConfig
+from repro.configs import (
+    granite_20b,
+    granite_8b,
+    internlm2_20b,
+    h2o_danube_3_4b,
+    mamba2_370m,
+    qwen2_moe_a2_7b,
+    qwen3_moe_235b_a22b,
+    musicgen_medium,
+    llama_3_2_vision_11b,
+    jamba_1_5_large_398b,
+)
+
+_MODULES = (
+    granite_20b,
+    granite_8b,
+    internlm2_20b,
+    h2o_danube_3_4b,
+    mamba2_370m,
+    qwen2_moe_a2_7b,
+    qwen3_moe_235b_a22b,
+    musicgen_medium,
+    llama_3_2_vision_11b,
+    jamba_1_5_large_398b,
+)
+
+ARCHS: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+# the paper's own architecture is registered separately (different step fns)
+LDA_ARCH = "foem-lda"
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCHS)} + ['{LDA_ARCH}']"
+        )
+    return ARCHS[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)
+
+
+def get_shape(arch: ArchConfig, shape_name: str) -> ShapeConfig:
+    for s in arch.shapes():
+        if s.name == shape_name:
+            return s
+    raise KeyError(
+        f"shape {shape_name!r} not available for {arch.name} "
+        f"(skipped: {arch.skipped_shapes()})"
+    )

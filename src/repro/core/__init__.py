@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution (EM / online EM / FOEM for LDA)."""
+from repro.core.types import (
+    GlobalStats,
+    LDAConfig,
+    LocalState,
+    MinibatchData,
+    SchedulerState,
+    uniform_responsibilities,
+)
+from repro.core import em, foem, sem, scheduling, perplexity, baselines
+from repro.core.streaming import ParameterStore
+from repro.core.trainer import FOEMTrainer
+
+__all__ = [
+    "GlobalStats",
+    "LDAConfig",
+    "LocalState",
+    "MinibatchData",
+    "SchedulerState",
+    "uniform_responsibilities",
+    "em",
+    "foem",
+    "sem",
+    "scheduling",
+    "perplexity",
+    "baselines",
+    "ParameterStore",
+    "FOEMTrainer",
+]

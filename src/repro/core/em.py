@@ -1,0 +1,350 @@
+"""EM for LDA — batch (BEM), incremental (IEM) and the blocked-IEM TPU adaptation.
+
+This module holds the *algorithmic core* of the paper in pure JAX:
+
+  * ``estep``            — eq. (11)/(13): responsibilities from sufficient stats,
+                           with optional IEM self-exclusion.
+  * ``fold_minibatch``   — M-step folds: Δθ̂, Δφ̂ from responsibilities
+                           (``jax.ops.segment_sum`` scatter onto the vocab axis).
+  * ``bem_sweep``        — one synchronous Jacobi sweep (paper Fig. 1, lines 4-7).
+  * ``blocked_iem_sweep``— the TPU adaptation of Fig. 2: the minibatch's token
+                           slots are split into B sequential blocks; within a
+                           block the E-step is vectorized (Jacobi), and the
+                           sufficient statistics are folded in *between* blocks
+                           (Gauss-Seidel across blocks).  B=1 recovers BEM,
+                           B=L recovers column-serial IEM.
+  * ``iem_exact_numpy``  — the paper's serial per-non-zero IEM (Fig. 2) in
+                           NumPy; the oracle for tests.
+
+All functions are shard_map/pjit friendly: static shapes, no data-dependent
+control flow.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import GlobalStats, LDAConfig, LocalState, MinibatchData
+
+
+# ---------------------------------------------------------------------------
+# E-step
+# ---------------------------------------------------------------------------
+
+def estep(
+    theta_rows: jax.Array,      # (D, 1|L, K) θ̂ broadcast over token slots
+    phi_rows: jax.Array,        # (D, L, K)   φ̂ gathered at each token's word
+    phi_tot: jax.Array,         # (K,) or broadcastable — φ̂(k)
+    cfg: LDAConfig,
+    *,
+    exclude: Optional[jax.Array] = None,  # (D, L, K) == counts·μ_old  (IEM, eq. 13)
+    vocab_size: Optional[jax.Array | int] = None,
+    tp_axis: Optional[str] = None,  # shard_map: K is a shard; psum the normaliser
+) -> jax.Array:
+    """Responsibility update μ_{w,d}(k) — paper eq. (11) (BEM) / eq. (13) (IEM).
+
+    Returns the *normalized* responsibilities, shape (D, L, K).  Under
+    shard_map with the topic axis sharded, ``tp_axis`` makes the (tiny)
+    normaliser a psum — everything else stays shard-local.
+    """
+    W = cfg.W if vocab_size is None else vocab_size
+    th, ph, pt = theta_rows, phi_rows, phi_tot
+    if exclude is not None:
+        th = th - exclude
+        ph = ph - exclude
+        pt = pt - exclude
+    # Numerical guard: stats are sums of non-negative terms, but blocked
+    # subtraction can leave -1e-7s behind.
+    th = jnp.maximum(th, 0.0)
+    ph = jnp.maximum(ph, 0.0)
+    num = (th + cfg.alpha_m1) * (ph + cfg.beta_m1) / (pt + W * cfg.beta_m1)
+    denom = num.sum(-1, keepdims=True)
+    if tp_axis is not None:
+        denom = jax.lax.psum(denom, tp_axis)
+    return num / jnp.maximum(denom, 1e-30)
+
+
+def gather_phi_rows(phi_wk: jax.Array, word_ids: jax.Array) -> jax.Array:
+    """Gather φ̂ rows for every token slot: (W,K)[(D,L)] -> (D,L,K)."""
+    return jnp.take(phi_wk, word_ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# M-step folds
+# ---------------------------------------------------------------------------
+
+def fold_theta(mu: jax.Array, counts: jax.Array) -> jax.Array:
+    """θ̂_d(k) = Σ_w x_{w,d} μ_{w,d}(k)   — (D, L, K) x (D, L) -> (D, K)."""
+    return jnp.einsum("dlk,dl->dk", mu, counts)
+
+
+def fold_phi(
+    mu: jax.Array, counts: jax.Array, word_ids: jax.Array, vocab_size: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Δφ̂_w(k) = Σ_d x_{w,d} μ_{w,d}(k) and Δφ̂(k), via segment-sum scatter.
+
+    Returns ``(delta_phi_wk (W,K), delta_phi_k (K,))``.
+    """
+    D, L, K = mu.shape
+    weighted = mu * counts[..., None]                  # (D, L, K)
+    flat = weighted.reshape(D * L, K)
+    seg = word_ids.reshape(D * L)
+    delta_wk = jax.ops.segment_sum(flat, seg, num_segments=vocab_size)
+    return delta_wk, weighted.sum(axis=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+
+def bem_sweep(
+    batch: MinibatchData,
+    local: LocalState,
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    cfg: LDAConfig,
+    *,
+    vocab_size: Optional[int] = None,
+) -> Tuple[LocalState, jax.Array, jax.Array]:
+    """One synchronous BEM sweep over a minibatch (paper Fig. 1 lines 4-7).
+
+    ``phi_wk`` here is the matrix the E-step reads (global or local view); the
+    caller decides how Δφ̂ is merged (batch vs stepwise vs accumulate).
+
+    Returns ``(new_local, delta_phi_wk, delta_phi_k)`` where the deltas are the
+    *minibatch totals* Σ_d x μ (not increments).
+    """
+    W = vocab_size if vocab_size is not None else cfg.W
+    phi_rows = gather_phi_rows(phi_wk, batch.word_ids)
+    mu = estep(
+        local.theta_dk[:, None, :], phi_rows, phi_k, cfg, vocab_size=W
+    )
+    theta = fold_theta(mu, batch.counts)
+    d_wk, d_k = fold_phi(mu, batch.counts, batch.word_ids, phi_wk.shape[0])
+    return LocalState(mu=mu, theta_dk=theta), d_wk, d_k
+
+
+def blocked_iem_sweep(
+    batch: MinibatchData,
+    local: LocalState,
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    cfg: LDAConfig,
+    *,
+    num_blocks: Optional[int] = None,
+    vocab_size: Optional[int] = None,
+) -> Tuple[LocalState, jax.Array, jax.Array]:
+    """Blocked incremental-EM sweep — the TPU-parallel form of paper Fig. 2.
+
+    The L token slots are partitioned into ``num_blocks`` contiguous column
+    blocks.  For each block, in order:
+      1. E-step for the block's tokens with *self-exclusion* (eq. 13) against
+         the current stats (which already include this minibatch's μ).
+      2. Replace the block's contribution in θ̂ (local) and φ̂ (in the sweep's
+         working copy) — the Gauss-Seidel fold.
+
+    The working copy of φ̂ starts at ``phi_wk (+ this minibatch's μ folded in
+    by the caller)``; we return the updated LocalState plus the *delta* of the
+    minibatch totals so the caller can merge into the global stream state.
+    """
+    B = num_blocks or cfg.iem_blocks
+    D, L = batch.word_ids.shape
+    K = cfg.K
+    W = vocab_size if vocab_size is not None else cfg.W
+    Wrows = phi_wk.shape[0]
+    B = max(1, min(B, L))
+    pad = (-L) % B
+    # Static split: pad L to a multiple of B with zero-count slots.
+    if pad:
+        word_ids = jnp.pad(batch.word_ids, ((0, 0), (0, pad)))
+        counts = jnp.pad(batch.counts, ((0, 0), (0, pad)))
+        mu0 = jnp.pad(local.mu, ((0, 0), (0, pad), (0, 0)))
+    else:
+        word_ids, counts, mu0 = batch.word_ids, batch.counts, local.mu
+    Lp = L + pad
+    blk = Lp // B
+
+    # reshape to (B, D, blk, ...) — block-major scan layout
+    w_b = word_ids.reshape(D, B, blk).transpose(1, 0, 2)
+    c_b = counts.reshape(D, B, blk).transpose(1, 0, 2)
+    mu_b = mu0.reshape(D, B, blk, K).transpose(1, 0, 2, 3)
+
+    def body(carry, xs):
+        theta, phi, ptot = carry
+        wid, cnt, mu_old = xs                       # (D,blk) (D,blk) (D,blk,K)
+        contrib_old = cnt[..., None] * mu_old       # (D, blk, K)
+        phi_rows = jnp.take(phi, wid, axis=0)       # (D, blk, K)
+        mu_new = estep(
+            theta[:, None, :], phi_rows, ptot, cfg,
+            exclude=contrib_old, vocab_size=W,
+        )
+        contrib_new = cnt[..., None] * mu_new
+        d = contrib_new - contrib_old               # (D, blk, K)
+        theta = theta + d.sum(axis=1)
+        flat = d.reshape(D * blk, K)
+        seg = wid.reshape(D * blk)
+        phi = phi + jax.ops.segment_sum(flat, seg, num_segments=Wrows)
+        ptot = ptot + d.sum(axis=(0, 1))
+        return (theta, phi, ptot), mu_new
+
+    (theta, phi, ptot), mu_out = jax.lax.scan(
+        body, (local.theta_dk, phi_wk, phi_k), (w_b, c_b, mu_b)
+    )
+    mu_out = mu_out.transpose(1, 0, 2, 3).reshape(D, Lp, K)[:, :L]
+    d_wk = phi - phi_wk
+    d_k = ptot - phi_k
+    return LocalState(mu=mu_out, theta_dk=theta), d_wk, d_k
+
+
+# ---------------------------------------------------------------------------
+# Batch driver (BEM, paper Fig. 1) — used by tests/benchmarks on small corpora
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sweeps"))
+def bem_fit(
+    batch: MinibatchData, mu0: jax.Array, cfg: LDAConfig, sweeps: int
+) -> Tuple[LocalState, jax.Array, jax.Array, jax.Array]:
+    """Run ``sweeps`` full BEM iterations on one (small) corpus.
+
+    Returns (local, phi_wk, phi_k, loglik_per_sweep).
+    """
+    theta0 = fold_theta(mu0, batch.counts)
+    phi0, ptot0 = fold_phi(mu0, batch.counts, batch.word_ids, cfg.W)
+
+    def sweep(carry, _):
+        local, phi_wk, phi_k = carry
+        new_local, d_wk, d_k = bem_sweep(batch, local, phi_wk, phi_k, cfg)
+        ll = map_log_likelihood(batch, new_local.theta_dk, d_wk, d_k, cfg)
+        return (new_local, d_wk, d_k), ll
+
+    (local, phi, ptot), lls = jax.lax.scan(
+        sweep, (LocalState(mu0, theta0), phi0, ptot0), None, length=sweeps
+    )
+    return local, phi, ptot, lls
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sweeps", "num_blocks"))
+def iem_fit(
+    batch: MinibatchData, mu0: jax.Array, cfg: LDAConfig, sweeps: int,
+    num_blocks: int = 0,
+) -> Tuple[LocalState, jax.Array, jax.Array, jax.Array]:
+    """Run ``sweeps`` blocked-IEM iterations on one (small) corpus."""
+    theta0 = fold_theta(mu0, batch.counts)
+    phi0, ptot0 = fold_phi(mu0, batch.counts, batch.word_ids, cfg.W)
+    nb = num_blocks or cfg.iem_blocks
+
+    def sweep(carry, _):
+        local, phi_wk, phi_k = carry
+        new_local, d_wk, d_k = blocked_iem_sweep(
+            batch, local, phi_wk, phi_k, cfg, num_blocks=nb
+        )
+        phi_wk = phi_wk + d_wk
+        phi_k = phi_k + d_k
+        ll = map_log_likelihood(batch, new_local.theta_dk, phi_wk, phi_k, cfg)
+        return (new_local, phi_wk, phi_k), ll
+
+    (local, phi, ptot), lls = jax.lax.scan(
+        sweep, (LocalState(mu0, theta0), phi0, ptot0), None, length=sweeps
+    )
+    return local, phi, ptot, lls
+
+
+# ---------------------------------------------------------------------------
+# Likelihood / perplexity helpers (training-side; predictive is in perplexity.py)
+# ---------------------------------------------------------------------------
+
+def normalize_theta(theta_dk: jax.Array, cfg: LDAConfig) -> jax.Array:
+    """eq. (9): θ_d(k) = (θ̂+α−1) / (Σ_k θ̂ + K(α−1))."""
+    num = theta_dk + cfg.alpha_m1
+    den = theta_dk.sum(-1, keepdims=True) + cfg.K * cfg.alpha_m1
+    return num / jnp.maximum(den, 1e-30)
+
+
+def normalize_phi(phi_wk: jax.Array, phi_k: jax.Array, cfg: LDAConfig) -> jax.Array:
+    """eq. (10): φ_w(k) = (φ̂+β−1) / (φ̂(k) + W(β−1)) — vocab-major (W, K)."""
+    num = phi_wk + cfg.beta_m1
+    den = phi_k + cfg.W * cfg.beta_m1
+    return num / jnp.maximum(den, 1e-30)[None, :]
+
+
+def map_log_likelihood(
+    batch: MinibatchData,
+    theta_dk: jax.Array,
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    cfg: LDAConfig,
+) -> jax.Array:
+    """Word log-likelihood  Σ x log Σ_k θ_d(k) φ_w(k)  (eq. 3's data term)."""
+    theta = normalize_theta(theta_dk, cfg)                     # (D, K)
+    phi = normalize_phi(phi_wk, phi_k, cfg)                    # (W, K)
+    rows = gather_phi_rows(phi, batch.word_ids)                # (D, L, K)
+    lik = jnp.einsum("dlk,dk->dl", rows, theta)                # (D, L)
+    lik = jnp.maximum(lik, 1e-30)
+    return (batch.counts * jnp.log(lik)).sum()
+
+
+def training_perplexity(
+    batch: MinibatchData,
+    theta_dk: jax.Array,
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    cfg: LDAConfig,
+) -> jax.Array:
+    """exp(−loglik / ntokens) on the training minibatch (inner-loop stop rule)."""
+    ll = map_log_likelihood(batch, theta_dk, phi_wk, phi_k, cfg)
+    return jnp.exp(-ll / jnp.maximum(batch.counts.sum(), 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Exact serial IEM oracle (paper Fig. 2) — NumPy, tests only
+# ---------------------------------------------------------------------------
+
+def iem_exact_numpy(
+    word_ids: np.ndarray,   # (D, L) int
+    counts: np.ndarray,     # (D, L) float
+    mu0: np.ndarray,        # (D, L, K)
+    cfg: LDAConfig,
+    sweeps: int,
+    order: str = "row",     # deterministic sweep order (paper uses random)
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reference serial IEM: per-non-zero E/M alternation with self-exclusion.
+
+    Deterministic order so tests can compare against blocked_iem_sweep with
+    B == L (which visits token-columns left-to-right, all docs in parallel —
+    equal to serial order when each doc's tokens touch disjoint words).
+    """
+    D, L = word_ids.shape
+    K = cfg.K
+    mu = mu0.copy().astype(np.float64)
+    theta = np.einsum("dlk,dl->dk", mu, counts)
+    phi = np.zeros((cfg.W, K))
+    for d in range(D):
+        for l in range(L):
+            phi[word_ids[d, l]] += counts[d, l] * mu[d, l]
+    ptot = phi.sum(0)
+
+    for _ in range(sweeps):
+        for l in range(L):          # column-major order to mirror blocked form
+            for d in range(D):
+                c = counts[d, l]
+                if c == 0.0:
+                    continue
+                w = word_ids[d, l]
+                old = c * mu[d, l]
+                th = np.maximum(theta[d] - old, 0.0)
+                ph = np.maximum(phi[w] - old, 0.0)
+                pt = ptot - old
+                num = (th + cfg.alpha_m1) * (ph + cfg.beta_m1) / (
+                    pt + cfg.W * cfg.beta_m1
+                )
+                mu_new = num / max(num.sum(), 1e-30)
+                new = c * mu_new
+                theta[d] += new - old
+                phi[w] += new - old
+                ptot += new - old
+                mu[d, l] = mu_new
+    return mu, theta, phi

@@ -1,0 +1,75 @@
+"""Predictive perplexity — paper §2.4, eq. (21).
+
+Protocol (faithful to the paper):
+  1. estimate φ̂ on the training stream;
+  2. per held-out document, split word *tokens* 80/20;
+  3. fixing φ̂, fit θ̂ on the 80% part (fixed-φ EM iterations);
+  4. P = exp(− Σ x^{20%} log Σ_k θ_d(k) φ_w(k) / Σ x^{20%}).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import em
+from repro.core.types import LDAConfig, MinibatchData, uniform_responsibilities
+
+
+def split_heldout_counts(
+    counts: np.ndarray, rng: np.random.Generator, frac: float = 0.8
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Split integer token counts (D, L) into (estimate, evaluate) parts.
+
+    Each of the x_{w,d} tokens lands in the 80% part with prob ``frac``
+    (binomial thinning) — the paper's random token partition.
+    """
+    est = rng.binomial(counts.astype(np.int64), frac).astype(counts.dtype)
+    return est, counts - est
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fit_sweeps"))
+def fit_theta_fixed_phi(
+    key: jax.Array,
+    batch: MinibatchData,
+    phi_norm_rows: jax.Array,   # (D, L, K) normalized φ gathered at tokens
+    cfg: LDAConfig,
+    fit_sweeps: int = 50,
+) -> jax.Array:
+    """Fixed-φ EM for θ̂ on the estimation split. Returns θ̂ (D, K)."""
+    D, L = batch.word_ids.shape
+    mu = uniform_responsibilities(key, (D, L, cfg.K), cfg.dtype)
+    theta = em.fold_theta(mu, batch.counts)
+
+    def sweep(theta, _):
+        th = em.normalize_theta(theta, cfg)                       # (D, K)
+        num = th[:, None, :] * phi_norm_rows                      # (D, L, K)
+        mu = num / jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
+        return em.fold_theta(mu, batch.counts), None
+
+    theta, _ = jax.lax.scan(sweep, theta, None, length=fit_sweeps)
+    return theta
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fit_sweeps"))
+def predictive_perplexity(
+    key: jax.Array,
+    est: MinibatchData,        # 80% split
+    ev: MinibatchData,         # 20% split (same docs / word layout)
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    cfg: LDAConfig,
+    fit_sweeps: int = 50,
+) -> jax.Array:
+    """eq. (21) on the evaluation split."""
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)               # (W, K)
+    est_rows = em.gather_phi_rows(phi_norm, est.word_ids)
+    theta = fit_theta_fixed_phi(key, est, est_rows, cfg, fit_sweeps)
+    theta_n = em.normalize_theta(theta, cfg)
+    ev_rows = em.gather_phi_rows(phi_norm, ev.word_ids)
+    lik = jnp.maximum(jnp.einsum("dlk,dk->dl", ev_rows, theta_n), 1e-30)
+    ll = (ev.counts * jnp.log(lik)).sum()
+    return jnp.exp(-ll / jnp.maximum(ev.counts.sum(), 1.0))

@@ -1,0 +1,140 @@
+"""Residual-based dynamic scheduling — paper §3.1 (eqs. 34-38).
+
+The paper keeps, per vocabulary word w, accumulated responsibility residuals
+    r_w(k) = Σ_d x_{w,d} |μ^t_{w,d}(k) − μ^{t−1}_{w,d}(k)|      (eq. 36)
+    r_w    = Σ_k r_w(k)                                          (eq. 37)
+and each inner sweep updates only the λ_k·K topics with the largest r_w(k)
+(per word) and the λ_w·W_s words with the largest r_w.  Inactive entries keep
+their previous residual estimate (priority-queue semantics); active entries
+are *replaced* with the freshly measured residual.
+
+TPU adaptation: the insertion/partial sort becomes ``jax.lax.top_k`` over the
+(W_s, K) residual matrix — one partial sort per sweep,
+O(W_s · K log K) as in the paper's complexity accounting.  The per-token
+active set is the token's *word's* active set, gathered by word id.
+
+The partial renormalisation (eq. 38) preserves the inactive topics' mass:
+    μ̂^t(k) = μ^t(k) / Σ_{k∈A} μ^t(k) · Σ_{k∈A} μ̂^{t−1}(k),  k ∈ A.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LDAConfig, SchedulerState
+
+
+def init_scheduler(num_words: int, cfg: LDAConfig) -> SchedulerState:
+    """Fresh residual state; +inf-like init so every entry is visited once."""
+    big = jnp.full((num_words, cfg.K), jnp.finfo(cfg.dtype).max / 4, cfg.dtype)
+    return SchedulerState(r_wk=big, r_w=big.sum(-1))
+
+
+def select_active_topics(
+    sched: SchedulerState, active_topics: int, topk_shards: int = 0
+) -> jax.Array:
+    """Top-λ_kK topic ids per vocabulary word: (W_s, K) -> (W_s, A) int32.
+
+    ``topk_shards > 0`` selects A/topk_shards winners within each contiguous
+    K/topk_shards topic group instead of a global top-A.  When the groups
+    align with the mesh's model-axis sharding of the topic dimension, the
+    partial sort becomes shard-local — no all-gather of the (W_s, K)
+    residual matrix (the §Perf lever for the K-sharded LDA step).  The
+    union is still a valid size-A active set; per-group balance only
+    re-orders WHICH near-top entries are refreshed first (priority-queue
+    semantics are preserved since untouched residuals persist).
+    """
+    K = sched.r_wk.shape[1]
+    if topk_shards and topk_shards > 1:
+        assert K % topk_shards == 0 and active_topics % topk_shards == 0, (
+            K, active_topics, topk_shards,
+        )
+        g = K // topk_shards
+        a = active_topics // topk_shards
+        r = sched.r_wk.reshape(-1, topk_shards, g)
+        _, idx = jax.lax.top_k(r, a)                     # local per group
+        offs = (jnp.arange(topk_shards) * g)[None, :, None]
+        return (idx + offs).reshape(-1, active_topics).astype(jnp.int32)
+    _, idx = jax.lax.top_k(sched.r_wk, active_topics)
+    return idx.astype(jnp.int32)
+
+
+def select_active_words_threshold(
+    sched: SchedulerState, frac: float
+) -> jax.Array:
+    """Residual threshold t such that ~frac·W_s words satisfy r_w >= t.
+
+    Returned as a scalar; tokens are masked by ``r_w[word_id] >= t``.  With
+    frac == 1.0 the threshold is -inf (all words active).
+    """
+    if frac >= 1.0:
+        return jnp.array(-jnp.inf, sched.r_w.dtype)
+    n = sched.r_w.shape[0]
+    k = max(1, int(round(frac * n)))
+    vals, _ = jax.lax.top_k(sched.r_w, k)
+    return vals[-1]
+
+
+def sparse_estep_renorm(
+    mu_active_new: jax.Array,   # (D, L, A) unnormalised responsibilities on A
+    mu_prev_active: jax.Array,  # (D, L, A) previous *normalised* μ on A
+) -> jax.Array:
+    """eq. (38): renormalise over the active set, preserving inactive mass."""
+    prev_mass = mu_prev_active.sum(-1, keepdims=True)
+    new_sum = jnp.maximum(mu_active_new.sum(-1, keepdims=True), 1e-30)
+    return mu_active_new / new_sum * prev_mass
+
+
+def update_residuals(
+    sched: SchedulerState,
+    delta_r_wk: jax.Array,      # (W_s, K) freshly measured Σ_d x|Δμ| (active-only rows/cols non-zero)
+    touched_wk: jax.Array,      # (W_s, K) bool — True where the entry was updated this sweep
+) -> SchedulerState:
+    """Replace residuals for touched entries, keep estimates elsewhere."""
+    r_wk = jnp.where(touched_wk, delta_r_wk, sched.r_wk)
+    return SchedulerState(r_wk=r_wk, r_w=r_wk.sum(-1))
+
+
+def scatter_residuals(
+    abs_delta: jax.Array,   # (D, L, A) x|Δμ| per token over its active topics
+    word_ids: jax.Array,    # (D, L)
+    topic_ids: jax.Array,   # (D, L, A) the active topic ids per token
+    num_words: int,
+    num_topics: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Accumulate eq. (36) residuals into (W_s, K); also return touched mask.
+
+    Implemented as a single segment-sum over the flattened (word, topic) pair
+    index — one scatter, matching the 'negligible cost' claim in §3.1.
+    """
+    D, L, A = abs_delta.shape
+    # 2-D scatter (never flatten the (word, topic) pair: W·K overflows int32
+    # in the big-model regime, paper §1 task 2)
+    widx = jnp.broadcast_to(word_ids[..., None], topic_ids.shape)
+    summed = jnp.zeros((num_words, num_topics), abs_delta.dtype).at[
+        widx, topic_ids
+    ].add(abs_delta)
+    touched = jnp.zeros((num_words, num_topics), jnp.bool_).at[
+        widx, topic_ids
+    ].set(True)
+    return summed, touched
+
+
+def full_sweep_residuals(
+    mu_new: jax.Array,      # (D, L, K)
+    mu_old: jax.Array,      # (D, L, K)
+    counts: jax.Array,      # (D, L)
+    word_ids: jax.Array,    # (D, L)
+    num_words: int,
+) -> SchedulerState:
+    """Residual init after a full (unscheduled) sweep — paper Fig. 4 ('In the
+    first iteration FOEM ... scans the entire non-zero elements and topics,
+    which also initializes and updates the residual matrices')."""
+    d = counts[..., None] * jnp.abs(mu_new - mu_old)          # (D, L, K)
+    D, L, K = d.shape
+    r_wk = jax.ops.segment_sum(
+        d.reshape(D * L, K), word_ids.reshape(D * L), num_segments=num_words
+    )
+    return SchedulerState(r_wk=r_wk, r_w=r_wk.sum(-1))

@@ -1,0 +1,194 @@
+"""Parameter streaming — paper §3.2: the 'big model' tier.
+
+The global topic-word matrix φ̂_{W×K} lives in *external storage* (here a
+memory-mapped file standing in for the paper's HDF5 store); only
+
+  * the rows of the current minibatch's vocabulary W_s, and
+  * a hot-word LRU buffer of ``W*`` rows ("Replace most frequent vocabulary
+    word-topic parameter matrix ... in buffer memory", Fig. 4 line 2)
+
+are resident.  Rows are read/written once per minibatch (vocab-major layout).
+Because the canonical state is externalised, training is fault tolerant by
+construction: a crash loses at most the current minibatch (§3.2 "Fault
+tolerance is also assured because the global topic-word matrix is stored in
+hard disk for restarting the online learning").
+
+At pod scale the same role is played by sharding φ̂ over the ``model`` mesh
+axis (see ``parallel/sharding.py``); this module is the single-host tier and
+the checkpoint substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """I/O accounting used by the Table-5 benchmark."""
+
+    disk_reads: int = 0      # rows read from the backing store
+    disk_writes: int = 0     # rows written to the backing store
+    buffer_hits: int = 0     # rows served from the hot buffer
+    evictions: int = 0
+
+    def reset(self) -> None:
+        self.disk_reads = self.disk_writes = 0
+        self.buffer_hits = self.evictions = 0
+
+
+class ParameterStore:
+    """Disk-backed φ̂_{W×K} with a write-back LRU hot-word buffer.
+
+    Parameters
+    ----------
+    path:            directory for the backing file + manifest.
+    num_topics:      K.
+    vocab_capacity:  pre-allocated W capacity (the paper's W←W+1 growth is
+                     realised as a high-watermark within this capacity; the
+                     file is extended in chunks when exceeded).
+    buffer_rows:     W* — max rows resident in the hot buffer (0 = unbuffered,
+                     every access hits the backing store: Table 5's 0.0GB row).
+    """
+
+    MANIFEST = "store.json"
+    BACKING = "phi_wk.mmap"
+
+    def __init__(
+        self,
+        path: str,
+        num_topics: int,
+        vocab_capacity: int,
+        buffer_rows: int = 0,
+        dtype=np.float32,
+    ):
+        self.path = path
+        self.K = int(num_topics)
+        self.capacity = int(vocab_capacity)
+        self.buffer_rows = int(buffer_rows)
+        self.dtype = np.dtype(dtype)
+        self.live_vocab = 0                      # W high-watermark
+        self.phi_k = np.zeros((self.K,), np.float64)  # topic totals (small, RAM)
+        self.step = 0                            # minibatch cursor (restart point)
+        self.stats = StoreStats()
+        self._buffer: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._dirty: Dict[int, bool] = {}
+        os.makedirs(path, exist_ok=True)
+        backing = os.path.join(path, self.BACKING)
+        mode = "r+" if os.path.exists(backing) else "w+"
+        self._mm = np.memmap(
+            backing, dtype=self.dtype, mode=mode, shape=(self.capacity, self.K)
+        )
+        if mode == "r+":
+            self._load_manifest()
+
+    # ------------------------------------------------------------------ I/O
+
+    def fetch_rows(self, word_ids: np.ndarray) -> np.ndarray:
+        """Read φ̂ rows for a minibatch's (unique) vocabulary — one read each."""
+        out = np.empty((len(word_ids), self.K), self.dtype)
+        for i, w in enumerate(word_ids):
+            w = int(w)
+            row = self._buffer.get(w)
+            if row is not None:
+                self._buffer.move_to_end(w)
+                self.stats.buffer_hits += 1
+                out[i] = row
+            else:
+                out[i] = self._mm[w]
+                self.stats.disk_reads += 1
+        return out
+
+    def write_rows(self, word_ids: np.ndarray, rows: np.ndarray) -> None:
+        """Write updated rows back — buffered words stay dirty until eviction."""
+        for i, w in enumerate(word_ids):
+            w = int(w)
+            if self.buffer_rows > 0:
+                self._buffer[w] = np.asarray(rows[i], self.dtype)
+                self._buffer.move_to_end(w)
+                self._dirty[w] = True
+                if len(self._buffer) > self.buffer_rows:
+                    self._evict_one()
+            else:
+                self._mm[w] = rows[i]
+                self.stats.disk_writes += 1
+
+    def _evict_one(self) -> None:
+        w, row = self._buffer.popitem(last=False)
+        if self._dirty.pop(w, False):
+            self._mm[w] = row
+            self.stats.disk_writes += 1
+        self.stats.evictions += 1
+
+    # -------------------------------------------------------------- vocab
+
+    def ensure_vocab(self, max_word_id: int) -> None:
+        """Watermark growth: the paper's W ← W + 1 on unseen words."""
+        if max_word_id >= self.capacity:
+            raise ValueError(
+                f"word id {max_word_id} exceeds store capacity {self.capacity}; "
+                "grow capacity at construction (static allocation for XLA)"
+            )
+        self.live_vocab = max(self.live_vocab, max_word_id + 1)
+
+    # ---------------------------------------------------------- persistence
+
+    def flush(self) -> None:
+        """Write back all dirty buffer rows + memmap + manifest (fsync'd)."""
+        for w, row in self._buffer.items():
+            if self._dirty.get(w, False):
+                self._mm[w] = row
+                self.stats.disk_writes += 1
+                self._dirty[w] = False
+        self._mm.flush()
+        self._save_manifest()
+
+    def _manifest_path(self) -> str:
+        return os.path.join(self.path, self.MANIFEST)
+
+    def _save_manifest(self) -> None:
+        tmp = self._manifest_path() + ".tmp"
+        payload = {
+            "K": self.K,
+            "capacity": self.capacity,
+            "live_vocab": self.live_vocab,
+            "step": self.step,
+            "phi_k": self.phi_k.tolist(),
+            "dtype": self.dtype.name,
+        }
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._manifest_path())   # atomic rename
+
+    def _load_manifest(self) -> None:
+        p = self._manifest_path()
+        if not os.path.exists(p):
+            return
+        with open(p) as f:
+            payload = json.load(f)
+        assert payload["K"] == self.K, "topic count mismatch on restart"
+        self.live_vocab = payload["live_vocab"]
+        self.step = payload["step"]
+        self.phi_k = np.asarray(payload["phi_k"], np.float64)
+
+    # ------------------------------------------------------------- helpers
+
+    def dense_phi(self) -> np.ndarray:
+        """Materialise the live (W, K) matrix (tests / small corpora only)."""
+        self.flush()
+        return np.asarray(self._mm[: max(self.live_vocab, 1)])
+
+    def buffer_bytes(self) -> int:
+        return len(self._buffer) * self.K * self.dtype.itemsize
+
+    @staticmethod
+    def rows_for_bytes(num_topics: int, nbytes: float, dtype=np.float32) -> int:
+        """Translate a Table-5 style buffer size in bytes into W* rows."""
+        return int(nbytes // (num_topics * np.dtype(dtype).itemsize))

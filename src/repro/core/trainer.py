@@ -1,0 +1,164 @@
+"""FOEMTrainer — the single-host lifelong-learning runtime (paper Fig. 4 + §3.2).
+
+Per minibatch:
+  1. vocab-major reorganisation (``localize_vocab``) → W_s unique words;
+  2. fetch exactly those φ̂ rows from the ParameterStore (disk/host tier,
+     LRU-buffered) — parameter streaming;
+  3. run the jitted FOEM inner loop on the (W_s, K) local view;
+  4. write the updated rows back, update the (K,) topic totals, advance the
+     stream cursor, optionally checkpoint (fault-tolerant restart point).
+
+The device never holds more than O(K·(D_s + NNZ_s + W_s)) — the paper's
+space bound with W* = buffer_rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import em, foem, sem
+from repro.core.streaming import ParameterStore
+from repro.core.types import GlobalStats, LDAConfig, MinibatchData
+from repro.sparse.minibatch import Minibatch, MinibatchStream
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    step: int
+    sweeps: int
+    train_ppl: float
+    seconds: float
+    disk_reads: int
+    disk_writes: int
+    buffer_hits: int
+
+
+class FOEMTrainer:
+    """Streaming FOEM with disk-backed parameters (the paper's full system)."""
+
+    def __init__(
+        self,
+        cfg: LDAConfig,
+        store: ParameterStore,
+        *,
+        seed: int = 0,
+        checkpoint_every: int = 0,
+        algorithm: str = "foem",   # "foem" | "sem"
+    ):
+        if store.K != cfg.K:
+            raise ValueError("store/config topic count mismatch")
+        self.cfg = cfg
+        self.store = store
+        self.key = jax.random.PRNGKey(seed)
+        self.checkpoint_every = checkpoint_every
+        self.algorithm = algorithm
+        self.history: List[StepMetrics] = []
+        # jit cache keyed by (D_s, L, W_s-padded) static shapes
+        self._jit_cache: Dict = {}
+
+    # ------------------------------------------------------------------
+
+    def _local_step_fn(self, algorithm: str):
+        cfg = self.cfg
+
+        if algorithm == "foem":
+            def run(key, batch, phi_rows, phi_k, live_w):
+                res = foem.foem_minibatch(
+                    key, batch, phi_rows, phi_k, cfg, vocab_size=live_w
+                )
+                return res.phi_wk, res.phi_k, res.diag.sweeps_run, res.diag.final_train_ppl
+        elif algorithm == "sem":
+            def run(key, batch, phi_rows, phi_k, live_w):
+                stats = GlobalStats(phi_wk=phi_rows, phi_k=phi_k, step=jnp.int32(0))
+                new_stats, local, diag = sem.sem_step(key, batch, stats, cfg)
+                return (
+                    new_stats.phi_wk,
+                    new_stats.phi_k,
+                    diag.sweeps_run,
+                    diag.final_train_ppl,
+                )
+        else:
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        return jax.jit(run)
+
+    def _get_step_fn(self, shapes):
+        key = (self.algorithm, shapes)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = self._local_step_fn(self.algorithm)
+            self._jit_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+
+    def step(self, mb: Minibatch) -> StepMetrics:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        self.store.stats.reset()
+        self.store.ensure_vocab(int(mb.local_vocab.max(initial=0)))
+
+        # --- parameter streaming: fetch exactly W_s rows ---
+        phi_rows = self.store.fetch_rows(mb.local_vocab)           # (W_s, K)
+        phi_k = self.store.phi_k.astype(np.float32)                # (K,)
+
+        batch = MinibatchData(
+            word_ids=jnp.asarray(mb.local_word_ids),
+            counts=jnp.asarray(mb.counts),
+        )
+        self.key, sub = jax.random.split(self.key)
+        step_fn = self._get_step_fn(
+            (batch.word_ids.shape, phi_rows.shape)
+        )
+        live_w = max(self.store.live_vocab, self.cfg.W)
+        new_rows, new_phi_k, sweeps, ppl = step_fn(
+            sub, batch, jnp.asarray(phi_rows), jnp.asarray(phi_k), live_w
+        )
+        new_rows = np.asarray(new_rows)
+        new_phi_k = np.asarray(new_phi_k, np.float64)
+
+        # --- write back + advance cursor ---
+        self.store.write_rows(mb.local_vocab, new_rows)
+        self.store.phi_k = new_phi_k
+        self.store.step += 1
+        if self.checkpoint_every and self.store.step % self.checkpoint_every == 0:
+            self.store.flush()
+
+        m = StepMetrics(
+            step=self.store.step,
+            sweeps=int(sweeps),
+            train_ppl=float(ppl),
+            seconds=time.perf_counter() - t0,
+            disk_reads=self.store.stats.disk_reads,
+            disk_writes=self.store.stats.disk_writes,
+            buffer_hits=self.store.stats.buffer_hits,
+        )
+        self.history.append(m)
+        return m
+
+    def fit_stream(
+        self,
+        stream: Iterator[Minibatch],
+        max_steps: Optional[int] = None,
+        callback: Optional[Callable[[StepMetrics], None]] = None,
+    ) -> List[StepMetrics]:
+        out = []
+        for mb in stream:
+            if max_steps is not None and len(out) >= max_steps:
+                break
+            m = self.step(mb)
+            out.append(m)
+            if callback:
+                callback(m)
+        self.store.flush()
+        return out
+
+    # ------------------------------------------------------------------
+
+    def resume_step(self) -> int:
+        """Restart point: minibatches already consumed (fault tolerance)."""
+        return self.store.step

@@ -1,0 +1,130 @@
+"""Core typed containers for the LDA / FOEM library.
+
+Layout conventions (vocab-major, matching the paper's streaming layout):
+  * ``phi_wk``  — (W, K) expected sufficient statistics  φ̂_w(k)  (topic-word).
+  * ``phi_k``   — (K,)   topic totals                    φ̂(k) = Σ_w φ̂_w(k).
+  * ``theta_dk``— (D, K) document sufficient statistics  θ̂_d(k).
+  * ``mu``      — (D, L, K) responsibilities over the bucketed minibatch.
+
+A minibatch is a *bucketed dense ragged* view of the sparse doc-word matrix:
+``word_ids``/``counts`` of shape (D_s, L) where L is the bucket's max number of
+distinct words per document; padding slots carry ``counts == 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    """Hyperparameters of the (smoothed, symmetric) LDA model under MAP-EM.
+
+    The paper's EM convention: the Dirichlet pseudo-counts enter as
+    ``alpha - 1`` / ``beta - 1`` (paper §4: "In the EM framework, the
+    hyperparameters α − 1 = β − 1 = 0.01"). We store those offsets directly.
+    """
+
+    num_topics: int
+    vocab_size: int
+    alpha_m1: float = 0.01     # α − 1
+    beta_m1: float = 0.01      # β − 1
+    # --- inner-loop (per-minibatch) convergence ---
+    max_sweeps: int = 32       # hard cap on E/M sweeps per minibatch
+    ppl_check_every: int = 10  # paper: "calculate the training perplexity every 10 iterations"
+    ppl_rel_tol: float = 0.005  # relative ΔP/P stop (paper's ΔP=10 at ppl≈2k)
+    # --- blocked-IEM granularity (TPU adaptation; 1 block == BEM sweep) ---
+    iem_blocks: int = 4
+    # --- dynamic scheduling (FOEM §3.1) ---
+    active_topics: int = 0     # λ_k·K; 0 disables scheduling (== full IEM)
+    active_words_frac: float = 1.0  # λ_w
+    warmup_sweeps: int = 2     # full sweeps before scheduling kicks in
+                               # (paper Fig. 4 does 1; 2 gives informative
+                               # residuals instead of round-robin rotation)
+    topk_shards: int = 0       # >0: shard-local residual top-k (see
+                               # scheduling.select_active_topics; §Perf lever)
+    dp_fold: str = "sweep"     # sharded FOEM: fold Δφ̂ over data per "sweep"
+                               # or once per "minibatch" (bounded staleness)
+    # --- stepwise learning-rate (SEM §2.2, eq. 18) ---
+    tau0: float = 1.0
+    kappa: float = 0.9
+    rho_mode: str = "accumulate"  # "accumulate" (FOEM eq. 33) | "stepwise" (SEM eq. 20)
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.num_topics <= 0 or self.vocab_size <= 0:
+            raise ValueError("num_topics and vocab_size must be positive")
+        if self.active_topics > self.num_topics:
+            raise ValueError("active_topics (λ_k·K) cannot exceed K")
+        if not (0.0 < self.active_words_frac <= 1.0):
+            raise ValueError("active_words_frac (λ_w) must be in (0, 1]")
+        if self.rho_mode not in ("accumulate", "stepwise"):
+            raise ValueError(f"unknown rho_mode {self.rho_mode!r}")
+
+    @property
+    def K(self) -> int:
+        return self.num_topics
+
+    @property
+    def W(self) -> int:
+        return self.vocab_size
+
+
+class GlobalStats(NamedTuple):
+    """Global (stream-lifetime) sufficient statistics — the 'big model'."""
+
+    phi_wk: jax.Array   # (W, K) φ̂_w(k)
+    phi_k: jax.Array    # (K,)   φ̂(k)
+    step: jax.Array     # () int32 — minibatch counter s
+
+    @classmethod
+    def zeros(cls, cfg: LDAConfig) -> "GlobalStats":
+        return cls(
+            phi_wk=jnp.zeros((cfg.W, cfg.K), cfg.dtype),
+            phi_k=jnp.zeros((cfg.K,), cfg.dtype),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+
+class MinibatchData(NamedTuple):
+    """One bucketed minibatch of the sparse doc-word stream."""
+
+    word_ids: jax.Array  # (D_s, L) int32, padding == 0
+    counts: jax.Array    # (D_s, L) float32, padding == 0.0
+
+    @property
+    def num_docs(self) -> int:
+        return self.word_ids.shape[0]
+
+    @property
+    def bucket_len(self) -> int:
+        return self.word_ids.shape[1]
+
+    def ntokens(self) -> jax.Array:
+        return self.counts.sum()
+
+
+class LocalState(NamedTuple):
+    """Per-minibatch local state (freed after one look, paper Fig. 3 line 11)."""
+
+    mu: jax.Array        # (D_s, L, K) responsibilities
+    theta_dk: jax.Array  # (D_s, K)    θ̂_d(k)
+
+
+class SchedulerState(NamedTuple):
+    """Residual state for dynamic scheduling (paper §3.1, eqs. 35-37)."""
+
+    r_wk: jax.Array  # (W_s|W, K) residual per (vocab word, topic), eq. 36
+    r_w: jax.Array   # (W_s|W,)   residual per vocab word,          eq. 37
+
+
+def uniform_responsibilities(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """Random-normalized init of μ (paper: 'start from random initializations')."""
+    g = jax.random.uniform(key, shape, dtype=dtype, minval=0.5, maxval=1.5)
+    return g / g.sum(-1, keepdims=True)
+
+
+Optional  # re-export guard (kept for typing users)

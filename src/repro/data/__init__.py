@@ -1,0 +1,3 @@
+from repro.data.synthetic import synthetic_lda_corpus, synthetic_token_stream
+
+__all__ = ["synthetic_lda_corpus", "synthetic_token_stream"]

@@ -1,0 +1,79 @@
+"""Synthetic corpora with controllable statistics.
+
+* ``synthetic_lda_corpus`` — documents drawn from a ground-truth LDA model
+  (Dirichlet topics over a Zipf-shaped vocabulary).  Used by the paper-claim
+  benchmarks: we know the true K and can sweep D/W/NNZ to mirror the four
+  UCI corpora's statistics at CPU-scale.
+* ``synthetic_token_stream`` — packed next-token-prediction batches for the
+  LM architectures' smoke tests and the example LM trainer.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.sparse.docword import DocWordMatrix
+
+
+def synthetic_lda_corpus(
+    num_docs: int,
+    vocab_size: int,
+    num_topics: int,
+    *,
+    mean_doc_len: int = 64,
+    alpha: float = 0.1,
+    beta: float = 0.02,
+    seed: int = 0,
+    zipf_s: float = 1.05,
+) -> Tuple[DocWordMatrix, np.ndarray]:
+    """Draw a corpus from LDA's generative process.
+
+    Topic-word distributions are Dirichlet(β) modulated by a Zipf envelope so
+    word frequencies look like real text.  Returns (corpus, true_phi (W, K)).
+    """
+    rng = np.random.default_rng(seed)
+    zipf = 1.0 / np.arange(1, vocab_size + 1) ** zipf_s
+    phi = rng.dirichlet(np.full(vocab_size, beta) + 1e-6, size=num_topics)
+    phi = phi * zipf[None, :]
+    phi = phi / phi.sum(axis=1, keepdims=True)          # (K, W)
+
+    indptr = [0]
+    wids, cnts = [], []
+    doc_lens = rng.poisson(mean_doc_len, size=num_docs).clip(min=4)
+    for d in range(num_docs):
+        theta = rng.dirichlet(np.full(num_topics, alpha))
+        z_counts = rng.multinomial(doc_lens[d], theta)   # tokens per topic
+        bag = np.zeros(vocab_size, np.int64)
+        for k in np.nonzero(z_counts)[0]:
+            bag += rng.multinomial(z_counts[k], phi[k])
+        nz = np.nonzero(bag)[0]
+        wids.append(nz.astype(np.int32))
+        cnts.append(bag[nz].astype(np.float32))
+        indptr.append(indptr[-1] + len(nz))
+    corpus = DocWordMatrix(
+        indptr=np.asarray(indptr, np.int64),
+        word_ids=np.concatenate(wids),
+        counts=np.concatenate(cnts),
+        vocab_size=vocab_size,
+    )
+    return corpus, phi.T.copy()                          # vocab-major (W, K)
+
+
+def synthetic_token_stream(
+    batch: int,
+    seq_len: int,
+    vocab_size: int,
+    *,
+    seed: int = 0,
+) -> Iterator[dict]:
+    """Endless stream of ``{"tokens", "labels"}`` int32 batches (Zipf draws)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab_size + 1)
+    p = 1.0 / ranks**1.1
+    p /= p.sum()
+    while True:
+        toks = rng.choice(vocab_size, size=(batch, seq_len + 1), p=p).astype(
+            np.int32
+        )
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

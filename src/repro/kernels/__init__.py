@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+* ``foem_estep``      — fused dense E-step tile (the paper's hot loop)
+* ``topk_estep``      — dynamic-scheduling sparse E-step (eq. 38)
+* ``flash_attention`` — blockwise online-softmax attention (GQA + SWA) for
+                        the assigned LM architectures
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a dispatching wrapper in
+``ops.py``; tests validate kernels in ``interpret=True`` mode on CPU.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

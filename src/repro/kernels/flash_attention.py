@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: flash attention (prefill) with GQA + sliding window.
+
+Standard blockwise online-softmax attention, adapted to the TPU memory
+hierarchy: the (BQ, d) query tile and (BK, d) key/value tiles live in VMEM;
+running max/denominator/accumulator persist in VMEM scratch across the kv
+grid axis (the innermost, "arbitrary"-semantics dimension).  MXU does the
+two matmuls per tile; BQ/BK default to 128 to match the systolic array.
+
+GQA is handled in the index map: query head h reads kv head h // group —
+no kv replication in HBM.  A sliding window (h2o-danube) or causal mask
+turns into a *grid skip*: fully-masked kv tiles are never visited because
+the kv grid index map clamps to the visible band, and partially-masked
+tiles apply the positional mask in-register.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, bq: int, bk: int,
+    seq_kv: int, q_offset: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                       # (BQ, d)
+    k = k_ref[0]                       # (BK, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                          # (BQ, BK)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < seq_kv               # kv padding
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                # (BQ, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + p.sum(-1, keepdims=True)
+    acc = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(kj == nkv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "block_q", "block_k", "q_offset",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,            # (BHq, Sq, d)
+    k: jax.Array,            # (BHkv, Sk, d)
+    v: jax.Array,            # (BHkv, Sk, d)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, d = q.shape
+    BHkv, Sk, _ = k.shape
+    assert BH % BHkv == 0, "query heads must be a multiple of kv heads"
+    group = BH // BHkv
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad sequences to block multiples (masked out inside the kernel)
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // bq
+    nk = (Sk + pk) // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, seq_kv=Sk, q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pq, d), q.dtype),
+        scratch_shapes=[
+            # VMEM scratch: accumulator + online-softmax carries
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

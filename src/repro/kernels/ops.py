@@ -1,0 +1,96 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+On TPU backends the Pallas kernels are compiled natively; elsewhere the
+caller chooses between ``interpret=True`` (kernel-body semantics, used by the
+correctness tests) and the pure-jnp reference (fast on CPU, used by the
+models and the dry-run, whose lowering must stay backend-portable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.foem_estep import fused_estep_pallas
+from repro.kernels.topk_estep import topk_estep_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+
+def fused_estep(
+    theta_rows: jax.Array,
+    phi_rows: jax.Array,
+    phi_tot: jax.Array,
+    exclude: Optional[jax.Array],
+    mu_old: jax.Array,
+    counts: jax.Array,
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused FOEM E-step: (mu_new, residual)."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return fused_estep_pallas(
+            theta_rows, phi_rows, phi_tot, exclude, mu_old, counts,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+            use_exclude=exclude is not None, interpret=interpret,
+        )
+    return ref.fused_estep_ref(
+        theta_rows, phi_rows, phi_tot, exclude, mu_old, counts,
+        alpha_m1, beta_m1, wb,
+    )
+
+
+def topk_estep(
+    theta_a, phi_a, ptot_a, mu_prev_a, counts, active,
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+):
+    """Scheduled sparse E-step on active topics: (mu_new_a, delta)."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return topk_estep_pallas(
+            theta_a, phi_a, ptot_a, mu_prev_a, counts, active,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, interpret=interpret,
+        )
+    return ref.topk_estep_ref(
+        theta_a, phi_a, ptot_a, mu_prev_a, counts, active,
+        alpha_m1, beta_m1, wb,
+    )
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped-query attention over (BH, S, d) flattened head layout."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _flash_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=interpret,
+        )
+    return ref.mha_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)

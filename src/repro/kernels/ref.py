@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Fused FOEM E-step (dense) — oracle for kernels/foem_estep.py
+# ---------------------------------------------------------------------------
+
+def fused_estep_ref(
+    theta_rows: jax.Array,   # (T, K) θ̂ gathered per token
+    phi_rows: jax.Array,     # (T, K) φ̂ gathered per token
+    phi_tot: jax.Array,      # (K,)
+    exclude: Optional[jax.Array],  # (T, K) counts·μ_old or None (BEM)
+    mu_old: jax.Array,       # (T, K) previous normalised μ (residuals)
+    counts: jax.Array,       # (T,)
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,               # W·(β−1)
+):
+    """Returns (mu_new (T,K), residual (T,K) = counts·|Δμ|)."""
+    th, ph = theta_rows, phi_rows
+    pt = phi_tot[None, :]
+    if exclude is not None:
+        th = th - exclude
+        ph = ph - exclude
+        pt = pt - exclude
+    th = jnp.maximum(th, 0.0)
+    ph = jnp.maximum(ph, 0.0)
+    num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+    mu = num / jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
+    res = counts[:, None] * jnp.abs(mu - mu_old)
+    return mu, res
+
+
+# ---------------------------------------------------------------------------
+# Scheduled sparse E-step (active-topic set) — oracle for kernels/topk_estep.py
+# ---------------------------------------------------------------------------
+
+def topk_estep_ref(
+    theta_a: jax.Array,    # (T, A) θ̂ on the active topics
+    phi_a: jax.Array,      # (T, A)
+    ptot_a: jax.Array,     # (T, A)
+    mu_prev_a: jax.Array,  # (T, A) previous normalised μ on the active set
+    counts: jax.Array,     # (T,)
+    active: jax.Array,     # (T,) bool — word passes the λ_w threshold
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,
+):
+    """eq. 13 restricted to the active set + eq. 38 renorm.
+
+    Returns (mu_new_a, delta = counts·(μ_new−μ_prev)).
+    """
+    ex = counts[:, None] * mu_prev_a
+    th = jnp.maximum(theta_a - ex, 0.0)
+    ph = jnp.maximum(phi_a - ex, 0.0)
+    pt = ptot_a - ex
+    num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+    prev_mass = mu_prev_a.sum(-1, keepdims=True)
+    mu_new = num / jnp.maximum(num.sum(-1, keepdims=True), 1e-30) * prev_mass
+    mu_new = jnp.where(active[:, None], mu_new, mu_prev_a)
+    delta = counts[:, None] * (mu_new - mu_prev_a)
+    return mu_new, delta
+
+
+# ---------------------------------------------------------------------------
+# Attention — oracle for kernels/flash_attention.py
+# ---------------------------------------------------------------------------
+
+def mha_ref(
+    q: jax.Array,          # (BH, Sq, d)
+    k: jax.Array,          # (BH_kv, Sk, d)
+    v: jax.Array,          # (BH_kv, Sk, d)
+    *,
+    causal: bool = True,
+    window: int = 0,       # 0 = full; else sliding-window of this many keys
+    scale: Optional[float] = None,
+    q_offset: int = 0,     # global position of q[0] (decode: cache length)
+) -> jax.Array:
+    """Grouped-query attention; q heads map to kv heads by integer division."""
+    BH, Sq, d = q.shape
+    BHkv = k.shape[0]
+    group = BH // BHkv
+    scale = scale if scale is not None else d ** -0.5
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q, kk) * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)    # fully-masked rows
+    return jnp.einsum("bqk,bkd->bqd", p, vv)

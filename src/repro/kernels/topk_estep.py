@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: scheduled sparse E-step on the active-topic set (eq. 38).
+
+Dynamic scheduling (paper §3.1) restricts each sweep to the λ_k·K ≈ 16 active
+topics per word.  The arithmetic is tiny per token (O(A) with A ≈ 16), so the
+op is gather/HBM-bound; fusing the exclusion, responsibility, partial
+renormalisation, word-mask and delta into one VPU pass removes ~6 HBM
+round-trips over the (T, A) slabs.
+
+A is padded to the 128-lane boundary by the wrapper; padding lanes carry
+μ_prev = 0 and θ̂ = φ̂ = 0 so they contribute nothing to the renorm mass
+(eq. 38 preserves Σ_active μ, and padded lanes have zero previous mass).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(
+    theta_ref, phi_ref, ptot_ref, mu_prev_ref, counts_ref, active_ref,
+    mu_ref, delta_ref, *, alpha_m1: float, beta_m1: float, wb: float,
+):
+    mu_prev = mu_prev_ref[...]
+    cnt = counts_ref[...]                       # (BT, 1)
+    ex = cnt * mu_prev
+    th = jnp.maximum(theta_ref[...] - ex, 0.0)
+    ph = jnp.maximum(phi_ref[...] - ex, 0.0)
+    pt = ptot_ref[...] - ex
+    num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+    # padded lanes: mu_prev == 0 AND th == ph == 0 -> num = a·b/(pt+wb) > 0,
+    # which would steal renorm mass; zero them via the previous-mass trick:
+    # lanes with mu_prev == 0 and theta == 0 are padding (a real active topic
+    # always has mu_prev > 0 after the first full sweep).
+    pad = (mu_prev <= 0.0) & (theta_ref[...] <= 0.0)
+    num = jnp.where(pad, 0.0, num)
+    prev_mass = mu_prev.sum(-1, keepdims=True)
+    mu_new = num / jnp.maximum(num.sum(-1, keepdims=True), 1e-30) * prev_mass
+    act = active_ref[...]                       # (BT, 1) float mask
+    mu_new = act * mu_new + (1.0 - act) * mu_prev
+    mu_ref[...] = mu_new
+    delta_ref[...] = cnt * (mu_new - mu_prev)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha_m1", "beta_m1", "wb", "block_tokens", "interpret"),
+)
+def topk_estep_pallas(
+    theta_a: jax.Array,     # (T, A)
+    phi_a: jax.Array,       # (T, A)
+    ptot_a: jax.Array,      # (T, A)
+    mu_prev_a: jax.Array,   # (T, A)
+    counts: jax.Array,      # (T,)
+    active: jax.Array,      # (T,) bool
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,
+    block_tokens: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    T, A = theta_a.shape
+    BT = min(block_tokens, T)
+    if T % BT:
+        raise ValueError(f"token count {T} not divisible by block {BT}")
+    grid = (T // BT,)
+    tile = pl.BlockSpec((BT, A), lambda i: (i, 0))
+    col = pl.BlockSpec((BT, 1), lambda i: (i, 0))
+    kernel = functools.partial(
+        _topk_kernel, alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb
+    )
+    mu, delta = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, col, col],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, A), theta_a.dtype),
+            jax.ShapeDtypeStruct((T, A), theta_a.dtype),
+        ],
+        interpret=interpret,
+    )(
+        theta_a, phi_a, ptot_a, mu_prev_a,
+        counts[:, None], active.astype(theta_a.dtype)[:, None],
+    )
+    return mu, delta

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: ``.lower().compile()`` for every (arch × shape × mesh).
+
+Proves the distribution config is coherent without hardware:
+  * single-pod mesh (data=16, model=16) — 256 chips (roofline baseline grid);
+  * multi-pod mesh (pod=2, data=16, model=16) — 512 chips (pod-axis sharding).
+
+Per cell it records ``compiled.memory_analysis()`` (fits-in-HBM proof),
+``compiled.cost_analysis()`` (per-device FLOPs/bytes), and the HLO-walker
+roofline terms (launch/roofline.py) into ``experiments/dryrun/*.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-20b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--archs a,b --shapes x,y]
+  python -m repro.launch.dryrun --lda stream_1k
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.configs import foem_lda
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+from repro.launch.specs import build_lda_cell, build_lm_cell
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(
+    arch: str, shape: str, *, multi_pod: bool = False,
+    overrides: Optional[dict] = None, lda_kwargs: Optional[dict] = None,
+    save: bool = True, tag: str = "",
+    expected_dynamic_trip: int = 12, verbose: bool = True,
+) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.perf_counter()
+    if arch == foem_lda.NAME:
+        cell = build_lda_cell(shape, mesh, **(lda_kwargs or {}))
+        shp = next(s for s in foem_lda.LDA_SHAPES if s.name == shape)
+        model_flops = rl.lda_model_flops(shp)
+    else:
+        cell = build_lm_cell(arch, shape, mesh, overrides=overrides)
+        cfg = get_arch(arch)
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        from repro.configs.registry import get_shape
+        model_flops = rl.model_flops_for(cfg, get_shape(cfg, shape))
+
+    lowered = cell.lower(mesh)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    roof = rl.roofline_from_hlo(
+        hlo, chips=chips, model_flops=model_flops,
+        expected_dynamic_trip=expected_dynamic_trip,
+    )
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "tag": tag,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "cost_analysis": {
+            "flops_per_device": cost.get("flops"),
+            "bytes_accessed_per_device": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "roofline": {
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "flops_per_device": roof.flops,
+            "hbm_bytes_per_device": roof.hbm_bytes,
+            "coll_bytes_per_device": roof.coll_bytes,
+            "coll_by_kind": roof.coll_by_kind,
+            "model_flops": model_flops,
+            "useful_flops_fraction": roof.useful_flops_fraction,
+            "roofline_mfu": roof.mfu,
+            "step_time_s": roof.step_time_s,
+        },
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        arg_gb = (rec["memory"]["argument_bytes"] or 0) / 2**30
+        tmp_gb = (rec["memory"]["temp_bytes"] or 0) / 2**30
+        print(
+            f"[dryrun] {arch:24s} {shape:12s} {rec['mesh']:8s} "
+            f"lower={t_lower:6.1f}s compile={t_compile:6.1f}s "
+            f"args={arg_gb:6.2f}GiB temp={tmp_gb:6.2f}GiB | {roof.summary()}"
+        )
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = f"{arch}_{shape}_{rec['mesh']}{suffix}.json"
+        with open(os.path.join(OUT_DIR, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def iter_all_cells():
+    for name, cfg in sorted(ARCHS.items()):
+        for s in cfg.shapes():
+            yield name, s.name
+    for s in foem_lda.LDA_SHAPES:
+        yield foem_lda.NAME, s.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--lda", help="run the paper's LDA cell by shape name")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", help="comma filter for --all")
+    ap.add_argument("--shapes", help="comma filter for --all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+
+    def one(a, s):
+        for mp in meshes:
+            try:
+                run_cell(a, s, multi_pod=mp)
+            except Exception as e:                     # noqa: BLE001
+                failures.append((a, s, mp, repr(e)))
+                traceback.print_exc()
+
+    if args.all:
+        af = set(args.archs.split(",")) if args.archs else None
+        sf = set(args.shapes.split(",")) if args.shapes else None
+        for a, s in iter_all_cells():
+            if af and a not in af:
+                continue
+            if sf and s not in sf:
+                continue
+            one(a, s)
+    elif args.lda:
+        one(foem_lda.NAME, args.lda)
+    elif args.arch and args.shape:
+        one(args.arch, args.shape)
+    else:
+        ap.error("need --arch/--shape, --lda, or --all")
+
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,501 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``compiled.cost_analysis()`` visits while-loop bodies ONCE (scan-over-layers
+would be under-counted ~nblocks×), so this module walks the post-SPMD HLO
+text itself:
+
+  * computations are parsed into blocks; a call graph with *multiplicities*
+    is built — while bodies are multiplied by their trip count, which XLA
+    materialises as the loop-bound constant in the condition computation
+    (dynamic conditions, e.g. FOEM's ΔP stop, fall back to a caller-supplied
+    expected trip count);
+  * per top-level op (fusion boundaries = HBM traffic): result+operand bytes
+    feed the memory term; dot/conv FLOPs are computed from shapes and
+    contraction dims; elementwise/reduce ops contribute out-element FLOPs;
+  * collective bytes per device: all-reduce 2×result, all-gather result,
+    reduce-scatter operand, all-to-all result, collective-permute result
+    (ring-model wire bytes on the ICI).
+
+Terms (v5e): compute = FLOPs/chip / 197e12, memory = HBM bytes/chip / 819e9,
+collective = wire bytes/chip / 50e9.  The HLO here is already the per-device
+partitioned module, so no further /chips normalisation is needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+# ---- hardware constants (TPU v5e) ----
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_ELEMWISE = (
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "abs",
+    "logistic", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
+    "select", "compare", "and", "or", "xor", "not", "clamp",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> Tuple[int, int]:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _all_shapes(text: str) -> List[Tuple[int, int]]:
+    return [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(text)]
+
+
+@dataclasses.dataclass
+class OpCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    coll_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int)
+    )
+
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    """Split HLO text into computation blocks: name -> op lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        # computation headers end with "{", carry a "->" return annotation and
+        # are not assignments (params may be tuple-typed: nested parens).
+        if s.endswith("{") and "->" in s and " = " not in s:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in s:
+            comps[cur].append(s)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_lines: List[str], default_trip: int) -> int:
+    """Loop bound = the largest s32 constant compared in the condition."""
+    best = 0
+    for ln in cond_lines:
+        if "constant(" in ln:
+            for c in re.findall(r"constant\((\d+)\)", ln):
+                best = max(best, int(c))
+    return best if best > 0 else default_trip
+
+
+_DEF_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def build_def_table(hlo: str) -> Dict[str, Tuple[int, int, List[int]]]:
+    """SSA table: instruction name -> (elems, bytes, dims).
+
+    Post-optimization HLO prints operands WITHOUT inline shapes, so operand
+    sizes must be resolved through their defining instruction.
+    """
+    table: Dict[str, Tuple[int, int, List[int]]] = {}
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _DEF_RE.match(s)
+        if not m:
+            continue
+        sh = _SHAPE_RE.search(s[m.end():])
+        if not sh:
+            continue
+        dims = [int(x) for x in sh.group(2).split(",")] if sh.group(2) else []
+        n, b = _shape_bytes(sh.group(1), sh.group(2))
+        table[m.group(1)] = (n, b, dims)
+    return table
+
+
+def _operands_of(line: str, op: str, table) -> List[Tuple[int, int, List[int]]]:
+    """Resolve operand sizes from the SSA table (inline shapes if present)."""
+    try:
+        args = line.split(op + "(", 1)[1]
+    except IndexError:
+        return []
+    depth, out = 1, []
+    end = 0
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = args[:end]
+    inline = _SHAPE_RE.findall(args)
+    if inline:
+        return [(*_shape_bytes(d, s), [int(x) for x in s.split(",")] if s else [])
+                for d, s in inline]
+    res = []
+    for name in _OPERAND_RE.findall(args):
+        if name in table:
+            res.append(table[name])
+    return res
+
+
+def _dot_flops(line: str, table) -> float:
+    # 2 × out_elems × contraction_size (contraction dims from lhs operand)
+    m = re.match(r"%?[\w.\-]+\s*=\s*(.*?)\s*dot\(", line)
+    if not m:
+        return 0.0
+    res_shapes = _all_shapes(m.group(1))
+    out_elems = res_shapes[0][0] if res_shapes else 0
+    ops = _operands_of(line, "dot", table)
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if cd and ops:
+        lhs_dims = ops[0][2]
+        for idx in cd.group(1).split(","):
+            if idx != "" and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(line: str, table) -> float:
+    m = re.match(r"%?[\w.\-]+\s*=\s*(.*?)\s*convolution\(", line)
+    if not m:
+        return 0.0
+    res = _all_shapes(m.group(1))
+    ops = _operands_of(line, "convolution", table)
+    out_elems = res[0][0] if res else 0
+    kernel_elems = ops[1][0] if len(ops) > 1 else 1
+    gm = re.search(r"feature_group_count=(\d+)", line)
+    groups = int(gm.group(1)) if gm else 1
+    # per-output MACs ≈ kernel/groups … ≈ window taps for depthwise
+    return 2.0 * out_elems * max(kernel_elems / max(groups, 1), 1.0)
+
+
+def _fusion_memory(
+    flines: List[str], res_bytes: int, opnd_bytes: int,
+    opnd_sizes: Optional[List[int]] = None,
+) -> Tuple[int, int]:
+    """Correct a fusion op's HBM traffic for internal slicing semantics.
+
+    * a parameter only read through (possibly bitcast/copy-aliased)
+      ``dynamic-slice`` contributes its *slice* bytes, not the full buffer —
+      this is how scan-over-layers reads one layer of the stacked params;
+    * a fusion whose root is ``dynamic-update-slice`` writes only the update
+      region (the result aliases the input buffer in place).
+    """
+    defs: Dict[str, int] = {}
+    alias: Dict[str, str] = {}
+    for il in flines:
+        dm = _DEF_RE.match(il)
+        if not dm:
+            continue
+        name = dm.group(1)
+        sh = _SHAPE_RE.search(il[dm.end():])
+        if sh:
+            defs[name] = _shape_bytes(sh.group(1), sh.group(2))[1]
+        am = re.search(
+            r"=\s*[^=]*?\b(?:bitcast|copy|convert|transpose|reshape)\(%([\w.\-]+)",
+            il,
+        )
+        if am:
+            alias[name] = am.group(1)
+
+    def root_of(n: str) -> str:
+        seen = set()
+        while n in alias and n not in seen:
+            seen.add(n)
+            n = alias[n]
+        return n
+
+    sliced: Dict[str, int] = {}
+    other: set = set()
+    dus_update: Optional[int] = None
+    dus_buffer: Optional[str] = None
+    for il in flines:
+        dsm = re.match(
+            r"%?[\w.\-]+\s*=\s*(.*?)\s*dynamic-slice\(%([\w.\-]+)", il
+        )
+        if dsm:
+            tgt = root_of(dsm.group(2))
+            sh = _all_shapes(dsm.group(1))
+            if sh:
+                sliced[tgt] = sliced.get(tgt, 0) + sh[0][1]
+            continue
+        dum = re.search(
+            r"dynamic-update-slice\(%([\w.\-]+),\s*%([\w.\-]+)", il
+        )
+        if dum:
+            dus_buffer = root_of(dum.group(1))
+            dus_update = defs.get(root_of(dum.group(2)), 0)
+            continue
+        if " = " in il:
+            tail = il.split(" = ", 1)[1]
+            tail = tail.split("(", 1)[1] if "(" in tail else tail
+            for pm in re.finditer(r"%([\w.\-]+)", tail):
+                other.add(root_of(pm.group(1)))
+
+    for pname, slice_bytes in sliced.items():
+        if pname in other or not pname.startswith("param"):
+            continue
+        full = defs.get(pname)
+        if full and full > slice_bytes:
+            opnd_bytes -= full - slice_bytes
+    if dus_update is not None and dus_buffer is not None:
+        # in-place update: write update bytes; don't read the full buffer
+        res_bytes = dus_update
+        subtracted = False
+        if dus_buffer.startswith("param") and dus_buffer not in other:
+            full = defs.get(dus_buffer)
+            if full:
+                opnd_bytes -= full - dus_update
+                subtracted = True
+        if not subtracted and opnd_sizes:
+            # buffer arrived as a direct operand (e.g. via a top-level copy):
+            # drop the largest operand — it is the aliased in-place buffer
+            big = max(opnd_sizes)
+            if big > 2 * dus_update:
+                opnd_bytes -= big - dus_update
+    return max(res_bytes, 0), max(opnd_bytes, 0)
+
+
+def analyze_hlo(
+    hlo: str, *, default_trip: int = 1, expected_dynamic_trip: int = 12,
+) -> OpCosts:
+    comps = parse_computations(hlo)
+    table = build_def_table(hlo)
+    entry = _entry_name(hlo)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+    costs = OpCosts()
+    if entry is None:
+        return costs
+
+    fusion_bodies = set()
+    for lines in comps.values():
+        for ln in lines:
+            fm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", ln)
+            if fm:
+                fusion_bodies.add(fm.group(1))
+
+    seen: Dict[str, float] = {}
+
+    def walk(name: str, mult: float) -> None:
+        if name not in comps or mult <= 0:
+            return
+        seen[name] = seen.get(name, 0) + mult
+        for ln in comps[name]:
+            opm = re.search(r"=\s*(?:\([^)]*\)|[\w\[\],{}\s]*?)\s*([a-z][\w\-]*)\(", ln)
+            op = opm.group(1) if opm else ""
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                trip = _trip_count(
+                    comps.get(cm.group(1), []) if cm else [],
+                    expected_dynamic_trip,
+                )
+                if bm:
+                    walk(bm.group(1), mult * trip)
+                if cm:
+                    walk(cm.group(1), mult * trip)
+                continue
+            if op in ("call", "conditional"):
+                for tm in re.findall(
+                    r"(?:to_apply|branch_computations=\{|true_computation|"
+                    r"false_computation)=?%?([\w.\-]+)", ln
+                ):
+                    walk(tm, mult)
+            _count_line(ln, op, mult)
+
+    def _count_line(ln: str, op: str, mult: float) -> None:
+        if op.endswith("-done"):
+            return
+        base_op = op[:-6] if op.endswith("-start") else op
+        eq = ln.index("=") if "=" in ln else 0
+        result_part = (
+            ln[eq + 1: ln.index(base_op + "(")]
+            if (base_op + "(") in ln else ln[eq + 1:]
+        )
+        res_shapes = _all_shapes(result_part)
+        if not res_shapes:
+            return
+        res_bytes = sum(b for _, b in res_shapes)
+        res_elems = sum(n for n, _ in res_shapes)
+        opnd_bytes = sum(b for _, b, _ in _operands_of(ln, base_op, table))
+
+        # ---- HBM-traffic corrections: slicing ops read only their slice ----
+        if base_op in ("dynamic-slice", "gather"):
+            opnd_bytes = res_bytes          # read = slice/gathered bytes
+        elif base_op in ("dynamic-update-slice", "scatter"):
+            # in-place update: read+write of the update region, not the buffer
+            ops_sz = [b for _, b, _ in _operands_of(ln, base_op, table)]
+            upd = ops_sz[1] if len(ops_sz) > 1 else res_bytes
+            costs.hbm_bytes += mult * 2 * upd
+            return
+        elif base_op == "fusion":
+            fm0 = re.search(r"calls=%?([\w.\-]+)", ln)
+            if fm0 and fm0.group(1) in comps:
+                res_bytes, opnd_bytes = _fusion_memory(
+                    comps[fm0.group(1)], res_bytes, opnd_bytes,
+                    [b for _, b, _ in _operands_of(ln, base_op, table)],
+                )
+
+        if base_op in _COLLECTIVES:
+            if base_op == "all-reduce":
+                wire = 2.0 * res_bytes
+            elif base_op == "reduce-scatter":
+                wire = max(opnd_bytes, res_bytes)
+            else:
+                wire = res_bytes
+            costs.coll_bytes += mult * wire
+            costs.coll_by_kind[base_op] += mult * wire
+            costs.coll_count[base_op] += int(mult)
+            return
+        if base_op in ("parameter", "constant", "tuple", "get-tuple-element",
+                       "bitcast", "copy-start", "copy-done", "after-all"):
+            return
+        # memory: fusion boundary traffic
+        costs.hbm_bytes += mult * (res_bytes + max(opnd_bytes, 0))
+        if base_op == "dot":
+            costs.flops += mult * _dot_flops(ln, table)
+        elif base_op == "convolution":
+            costs.flops += mult * _conv_flops(ln, table)
+        elif base_op == "fusion":
+            # count the fusion's internal arithmetic: dots inside + one
+            # elementwise op per output element per internal instruction
+            fm = re.search(r"calls=%?([\w.\-]+)", ln)
+            if fm and fm.group(1) in comps:
+                inner_flops = 0.0
+                for il in comps[fm.group(1)]:
+                    iop = re.search(r"=\s*[\w\[\],{}\s]*?([a-z][\w\-]*)\(", il)
+                    ioname = iop.group(1) if iop else ""
+                    if ioname == "dot":
+                        inner_flops += _dot_flops(il, table)
+                    elif ioname in _ELEMWISE or ioname == "reduce":
+                        ish = _all_shapes(il.split("=", 1)[1])
+                        inner_flops += ish[0][0] if ish else 0
+                costs.flops += mult * inner_flops
+        elif base_op in _ELEMWISE or base_op in ("reduce", "reduce-window"):
+            costs.flops += mult * res_elems
+
+    walk(entry, 1.0)
+    return costs
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (chips × HLO flops) — remat/redundancy waste."""
+        tot = self.flops * self.chips
+        return self.model_flops / tot if tot > 0 else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips × peak × roofline step time)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def summary(self) -> str:
+        return (
+            f"compute={self.compute_s*1e3:9.3f}ms memory={self.memory_s*1e3:9.3f}ms "
+            f"collective={self.collective_s*1e3:9.3f}ms dominant={self.dominant:10s} "
+            f"useful={self.useful_flops_fraction*100:5.1f}% roofline-MFU={self.mfu*100:5.1f}%"
+        )
+
+
+def roofline_from_hlo(
+    hlo: str, *, chips: int, model_flops: float,
+    expected_dynamic_trip: int = 12,
+) -> Roofline:
+    c = analyze_hlo(hlo, expected_dynamic_trip=expected_dynamic_trip)
+    return Roofline(
+        compute_s=c.flops / PEAK_FLOPS,
+        memory_s=c.hbm_bytes / HBM_BW,
+        collective_s=c.coll_bytes / ICI_BW,
+        flops=c.flops,
+        hbm_bytes=c.hbm_bytes,
+        coll_bytes=c.coll_bytes,
+        coll_by_kind=dict(c.coll_by_kind),
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = tokens/step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def lda_model_flops(shape, sweeps: int = 12, active_topics: int = 16) -> float:
+    """Useful FLOPs of the FOEM inner loop: the paper's 2·λkK·NNZ accounting
+    (E-step multiply+normalise) + fold adds, per sweep."""
+    nnz = shape.minibatch_docs * shape.bucket_len
+    per_sweep = nnz * active_topics * 8.0      # eq.13 arithmetic per active topic
+    return sweeps * per_sweep

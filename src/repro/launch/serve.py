@@ -1,0 +1,143 @@
+"""Serving driver — topic inference for unseen documents (the paper's
+deployment mode) and LM decode on reduced configs.
+
+LDA serving = the E-step with FROZEN φ̂: per request batch, fit θ̂ only
+(fixed-point iterations), return the per-document topic mixture.  This is
+exactly the paper's test-time protocol (§2.4) and runs with the same
+vocab-streamed parameter access as training.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, LDA_ARCH
+from repro.core import LDAConfig, ParameterStore
+from repro.core.perplexity import fit_theta_fixed_phi
+from repro.core import em
+from repro.core.types import MinibatchData
+from repro.data import synthetic_lda_corpus
+from repro.models import build
+from repro.sparse.docword import bucketize, localize_vocab
+
+
+class TopicServer:
+    """Batched topic-mixture inference against a (possibly disk-backed) φ̂."""
+
+    def __init__(self, store: ParameterStore, cfg: LDAConfig,
+                 fit_sweeps: int = 50):
+        self.store = store
+        self.cfg = cfg
+        self.fit_sweeps = fit_sweeps
+        self.key = jax.random.PRNGKey(0)
+
+    def infer(self, word_ids: np.ndarray, counts: np.ndarray) -> np.ndarray:
+        """(B, L) docs -> (B, K) normalized topic mixtures θ."""
+        uniq, local = localize_vocab(word_ids)
+        rows = self.store.fetch_rows(uniq)                     # streamed φ̂
+        phi_k = jnp.asarray(self.store.phi_k, jnp.float32)
+        phi_norm = em.normalize_phi(
+            jnp.asarray(rows), phi_k, self.cfg
+        )
+        batch = MinibatchData(jnp.asarray(local), jnp.asarray(counts))
+        rows_tok = em.gather_phi_rows(phi_norm, batch.word_ids)
+        self.key, sub = jax.random.split(self.key)
+        theta = fit_theta_fixed_phi(sub, batch, rows_tok, self.cfg,
+                                    self.fit_sweeps)
+        return np.asarray(em.normalize_theta(theta, self.cfg))
+
+
+def serve_lda(args) -> None:
+    cfg = LDAConfig(num_topics=args.topics, vocab_size=args.vocab)
+    store = ParameterStore(args.workdir, num_topics=args.topics,
+                           vocab_capacity=args.vocab,
+                           buffer_rows=args.buffer_rows)
+    if store.phi_k.sum() == 0:
+        raise SystemExit(
+            f"no trained φ̂ under {args.workdir}; run launch/train.py first"
+        )
+    server = TopicServer(store, cfg)
+    corpus, _ = synthetic_lda_corpus(args.requests, args.vocab,
+                                     args.topics, seed=123)
+    ids = list(range(corpus.num_docs))
+    t0 = time.time()
+    for lo in range(0, len(ids), args.batch):
+        chunk = ids[lo: lo + args.batch]
+        w, c = bucketize(corpus, chunk)
+        theta = server.infer(w, c)
+        top = np.argsort(-theta, axis=1)[:, :3]
+        if lo == 0:
+            for d in range(min(4, len(chunk))):
+                mix = ", ".join(
+                    f"k{int(k)}:{theta[d, k]:.2f}" for k in top[d]
+                )
+                print(f"  doc{chunk[d]:4d} top topics: {mix}")
+    dt = time.time() - t0
+    print(f"served {len(ids)} docs in {dt:.2f}s "
+          f"({len(ids)/dt:.1f} docs/s, batch={args.batch})")
+
+
+def serve_lm(args) -> None:
+    cfg = ARCHS[args.arch].reduced()
+    model = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    B, prompt_len, gen = args.batch, 16, args.gen_tokens
+
+    batch = {"tokens": jnp.ones((B, prompt_len), jnp.int32)}
+    if cfg.frontend == "image_patches":
+        batch["image_embeds"] = jnp.ones(
+            (B, cfg.image_tokens, cfg.d_model), jnp.float32) * 0.01
+    logits, pre_caches = model.prefill(params, batch)
+    cache = model.init_cache(B, prompt_len + gen)
+    cache = jax.tree.map(
+        lambda dst, src: jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), (0,) * dst.ndim
+        ) if dst.ndim == src.ndim else dst,
+        cache, pre_caches,
+    )
+
+    @jax.jit
+    def step(params, cache, tok, pos):
+        b = {"tokens": tok}
+        if cfg.frontend == "image_patches":
+            b["image_embeds"] = batch["image_embeds"]
+        lg, cache = model.decode_step(params, cache, b, pos)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out: List[np.ndarray] = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(gen):
+        tok, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    print(f"{args.arch}: generated {gen}×{B} tokens in {dt:.2f}s "
+          f"({B*gen/dt:.1f} tok/s); sample: {np.concatenate(out,1)[0][:16]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=LDA_ARCH)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--topics", type=int, default=100)
+    ap.add_argument("--vocab", type=int, default=5000)
+    ap.add_argument("--buffer-rows", type=int, default=2048)
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--gen-tokens", type=int, default=32)
+    args = ap.parse_args()
+    if args.arch == LDA_ARCH:
+        serve_lda(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

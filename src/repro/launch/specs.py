@@ -1,0 +1,277 @@
+"""input_specs + jitted step builders for every (arch × shape × mesh) cell.
+
+``input_specs`` returns weak-type-correct ``ShapeDtypeStruct`` stand-ins for
+every model input (the shannon/kernels pattern): shardable, no device
+allocation.  ``build_cell`` packages the step function, its abstract
+arguments, and in/out shardings — consumed by the dry-run, the roofline
+extractor and the perf loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.registry import get_arch, get_shape
+from repro.configs import foem_lda
+from repro.core import foem as foem_lib
+from repro.core.types import GlobalStats, LDAConfig, MinibatchData
+from repro.models.lm import LM, build, jnp_dtype
+from repro.optim.adamw import OptState, adamw_init, adamw_update
+from repro.optim.schedules import cosine_warmup
+from repro.parallel import sharding as shard_rules
+
+
+@dataclasses.dataclass
+class Cell:
+    """One dry-run cell: a jittable step with abstract args + shardings."""
+
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode | lda
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+
+    def lower(self, mesh: Mesh):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        with mesh:
+            return jitted.lower(*self.abstract_args)
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM inputs
+# ---------------------------------------------------------------------------
+
+def lm_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the model inputs of this cell."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    dt = jnp_dtype(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.frontend == "image_patches":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.image_tokens, cfg.d_model), dt
+        )
+    return specs
+
+
+def input_specs(arch_name: str, shape_name: str) -> Dict[str, Any]:
+    """Public helper (per the assignment): abstract inputs for a cell."""
+    cfg = get_arch(arch_name)
+    return lm_input_specs(cfg, get_shape(cfg, shape_name))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def build_lm_cell(
+    arch_name: str, shape_name: str, mesh: Mesh, *,
+    overrides: Optional[dict] = None,
+) -> Cell:
+    cfg = get_arch(arch_name)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(cfg, shape_name)
+    dp = shard_rules.dp_axes(mesh)
+    dp_entry = dp if shape.global_batch % shard_rules._dp_size(mesh) == 0 else None
+    model = build(cfg, mesh=mesh, dp_spec=dp_entry)
+
+    p_specs = shard_rules.param_pspecs(model, mesh)
+    b_specs = shard_rules.batch_pspecs(cfg, shape, mesh)
+    params_abs = model.abstract_params()
+    batch_abs = lm_input_specs(cfg, shape)
+    b_specs = {k: b_specs[k] for k in batch_abs}   # align key sets
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        m_specs = (
+            shard_rules.zero1_pspecs(model, mesh) if cfg.zero1 else p_specs
+        )
+        o_specs = OptState(mu=m_specs, nu=m_specs, count=P())
+        mb = max(1, cfg.micro_batches)
+
+        def train_step(params, opt, batch):
+            if mb == 1:
+                loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            else:
+                # gradient accumulation: microbatches scanned, fp32 grads.
+                # The reshape must NOT move the data-sharding onto the
+                # microbatch axis (XLA would re-shard batch 4× instead of
+                # 16× and quadruple per-device work) — constrain explicitly.
+                micro = jax.tree.map(
+                    lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                    batch,
+                )
+                micro = {
+                    k: jax.lax.with_sharding_constraint(
+                        v, NamedSharding(mesh, P(None, *b_specs[k]))
+                    )
+                    for k, v in micro.items()
+                }
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+
+                def acc(carry, mbatch):
+                    lsum, g = carry
+                    l, gi = jax.value_and_grad(model.loss_fn)(params, mbatch)
+                    g = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g, gi
+                    )
+                    return (lsum + l, g), None
+
+                (lsum, gsum), _ = jax.lax.scan(
+                    acc, (jnp.float32(0.0), g0), micro
+                )
+                loss = lsum / mb
+                grads = jax.tree.map(lambda g: g / mb, gsum)
+            lr = cosine_warmup(opt.count, peak_lr=3e-4, warmup=2000,
+                               total=100_000)
+            new_params, new_opt = adamw_update(grads, opt, params, lr=lr)
+            return loss, new_params, new_opt
+
+        return Cell(
+            arch=arch_name, shape=shape_name, kind="train",
+            fn=train_step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(
+                _named(mesh, p_specs), _named(mesh, o_specs),
+                _named(mesh, b_specs),
+            ),
+            out_shardings=(
+                NamedSharding(mesh, P()),
+                _named(mesh, p_specs), _named(mesh, o_specs),
+            ),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        cache_specs = shard_rules.cache_pspecs(model, shape, mesh)
+        logits_spec = P(
+            dp_entry, None,
+            "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None,
+        )
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        return Cell(
+            arch=arch_name, shape=shape_name, kind="prefill",
+            fn=prefill_step,
+            abstract_args=(params_abs, batch_abs),
+            in_shardings=(_named(mesh, p_specs), _named(mesh, b_specs)),
+            out_shardings=(
+                NamedSharding(mesh, logits_spec),
+                _named(mesh, cache_specs),
+            ),
+        )
+
+    # decode: one new token against a seq_len-deep cache
+    cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+    cache_specs = shard_rules.cache_pspecs(model, shape, mesh)
+    logits_spec = P(
+        dp_entry, None,
+        "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None,
+    )
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_step(params, caches, batch, pos):
+        return model.decode_step(params, caches, batch, pos)
+
+    return Cell(
+        arch=arch_name, shape=shape_name, kind="decode",
+        fn=decode_step,
+        abstract_args=(params_abs, cache_abs, batch_abs, pos_abs),
+        in_shardings=(
+            _named(mesh, p_specs), _named(mesh, cache_specs),
+            _named(mesh, b_specs), NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, logits_spec), _named(mesh, cache_specs),
+        ),
+        donate_argnums=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the paper's LDA cells
+# ---------------------------------------------------------------------------
+
+def build_lda_cell(
+    shape_name: str, mesh: Mesh, *,
+    shard_topics: bool = True, active_topics: int = 16,
+    overrides: Optional[dict] = None, impl: str = "pjit",
+) -> Cell:
+    shp = next(s for s in foem_lda.LDA_SHAPES if s.name == shape_name)
+    cfg = foem_lda.lda_config(shp, active_topics=active_topics)
+    if impl == "sharded":
+        overrides = dict(overrides or {})
+        overrides.setdefault("topk_shards", mesh.shape["model"])
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    dp = shard_rules.dp_axes(mesh)
+
+    batch_abs = MinibatchData(
+        word_ids=jax.ShapeDtypeStruct(
+            (shp.minibatch_docs, shp.bucket_len), jnp.int32
+        ),
+        counts=jax.ShapeDtypeStruct(
+            (shp.minibatch_docs, shp.bucket_len), jnp.float32
+        ),
+    )
+    stats_abs = jax.eval_shape(lambda: GlobalStats.zeros(cfg))
+    stats_specs = shard_rules.lda_pspecs(mesh, shard_topics=shard_topics)
+    batch_specs = MinibatchData(word_ids=P(dp, None), counts=P(dp, None))
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    if impl == "sharded":
+        from repro.core.foem_sharded import foem_step_sharded
+
+        def lda_step(key, batch, stats):
+            return foem_step_sharded(key, batch, stats, cfg, mesh)
+    else:
+        def lda_step(key, batch, stats):
+            new_stats, local, diag = foem_lib.foem_step(key, batch, stats, cfg)
+            return new_stats, diag.final_train_ppl
+
+    return Cell(
+        arch="foem-lda", shape=shape_name, kind="lda",
+        fn=lda_step,
+        abstract_args=(key_abs, batch_abs, stats_abs),
+        in_shardings=(
+            NamedSharding(mesh, P()), _named(mesh, batch_specs),
+            _named(mesh, stats_specs),
+        ),
+        out_shardings=(
+            _named(mesh, stats_specs), NamedSharding(mesh, P()),
+        ),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,3 @@
+from repro.models.lm import LM, build
+
+__all__ = ["LM", "build"]

@@ -1,0 +1,232 @@
+"""Shared neural layers (functional, pytree params — no framework dependency).
+
+Initialisers take an explicit PRNG key and return plain dict pytrees so that
+``jax.eval_shape`` can build abstract parameter trees for the dry-run (no
+device allocation at production sizes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(hd: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs  # (S, hd/2)
+        ang = ang[None, None]                                 # (1,1,S,hd/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        ang = ang[:, None]                                    # (B,1,S,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self / cross), GQA, optional sliding window
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_model: int, num_heads: int, num_kv: int, hd: int,
+                   dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d_model, num_heads * hd), dtype),
+        "wk": _dense_init(ks[1], (d_model, num_kv * hd), dtype),
+        "wv": _dense_init(ks[2], (d_model, num_kv * hd), dtype),
+        "wo": _dense_init(ks[3], (num_heads * hd, d_model), dtype),
+    }
+
+
+def _chunk_scores_softmax(
+    qc: jax.Array,        # (B, KV, G, cq, hd)
+    k: jax.Array,         # (B, KV, Sk, hd)
+    v: jax.Array,         # (B, KV, Sk, hd)
+    qpos: jax.Array,      # (cq,) global positions of this chunk's queries
+    kpos_limit,           # Sk (keys beyond are structurally absent)
+    *,
+    causal: bool,
+    window: int,
+    scale: float,
+    kpos_abs: Optional[jax.Array] = None,  # (Sk,) absolute key positions
+                                           # (ring-buffer caches; may be <0
+                                           # for never-written slots)
+) -> jax.Array:
+    """One q-chunk of blockwise attention; scores never leave this scope."""
+    s = jnp.einsum(
+        "bkgqd,bkud->bkgqu", qc.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale                                              # (B,KV,G,cq,Sk)
+    kpos = jnp.arange(k.shape[2]) if kpos_abs is None else kpos_abs
+    mask = jnp.ones((qc.shape[3], k.shape[2]), bool)
+    if kpos_abs is not None:
+        mask &= kpos[None, :] >= 0
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask, s, -1e30)
+    p_att = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqu,bkud->bkgqd", p_att, v.astype(jnp.float32))
+
+
+def attention_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                 # (B, S, D) queries
+    kv_x: Optional[jax.Array],    # cross-attn source or None (self)
+    *,
+    num_heads: int,
+    num_kv: int,
+    hd: int,
+    causal: bool,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,   # (S,) rope positions
+    rope_theta: float = 0.0,                 # 0 disables rope
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,KV,Smax,hd)
+    cache_pos: Optional[jax.Array] = None,   # () current write position
+    q_chunk: int = 512,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Grouped-query attention in the (B, KV, G, S, hd) layout.
+
+    The layout keeps every tensor dimension cleanly mapped to one mesh axis
+    (B→data, KV→model when divisible, S→model for the SP fallback) — no
+    flattened (B·H) axis that would mix shardings.  Long sequences run the
+    *q-chunked blockwise* path (scan + remat): the (cq, Sk) score tile is the
+    only O(S²/nq) buffer, recomputed in backward — the XLA-level equivalent
+    of the Pallas flash kernel, which replaces it 1:1 on real TPUs.
+
+    Modes: training/prefill (kv_cache None — returns fresh (B,KV,S,hd) as
+    cache) and decode (S==1, writes at cache_pos, attends to the prefix).
+    """
+    B, S, D = x.shape
+    G = num_heads // num_kv
+    src = x if kv_x is None else kv_x
+    Ssrc = src.shape[1]
+    scale = hd ** -0.5
+
+    q = (x @ p["wq"]).reshape(B, S, num_kv, G, hd).transpose(0, 2, 3, 1, 4)
+    k = (src @ p["wk"]).reshape(B, Ssrc, num_kv, hd).transpose(0, 2, 1, 3)
+    v = (src @ p["wv"]).reshape(B, Ssrc, num_kv, hd).transpose(0, 2, 1, 3)
+
+    if rope_theta and positions is not None:
+        qf = q.reshape(B, num_kv * G, S, hd)
+        qf = apply_rope(qf, positions, rope_theta)
+        q = qf.reshape(B, num_kv, G, S, hd)
+        if kv_x is None:                   # self-attention: rotate keys too
+            k = apply_rope(k, positions, rope_theta)
+
+    kpos_abs = None
+    if kv_cache is not None:
+        ck, cv = kv_cache                  # (B, KV, Smax|window, hd)
+        Wc = ck.shape[2]
+        if window > 0:
+            # ring buffer: the cache holds only the window (slot = pos mod W);
+            # slot s currently stores absolute position pos - ((pos - s) mod W)
+            # (negative = never written).  SWA semantics are exact because
+            # the ring retains precisely the last Wc ≥ visible positions.
+            slot = jnp.mod(cache_pos, Wc)
+            kpos_abs = cache_pos - jnp.mod(cache_pos - jnp.arange(Wc), Wc)
+        else:
+            slot = cache_pos
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.astype(ck.dtype), (0, 0, slot, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.astype(cv.dtype), (0, 0, slot, 0)
+        )
+        k, v = ck, cv
+        new_cache = (ck, cv)
+        q_base = cache_pos
+    else:
+        new_cache = (k, v)
+        q_base = 0
+
+    Sk = k.shape[2]
+    if S <= q_chunk:
+        qpos = jnp.arange(S) + q_base
+        o = _chunk_scores_softmax(
+            q, k, v, qpos, Sk, causal=causal, window=window, scale=scale,
+            kpos_abs=kpos_abs,
+        )                                                   # (B,KV,G,S,hd)
+    else:
+        nq = S // q_chunk
+        assert S % q_chunk == 0, (S, q_chunk)
+        qs = q.reshape(B, num_kv, G, nq, q_chunk, hd).transpose(
+            3, 0, 1, 2, 4, 5
+        )                                                   # (nq, B,KV,G,cq,hd)
+
+        def body(_, args):
+            qc, idx = args
+            qpos = idx * q_chunk + jnp.arange(q_chunk) + q_base
+            oc = _chunk_scores_softmax(
+                qc, k, v, qpos, Sk, causal=causal, window=window, scale=scale
+            )
+            return None, oc
+
+        body = jax.checkpoint(body)        # recompute score tiles in backward
+        _, oc = jax.lax.scan(body, None, (qs, jnp.arange(nq)))
+        o = oc.transpose(1, 2, 3, 0, 4, 5).reshape(B, num_kv, G, S, hd)
+
+    o = o.astype(x.dtype).transpose(0, 3, 1, 2, 4).reshape(B, S, num_kv * G * hd)
+    return (o @ p["wo"]).astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "up": _dense_init(ks[1], (d_model, d_ff), dtype),
+        "down": _dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["gate"]) * (x @ p["up"])) @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return _dense_init(key, (vocab, d_model), dtype, scale=1.0)
+
+def lm_head_init(key, d_model: int, vocab: int, dtype) -> jax.Array:
+    return _dense_init(key, (d_model, vocab), dtype)

@@ -1,0 +1,391 @@
+"""Unified decoder LM covering all assigned families.
+
+One model class, driven entirely by ``ArchConfig``:
+  * dense / GQA / MQA / sliding-window attention      (granite, internlm, danube)
+  * MoE FFN (top-k routed + shared experts)           (qwen2/3-moe, jamba)
+  * Mamba2 SSD layers, attention::mamba interleave    (mamba2, jamba)
+  * cross-attention every n-th layer on patch embeds  (llama-3.2-vision)
+  * precomputed-frame-embedding frontend              (musicgen)
+
+Layers are grouped into *super-blocks* of length ``period`` = lcm of the
+layer-pattern periods; all super-blocks are identical, so the stack is a
+single ``lax.scan`` over stacked block params — compile time and HLO size are
+independent of depth (52-94 layer archs compile as one block).
+
+Three entry points per arch (the dry-run grid lowers each):
+  * ``loss_fn``      — next-token CE (train_4k)
+  * ``prefill``      — full forward returning logits + caches (prefill_32k)
+  * ``decode_step``  — one token with KV/SSM caches (decode_32k, long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.ssm import SSMCache
+
+
+def _lcm(*xs: int) -> int:
+    out = 1
+    for x in xs:
+        if x:
+            out = out * x // math.gcd(out, x)
+    return out
+
+
+def jnp_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+class LM:
+    """Functional model: all methods are pure; ``self`` is static config.
+
+    ``mesh``/``dp_spec`` are optional distribution context used only by the
+    EP MoE path (cfg.moe_impl == "ep"); everything else is mesh-agnostic and
+    sharded from the outside by pjit annotations.
+    """
+
+    def __init__(self, cfg: ArchConfig, mesh=None, dp_spec=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp_spec = dp_spec
+        self.period = _lcm(
+            cfg.attn_every or 1, cfg.moe_every if cfg.num_experts else 1,
+            cfg.cross_attn_every or 1,
+        )
+        if cfg.num_layers % self.period:
+            raise ValueError(
+                f"{cfg.name}: num_layers {cfg.num_layers} not divisible by "
+                f"super-block period {self.period}"
+            )
+        self.nblocks = cfg.num_layers // self.period
+        self.dtype = jnp_dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+
+    def _init_sublayer(self, key, j: int) -> Dict[str, Any]:
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 6)
+        p: Dict[str, Any] = {"norm1": L.rmsnorm_init(cfg.d_model, dt),
+                             "norm2": L.rmsnorm_init(cfg.d_model, dt)}
+        if cfg.is_attn_layer(j):
+            p["attn"] = L.attention_init(
+                ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, dt
+            )
+        else:
+            p["mamba"] = ssm_lib.mamba_init(
+                ks[1], cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim,
+                cfg.ssm_expand, cfg.ssm_conv, dt,
+            )
+        if cfg.is_cross_attn_layer(j):
+            p["xnorm"] = L.rmsnorm_init(cfg.d_model, dt)
+            p["xattn"] = L.attention_init(
+                ks[2], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, dt
+            )
+        if cfg.is_moe_layer(j):
+            p["moe"] = moe_lib.moe_init(
+                ks[3], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                cfg.num_shared_experts, cfg.shared_expert_ff, dt,
+            )
+        elif cfg.d_ff > 0:
+            p["mlp"] = L.mlp_init(ks[4], cfg.d_model, cfg.d_ff, dt)
+        else:
+            del p["norm2"]          # pure-SSM block (mamba2): no FFN at all
+        return p
+
+    def _init_block(self, key) -> Dict[str, Any]:
+        ks = jax.random.split(key, self.period)
+        return {f"l{j}": self._init_sublayer(ks[j], j) for j in range(self.period)}
+
+    def init_params(self, key) -> Dict[str, Any]:
+        cfg, dt = self.cfg, self.dtype
+        k_emb, k_blk, k_head = jax.random.split(key, 3)
+        params: Dict[str, Any] = {}
+        if cfg.frontend != "audio_frames":
+            params["embed"] = L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt)
+        params["blocks"] = jax.vmap(self._init_block)(
+            jax.random.split(k_blk, self.nblocks)
+        )
+        params["final_norm"] = L.rmsnorm_init(cfg.d_model, dt)
+        params["lm_head"] = L.lm_head_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+        return params
+
+    def abstract_params(self) -> Dict[str, Any]:
+        """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+        return jax.eval_shape(lambda: self.init_params(jax.random.PRNGKey(0)))
+
+    # ----------------------------------------------------------------- cache
+
+    def init_cache(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        """Per-block decode caches, stacked on the block axis.
+
+        Sliding-window layers get a RING buffer of ``window`` slots instead
+        of ``max_seq`` (danube long_500k: 128× smaller KV state) — slot
+        rotation + absolute-position masking live in layers.attention_apply.
+        """
+        cfg, dt = self.cfg, self.dtype
+        kv_len = max_seq
+        if cfg.sliding_window > 0:
+            kv_len = min(max_seq, cfg.sliding_window)
+
+        def one_block():
+            c: Dict[str, Any] = {}
+            for j in range(self.period):
+                if cfg.is_attn_layer(j):
+                    c[f"l{j}"] = {
+                        "k": jnp.zeros((batch, cfg.num_kv_heads, kv_len, cfg.hd), dt),
+                        "v": jnp.zeros((batch, cfg.num_kv_heads, kv_len, cfg.hd), dt),
+                    }
+                else:
+                    c[f"l{j}"] = ssm_lib.mamba_cache_init(
+                        batch, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim,
+                        cfg.ssm_expand, cfg.ssm_conv, dt,
+                    )
+            return c
+
+        blk = one_block()
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.nblocks,) + x.shape), blk
+        )
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    # --------------------------------------------------------------- forward
+
+    def _block_apply(
+        self, bp, x, *, positions, image_embeds, bcache, mode, pos
+    ):
+        cfg = self.cfg
+        decode = mode == "decode"
+        newc: Dict[str, Any] = {}
+        for j in range(self.period):
+            lp = bp[f"l{j}"]
+            if cfg.is_attn_layer(j):
+                h = L.rmsnorm(x, lp["norm1"])
+                kvc = None
+                if decode:
+                    kvc = (bcache[f"l{j}"]["k"], bcache[f"l{j}"]["v"])
+                o, newkv = L.attention_apply(
+                    lp["attn"], h, None,
+                    num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads, hd=cfg.hd,
+                    causal=True, window=cfg.sliding_window,
+                    positions=positions,
+                    rope_theta=cfg.rope_theta if cfg.use_rope else 0.0,
+                    kv_cache=kvc, cache_pos=pos if decode else None,
+                )
+                x = x + o
+                if mode != "train":
+                    newc[f"l{j}"] = {"k": newkv[0], "v": newkv[1]}
+            else:
+                h = L.rmsnorm(x, lp["norm1"])
+                o, newssm = ssm_lib.mamba_apply(
+                    lp["mamba"], h,
+                    d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                    expand=cfg.ssm_expand, chunk=cfg.ssm_chunk,
+                    cache=bcache[f"l{j}"] if decode else None, decode=decode,
+                )
+                x = x + o
+                if mode != "train":
+                    newc[f"l{j}"] = newssm
+            if cfg.is_cross_attn_layer(j):
+                h = L.rmsnorm(x, lp["xnorm"])
+                o, _ = L.attention_apply(
+                    lp["xattn"], h, image_embeds,
+                    num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads, hd=cfg.hd,
+                    causal=False, rope_theta=0.0,
+                )
+                x = x + o
+            if cfg.is_moe_layer(j):
+                h = L.rmsnorm(x, lp["norm2"])
+                if (
+                    cfg.moe_impl == "ep" and self.mesh is not None
+                    and mode != "decode"
+                ):
+                    from repro.parallel.moe_ep import moe_apply_ep
+
+                    x = x + moe_apply_ep(
+                        lp["moe"], h,
+                        experts_per_token=cfg.experts_per_token,
+                        mesh=self.mesh, dp_spec=self.dp_spec,
+                        capacity_factor=cfg.moe_capacity_factor,
+                    )
+                else:
+                    x = x + moe_lib.moe_apply(
+                        lp["moe"], h, experts_per_token=cfg.experts_per_token
+                    )
+            elif cfg.d_ff > 0:
+                h = L.rmsnorm(x, lp["norm2"])
+                x = x + L.mlp_apply(lp["mlp"], h)
+        return x, newc
+
+    def backbone(
+        self, params, x, *, positions, image_embeds=None, caches=None,
+        mode: str = "train", pos=None,
+    ):
+        """Runs the scanned block stack.  Returns (hidden, new_caches|None)."""
+        cfg = self.cfg
+
+        def block_train(bp, h, img):          # positional (remat-compatible)
+            out, _ = self._block_apply(
+                bp, h, positions=positions, image_embeds=img,
+                bcache=None, mode="train", pos=None,
+            )
+            return out
+
+        if cfg.remat == "full":
+            block_train = jax.checkpoint(
+                block_train, policy=jax.checkpoint_policies.nothing_saveable,
+            )
+        elif cfg.remat == "dots":
+            block_train = jax.checkpoint(
+                block_train, policy=jax.checkpoint_policies.dots_saveable,
+            )
+        elif cfg.remat == "names":
+            # save only the EP all_to_all boundaries: backward never re-runs
+            # the token exchange, everything else recomputes (§Perf lever)
+            block_train = jax.checkpoint(
+                block_train,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "moe_recv", "moe_back"
+                ),
+            )
+
+        if mode == "train":
+            def body(h, bp):
+                if cfg.scan_barrier:
+                    # tie the (possibly FSDP-gathered) block weights to the
+                    # loop-carried activation: XLA may not hoist the gather
+                    bp, h = jax.lax.optimization_barrier((bp, h))
+                h = block_train(bp, h, image_embeds)
+                if cfg.seq_parallel and self.mesh is not None:
+                    from jax.sharding import NamedSharding, PartitionSpec
+                    h = jax.lax.with_sharding_constraint(
+                        h, NamedSharding(
+                            self.mesh,
+                            PartitionSpec(self.dp_spec, "model", None),
+                        ),
+                    )
+                return h, None
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+            return x, None
+        elif mode == "prefill":
+            def body(h, bp):
+                h, newc = self._block_apply(
+                    bp, h, positions=positions, image_embeds=image_embeds,
+                    bcache=None, mode="prefill", pos=pos,
+                )
+                return h, newc
+            x, newcaches = jax.lax.scan(body, x, params["blocks"])
+            return x, newcaches
+        else:  # decode
+            def body(h, xs):
+                bp, bc = xs
+                h, newc = self._block_apply(
+                    bp, h, positions=positions, image_embeds=image_embeds,
+                    bcache=bc, mode="decode", pos=pos,
+                )
+                return h, newc
+            x, newcaches = jax.lax.scan(body, x, (params["blocks"], caches))
+            return x, newcaches
+
+    def embed_inputs(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            return batch["embeds"].astype(self.dtype)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return x.astype(self.dtype)
+
+    def logits(self, params, hidden: jax.Array) -> jax.Array:
+        h = L.rmsnorm(hidden, params["final_norm"])
+        return h @ params["lm_head"]
+
+    # ------------------------------------------------------------- losses
+
+    def loss_fn(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Mean next-token cross-entropy (labels already shifted).
+
+        The CE is *sequence-chunked* (scan + remat): the (B, cS, V) logits
+        tile is the only vocab-sized buffer and is recomputed in backward —
+        a full (B, S, V) fp32 logits tensor would be tens of GB/device at
+        the 150k-vocab archs' train shapes.
+        """
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        S = x.shape[1]
+        hidden, _ = self.backbone(
+            params, x,
+            positions=jnp.arange(S),
+            image_embeds=batch.get("image_embeds"),
+            mode="train",
+        )
+        hidden = L.rmsnorm(hidden, params["final_norm"])
+        labels = batch["labels"].astype(jnp.int32)
+
+        cS = min(512, S)
+        nchunks = S // cS
+        if nchunks <= 1:
+            return self._ce(params, hidden, labels)
+
+        hc = hidden.reshape(hidden.shape[0], nchunks, cS, -1).transpose(
+            1, 0, 2, 3
+        )
+        lc = labels.reshape(labels.shape[0], nchunks, cS).transpose(1, 0, 2)
+
+        def chunk_loss(carry, args):
+            h, lab = args
+            return carry + self._ce_sum(params, h, lab), None
+
+        chunk_loss = jax.checkpoint(chunk_loss)
+        total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (hc, lc))
+        return total / (S * labels.shape[0])
+
+    def _ce(self, params, hidden, labels) -> jax.Array:
+        return self._ce_sum(params, hidden, labels) / (
+            labels.shape[0] * labels.shape[1]
+        )
+
+    def _ce_sum(self, params, hidden, labels) -> jax.Array:
+        logits = (hidden @ params["lm_head"]).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    # ------------------------------------------------------------- serving
+
+    def prefill(self, params, batch: Dict[str, jax.Array]):
+        """Forward over a full prompt; returns (logits, caches)."""
+        x = self.embed_inputs(params, batch)
+        S = x.shape[1]
+        hidden, caches = self.backbone(
+            params, x,
+            positions=jnp.arange(S),
+            image_embeds=batch.get("image_embeds"),
+            mode="prefill",
+        )
+        return self.logits(params, hidden), caches
+
+    def decode_step(self, params, caches, batch: Dict[str, jax.Array], pos):
+        """One decode step.  ``batch['tokens']`` is (B, 1); ``pos`` scalar."""
+        x = self.embed_inputs(params, batch)
+        hidden, caches = self.backbone(
+            params, x,
+            positions=pos[None] if jnp.ndim(pos) == 0 else pos,
+            image_embeds=batch.get("image_embeds"),
+            caches=caches, mode="decode", pos=pos,
+        )
+        return self.logits(params, hidden), caches
+
+
+def build(cfg: ArchConfig, mesh=None, dp_spec=None) -> LM:
+    return LM(cfg, mesh=mesh, dp_spec=dp_spec)

@@ -1,0 +1,92 @@
+"""Mixture-of-experts FFN (Qwen-MoE / Jamba style): top-k routing + grouped GEMM.
+
+Baseline impl (``moe_impl="tp"``): expert weights are TP-sharded on the FFN
+axis; tokens are sorted by expert id and pushed through ``jax.lax.ragged_dot``
+(grouped GEMM — MXU-native).  Communication is the same all-reduce as a dense
+TP FFN.
+
+Optimised impl (``moe_impl="ep"``, parallel/moe_ep.py): experts sharded over
+the ``model`` axis with all_to_all token routing inside shard_map — trades
+the expert-weight all-gather for token exchange; picked by the §Perf loop for
+the MoE-heavy cells.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, mlp_apply, mlp_init
+
+
+def pad_experts(num_experts: int, multiple: int = 16) -> int:
+    """Experts padded to the model-axis multiple (EP needs E % mesh == 0).
+
+    Pad experts have zero weights and −inf router logits — never routed to,
+    never contribute; they only square the sharding (qwen2's 60 → 64).
+    """
+    return -(-num_experts // multiple) * multiple
+
+
+def moe_init(
+    key, d_model: int, d_ff: int, num_experts: int,
+    num_shared: int, shared_ff: int, dtype,
+) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 5)
+    ep = pad_experts(num_experts)
+    def padded(w):
+        if ep == num_experts:
+            return w
+        return jnp.pad(w, ((0, ep - num_experts),) + ((0, 0),) * (w.ndim - 1))
+    p = {
+        "router": _dense_init(ks[0], (d_model, num_experts), jnp.float32),
+        "w_gate": padded(_dense_init(ks[1], (num_experts, d_model, d_ff), dtype)),
+        "w_up": padded(_dense_init(ks[2], (num_experts, d_model, d_ff), dtype)),
+        "w_down": padded(_dense_init(ks[3], (num_experts, d_ff, d_model), dtype)),
+    }
+    if num_shared:
+        p["shared"] = mlp_init(ks[4], d_model, shared_ff or d_ff * num_shared, dtype)
+    return p
+
+
+def moe_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,               # (B, S, D)
+    *,
+    experts_per_token: int,
+    router_weights_norm: bool = True,
+) -> jax.Array:
+    """Top-k routed MoE via sort + ragged_dot (token-dropless)."""
+    B, S, D = x.shape
+    E = p["router"].shape[1]          # logical experts (routing)
+    Ep = p["w_gate"].shape[0]         # padded experts (weights/groups)
+    k = experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                        # (T, k)
+    if router_weights_norm:
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # sort token-expert pairs by expert id -> contiguous expert groups
+    flat_e = topi.reshape(-1)                                   # (T·k,)
+    order = jnp.argsort(flat_e)                                 # (T·k,)
+    tok_of = order // k                                         # source token
+    xs = jnp.take(xt, tok_of, axis=0)                           # (T·k, D)
+    group_sizes = jnp.zeros((Ep,), jnp.int32).at[flat_e].add(1)
+
+    h = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)        # (T·k, F)
+    u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    a = jax.nn.silu(h) * u
+    out = jax.lax.ragged_dot(a.astype(xs.dtype), p["w_down"], group_sizes)
+
+    w = jnp.take(topv.reshape(-1), order).astype(out.dtype)     # routing weight
+    out = out * w[:, None]
+    y = jnp.zeros((T, D), out.dtype).at[tok_of].add(out)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xt)
+    return y.reshape(B, S, D).astype(x.dtype)

@@ -1,0 +1,215 @@
+"""Mamba2 (state-space duality / SSD) block — training scan + O(1) decode.
+
+Chunked SSD follows the minimal formulation of Dao & Gu (2024): the sequence
+is split into chunks; within a chunk the recurrence is expanded into a masked
+(quadratic-in-chunk) attention-like contraction that the MXU handles; across
+chunks a linear recurrence over the (H, P, N) states runs in a ``lax.scan``.
+Decode keeps the (B, H, P, N) state and the depthwise-conv tail — constant
+memory per token, which is what makes the ``long_500k`` cell tractable.
+
+Single B/C group (``n_groups=1``) as in mamba2-370m.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array   # (B, H, P, N) SSD state
+    conv: jax.Array    # (B, k-1, conv_dim) depthwise-conv tail
+
+
+def mamba_init(key, d_model: int, d_state: int, head_dim: int, expand: int,
+               conv_k: int, dtype) -> Dict[str, jax.Array]:
+    din = expand * d_model
+    nh = din // head_dim
+    conv_dim = din + 2 * d_state
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, 2 * din + 2 * d_state + nh), dtype),
+        "conv_w": _dense_init(ks[1], (conv_dim, conv_k), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),     # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus(-2) ≈ 0.12
+        "gnorm": jnp.ones((din,), dtype),
+        "out_proj": _dense_init(ks[2], (din, d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., T) -> (..., T, T) with out[i,j] = Σ_{j<t<=i} x[t]; -inf above diag."""
+    T = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., :, None], x.shape + (T,))      # out[i,j]=x[i]
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    xx = jnp.where(i > j, xx, 0.0)
+    seg = jnp.cumsum(xx, axis=-2)
+    return jnp.where(i >= j, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)  (already includes dt: x·Δ)
+    dA: jax.Array,     # (B, S, H)     log-decay per step: Δ·A  (negative)
+    Bm: jax.Array,     # (B, S, N)
+    Cm: jax.Array,     # (B, S, N)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    C_ = S // chunk
+    xc = x.reshape(B, C_, chunk, H, P).astype(jnp.float32)
+    dAc = dA.reshape(B, C_, chunk, H).transpose(0, 3, 1, 2)     # (B,H,C,l)
+    Bc = Bm.reshape(B, C_, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, C_, chunk, N).astype(jnp.float32)
+
+    A_cum = jnp.cumsum(dAc, axis=-1)                            # (B,H,C,l)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dAc))                                   # (B,H,C,l,l)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)              # (B,C,l,l)
+    y_diag = jnp.einsum(
+        "bcls,bhcls,bcshp->bclhp", scores, L, xc
+    )
+
+    # 2) chunk-final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)             # (B,H,C,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(A_cum[..., -1])                       # (B,H,C)
+    s0 = (
+        jnp.zeros((B, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s_prev, inp):
+        st_c, dec_c = inp                                       # (B,H,P,N),(B,H)
+        s_new = s_prev * dec_c[..., None, None] + st_c
+        return s_new, s_prev                                    # emit state *entering* chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,C,H,P,N)
+
+    # 4) state → output
+    state_decay = jnp.exp(A_cum)                                # (B,H,C,l)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (B, S, C); w (C, k); left-padded depthwise conv."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w.T[:, None, :],            # (k, 1, C) in (HWIO-ish) spec below
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def mamba_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                     # (B, S, D)
+    *,
+    d_state: int,
+    head_dim: int,
+    expand: int,
+    chunk: int,
+    cache: Optional[SSMCache] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[SSMCache]]:
+    B, S, D = x.shape
+    din = expand * D
+    nh = din // head_dim
+    conv_dim = din + 2 * d_state
+    k_conv = p["conv_w"].shape[1]
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [din, din + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                     # (nh,)
+
+    if decode:
+        assert cache is not None and S == 1
+        # conv tail: append current input, convolve last k positions
+        win = jnp.concatenate([cache.conv, xBC], axis=1)         # (B, k, conv)
+        conv_out = jnp.einsum("bkc,ck->bc", win, p["conv_w"]) + p["conv_b"]
+        xBC_t = jax.nn.silu(conv_out)                            # (B, conv)
+        xi, Bt, Ct = jnp.split(xBC_t, [din, din + d_state], axis=-1)
+        xh = xi.reshape(B, nh, head_dim).astype(jnp.float32)
+        dt_t = dt[:, 0]                                          # (B, nh)
+        dA = jnp.exp(dt_t * A)                                   # (B, nh)
+        dBx = jnp.einsum("bh,bhp,bn->bhpn", dt_t, xh, Bt.astype(jnp.float32))
+        state = cache.state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct.astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xh
+        y = y.reshape(B, 1, din).astype(x.dtype)
+        new_cache = SSMCache(state=state, conv=win[:, 1:])
+    else:
+        xBC_raw = xBC                                            # pre-conv tail
+        xBC = jax.nn.silu(causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xi, Bm, Cm = jnp.split(xBC, [din, din + d_state], axis=-1)
+        xh = xi.reshape(B, S, nh, head_dim)
+        dA = dt * A                                              # (B,S,nh)
+        # pad S to a chunk multiple: dt=0 ⇒ decay 1 (state preserved),
+        # x·dt=0 ⇒ no input; padded outputs are dropped below.
+        ck = min(chunk, S) if S % chunk else chunk
+        pad = (-S) % ck
+        def _p(t):
+            return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        y, final_state = ssd_chunked(
+            _p(xh.astype(jnp.float32) * dt[..., None]), _p(dA),
+            _p(Bm), _p(Cm), ck,
+            initial_state=cache.state if cache is not None else None,
+        )
+        y = y[:, :S] + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, din).astype(x.dtype)
+        tail = jnp.pad(xBC_raw, ((0, 0), (k_conv - 1, 0), (0, 0)))[
+            :, -(k_conv - 1):, :
+        ]
+        new_cache = SSMCache(state=final_state, conv=tail)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"])
+    return (y @ p["out_proj"]).astype(x.dtype), new_cache
+
+
+def mamba_cache_init(batch: int, d_model: int, d_state: int, head_dim: int,
+                     expand: int, conv_k: int, dtype=jnp.float32) -> SSMCache:
+    din = expand * d_model
+    nh = din // head_dim
+    return SSMCache(
+        state=jnp.zeros((batch, nh, head_dim, d_state), jnp.float32),
+        conv=jnp.zeros((batch, conv_k - 1, din + 2 * d_state), dtype),
+    )

@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update, OptState
+from repro.optim.schedules import cosine_warmup, robbins_monro
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "cosine_warmup",
+           "robbins_monro"]

@@ -1,0 +1,18 @@
+"""Learning-rate schedules: cosine+warmup (LM path) and Robbins–Monro (EM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def robbins_monro(step, *, tau0: float = 1.0, kappa: float = 0.9):
+    """paper eq. 18: ρ_s = (τ₀ + s)^(−κ), κ ∈ (0.5, 1]."""
+    return (tau0 + step.astype(jnp.float32)) ** (-kappa)

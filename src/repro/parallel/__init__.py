@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    param_pspecs,
+    lda_pspecs,
+)
+
+__all__ = [
+    "batch_pspecs",
+    "cache_pspecs",
+    "dp_axes",
+    "param_pspecs",
+    "lda_pspecs",
+]

@@ -1,0 +1,81 @@
+"""Collective helpers: RS+AG decompositions, overlap-friendly chunked folds.
+
+XLA SPMD inserts collectives implicitly under pjit; these helpers are used by
+the shard_map paths (EP MoE, pipeline, DP-explicit FOEM) and by the §Perf
+loop when it replaces an all-reduce with reduce-scatter + all-gather or
+splits a fold into tiles so the transfer overlaps with compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def psum_scatter_then_gather(x: jax.Array, axis_name: str, *, tiled: bool = True):
+    """all-reduce decomposed as reduce-scatter + all-gather.
+
+    Same result as ``lax.psum`` but exposes the two phases so callers can
+    interleave compute between them (and halves peak link pressure vs a
+    ring all-reduce of the full buffer on ICI).
+    """
+    rs = lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=tiled)
+    return lax.all_gather(rs, axis_name, axis=0, tiled=tiled)
+
+
+def chunked_psum(
+    x: jax.Array, axis_name: str, num_chunks: int,
+    between: Optional[Callable[[int], None]] = None,
+) -> jax.Array:
+    """psum performed in ``num_chunks`` slices along dim 0.
+
+    On TPU the slices pipeline through the ICI DMA engine while the VPU works
+    on whatever the (optional) ``between`` callback computes — the classic
+    collective/compute overlap pattern.  Semantically identical to one psum.
+    """
+    n = x.shape[0]
+    if num_chunks <= 1 or n % num_chunks:
+        return lax.psum(x, axis_name)
+    parts = jnp.split(x, num_chunks, axis=0)
+    out = []
+    for i, p in enumerate(parts):
+        out.append(lax.psum(p, axis_name))
+        if between is not None:
+            between(i)
+    return jnp.concatenate(out, axis=0)
+
+
+def ring_all_gather(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Explicit ring all-gather via collective_permute (N-1 hops).
+
+    Used where we want the *schedule* visible to the compiler (e.g. to
+    interleave per-hop compute), instead of the opaque all-gather.
+    Returns concatenation along a new leading axis in ring order.
+    """
+    idx = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    chunks = [x]
+    cur = x
+    for _ in range(axis_size - 1):
+        cur = lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    # chunk j came from shard (idx - j) mod N  ⇒  shard i's data sits at
+    # position j = (idx - i) mod N; gather into global shard order.
+    stacked = jnp.stack(chunks, axis=0)
+    src = jnp.mod(idx - jnp.arange(axis_size), axis_size)
+    return jnp.take(stacked, src, axis=0)
+
+
+def all_to_all_tokens(
+    x: jax.Array, axis_name: str, axis_size: int, *, split_axis: int = 0,
+    concat_axis: int = 0,
+) -> jax.Array:
+    """Thin wrapper over lax.all_to_all with the EP-router calling convention:
+    dim ``split_axis`` must be (axis_size · per_shard)."""
+    return lax.all_to_all(
+        x, axis_name, split_axis=split_axis, concat_axis=concat_axis,
+        tiled=True,
+    )

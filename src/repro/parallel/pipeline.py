@@ -1,0 +1,103 @@
+"""Pipeline parallelism: GPipe-style microbatched stage execution via
+``shard_map`` + ``lax.ppermute`` over a ``stage`` mesh axis.
+
+The production dry-run meshes use (data, model) / (pod, data, model); PP is
+an *additional* capability for >2-pod deployments where the model axis is
+exhausted (DESIGN.md §4): the block stack is split into S contiguous stages
+laid on a ``stage`` axis, activations flow stage→stage with collective
+permutes, and M ≥ S microbatches keep the bubble at (S−1)/(M+S−1).
+
+This module is exercised by tests on a host mesh (shard_map semantics are
+backend-independent); the schedule is the deliverable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,           # pytree with leading [stage-local] block axis
+    x_microbatches: jax.Array,   # (M, mb, ...) microbatched inputs (stage 0's)
+    *,
+    axis_name: str = "stage",
+    num_stages: int,
+) -> jax.Array:
+    """Run a GPipe forward schedule inside shard_map.
+
+    Each device holds one stage's params.  At tick t, the stage processes the
+    microbatch that arrived at tick t−1 and ppermutes its output downstream.
+    After M + S − 1 ticks every microbatch has traversed all stages; outputs
+    are collected on the *last* stage and rotated back to global order.
+    """
+    M = x_microbatches.shape[0]
+    S = num_stages
+    stage = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    mb_shape = x_microbatches.shape[1:]
+    # pvary: register buffers are device-varying over the stage axis
+    buf = jax.lax.pvary(
+        jnp.zeros(mb_shape, x_microbatches.dtype), axis_name
+    )
+    outs = jax.lax.pvary(
+        jnp.zeros((M,) + mb_shape, x_microbatches.dtype), axis_name
+    )
+
+    def tick(carry, t):
+        buf, outs = carry
+        # stage 0 ingests microbatch t (when in range)
+        take = jnp.clip(t, 0, M - 1)
+        injected = jnp.where(
+            (stage == 0) & (t < M), x_microbatches[take], buf
+        )
+        y = stage_fn(stage_params, injected)
+        # last stage: record microbatch (t - (S-1)) when valid
+        out_idx = t - (S - 1)
+        valid = (stage == S - 1) & (out_idx >= 0) & (out_idx < M)
+        upd = lax.dynamic_update_index_in_dim(
+            outs, y, jnp.clip(out_idx, 0, M - 1), 0
+        )
+        outs = jnp.where(valid, upd, outs)
+        buf = lax.ppermute(y, axis_name, perm)
+        return (buf, outs), None
+
+    (buf, outs), _ = lax.scan(tick, (buf, outs), jnp.arange(M + S - 1))
+    # replicate results from the last stage to all (psum of one-hot owner)
+    owner = (stage == S - 1).astype(outs.dtype)
+    return lax.psum(outs * owner, axis_name)
+
+
+def make_pipelined_apply(
+    stage_fn: Callable,
+    mesh: Mesh,
+    *,
+    num_stages: int,
+    num_microbatches: int,
+    axis_name: str = "stage",
+):
+    """Wrap a per-stage block fn into a full-model pipelined forward."""
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(None)),   # params stage-sharded, x replicated
+        out_specs=P(None),
+    )
+    def run(stage_params, x):
+        stage_params = jax.tree.map(lambda a: a[0], stage_params)
+        M = num_microbatches
+        xm = x.reshape((M, x.shape[0] // M) + x.shape[1:])
+        out = pipeline_forward(
+            stage_fn, stage_params, xm,
+            axis_name=axis_name, num_stages=num_stages,
+        )
+        return out.reshape(x.shape[:1] + out.shape[2:])
+
+    return run

@@ -1,0 +1,258 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Axes: ``data`` (DP; documents/sequences), ``model`` (TP; heads, FFN hidden,
+vocab, experts, SSM heads, or — for the paper's LDA — vocabulary shards of
+φ̂), optional ``pod`` (extra DP across pods).
+
+Rules (baseline; the §Perf loop perturbs them):
+  * embed (V, D)          → (model, None)      vocab-sharded, gather per token
+  * lm_head (D, V)        → (None, model)      logits sharded over vocab
+  * attn wq/wk/wv (D, H·h)→ (None, model)      head-sharded (Megatron TP)
+    — kv projections for archs with kv_heads < model_size are REPLICATED
+      on the model axis (MQA: kv=1) and the sequence axis of their caches is
+      sharded instead (sequence parallelism).
+  * attn wo (H·h, D)      → (model, None)
+  * mlp gate/up (D, F)    → (None, model); down (F, D) → (model, None)
+  * MoE experts (E, D, F) → (None, None, model) [TP impl] — the EP impl
+    (moe_impl="ep") shards E over model inside shard_map instead.
+  * mamba in_proj         → (None, model); out_proj → (model, None);
+    per-feature vectors (conv, A_log, D, dt_bias, gnorm) sharded on dim 0.
+  * norms                 → replicated
+  * FSDP (cfg.fsdp)       → additionally shard the first free ≥data-divisible
+    axis of every ≥2-D weight over ``data`` (ZeRO-3-style; optimizer state
+    follows parameters automatically since it is spec'd identically).
+
+Stacked super-block params get a leading None (the scan/block axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.lm import LM
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel mesh axes ('pod' folded in when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= _axis_size(mesh, a)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_BASE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("model", None),
+    "lm_head": (None, "model"),
+    "final_norm": (None,),
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "wo": ("model", None),
+    "gate": (None, "model"),
+    "up": (None, "model"),
+    "down": ("model", None),
+    "router": (None, None),
+    "w_gate": (None, None, "model"),
+    "w_up": (None, None, "model"),
+    "w_down": (None, "model", None),
+    "in_proj": (None, "model"),
+    "out_proj": ("model", None),
+    "conv_w": ("model", None),
+    "conv_b": ("model",),
+    "A_log": ("model",),
+    "D": ("model",),
+    "dt_bias": ("model",),
+    "gnorm": ("model",),
+    "norm1": (None,),
+    "norm2": (None,),
+    "xnorm": (None,),
+}
+
+
+def _leaf_rule(path, leaf, cfg: ArchConfig, mesh: Mesh) -> P:
+    keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    name = keys[-1]
+    in_block = "blocks" in keys
+    msize = _axis_size(mesh, "model")
+    no_tp = getattr(cfg, "tp_size", 0) == 1
+    rule = _BASE_RULES.get(name)
+    if rule is None or no_tp:
+        rule = tuple(None for _ in leaf.shape)
+    rule = list(rule)
+
+    # kv projections whose HEADS cannot split over the model axis -> replicate
+    # (sharding the fused KV·hd dim would cut inside head_dim and force the
+    # partitioner to all-reduce (BH, S, S) score partials — measured 34 GB/op)
+    if name in ("wk", "wv") and cfg.num_kv_heads % msize != 0:
+        rule = [None, None]
+    # EP MoE: expert weights live expert-sharded over the model axis — the
+    # resident layout must MATCH the shard_map in_specs or XLA re-shards the
+    # whole expert stack every layer (measured ~1.5 TB/step on qwen3)
+    if cfg.moe_impl == "ep" and name in ("w_gate", "w_up", "w_down"):
+        rule = ["model", None, None]
+    # vectors too small to shard (reduced smoke configs)
+    shape = leaf.shape[1:] if in_block else leaf.shape
+    for i, ax in enumerate(rule):
+        if ax == "model" and (i >= len(shape) or shape[i] % msize != 0):
+            rule[i] = None
+
+    # FSDP / ZeRO-3: shard the first free axis over data (tp_size==1: over
+    # the combined data×model grid — the model axis is pure DP then)
+    if (cfg.fsdp or no_tp) and len(shape) >= 2 and name not in ("router",):
+        axes = ("data", "model") if no_tp else ("data",)
+        dsize = 1
+        for a in axes:
+            dsize *= _axis_size(mesh, a)
+        for i in range(len(shape)):
+            if rule[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+                rule[i] = axes if no_tp else "data"
+                break
+
+    if in_block:
+        rule = [None] + rule        # leading super-block axis
+    # pad/trim to rank
+    rule = rule[: leaf.ndim] + [None] * (leaf.ndim - len(rule))
+    return P(*rule)
+
+
+def param_pspecs(model: LM, mesh: Mesh):
+    """PartitionSpec pytree matching ``model.abstract_params()``."""
+    abstract = model.abstract_params()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_rule(path, leaf, model.cfg, mesh), abstract
+    )
+
+
+def zero1_pspecs(model: LM, mesh: Mesh):
+    """Optimizer-state specs: param specs + `data` on the first free axis.
+
+    ZeRO-1: Adam moments (2× fp32 = the bulk of train state) shard over the
+    data axis; parameters stay in their TP layout, so the only extra
+    collective is ONE gather of the update per step — unlike ZeRO-3's
+    per-layer weight gathers, which this XLA pipeline hoists pathologically
+    (EXPERIMENTS.md §Perf g2/g4).
+    """
+    abstract = model.abstract_params()
+    base = param_pspecs(model, mesh)
+    dsize = _axis_size(mesh, "data")
+
+    def add_data(leaf, spec):
+        rule = list(spec) + [None] * (leaf.ndim - len(spec))
+        if leaf.ndim >= 2:
+            for i in range(leaf.ndim):
+                if rule[i] is None and leaf.shape[i] % dsize == 0 \
+                        and leaf.shape[i] >= dsize:
+                    rule[i] = "data"
+                    break
+        return P(*rule)
+
+    return jax.tree.map(
+        add_data, abstract, base,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    if getattr(cfg, "tp_size", 0) == 1:
+        dp = dp + ("model",)        # model axis is pure DP in no-TP mode
+    B = shape.global_batch
+    dsz = 1
+    for a in dp:
+        dsz *= mesh.shape[a]
+    bdim = dp if B % dsz == 0 else None              # long_500k: B=1
+    specs: Dict[str, P] = {}
+    if cfg.frontend == "audio_frames":
+        specs["embeds"] = P(bdim, None, None)
+    else:
+        specs["tokens"] = P(bdim, None)
+    specs["labels"] = P(bdim, None)
+    if cfg.frontend == "image_patches":
+        specs["image_embeds"] = P(bdim, None, None)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(model: LM, shape: ShapeConfig, mesh: Mesh):
+    """Specs for the stacked decode caches.
+
+    KV cache (nblk, B, KV, S, hd): batch over dp when divisible; heads over
+    model when divisible, else the *sequence* axis over model (SP — the
+    long-context / MQA fallback).
+    """
+    cfg = model.cfg
+    dp = dp_axes(mesh)
+    msize = _axis_size(mesh, "model")
+    B = shape.global_batch
+    bdim = dp if B % _dp_size(mesh) == 0 else None
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = keys[-1]
+        if name in ("k", "v"):
+            if cfg.num_kv_heads % msize == 0:
+                return P(None, bdim, "model", None, None)
+            return P(None, bdim, None, "model", None)    # sequence-parallel KV
+        if name == "state":      # (nblk, B, nh, hp, ns)
+            nh = leaf.shape[2]
+            return P(None, bdim, "model" if nh % msize == 0 else None, None, None)
+        if name == "conv":       # (nblk, B, k-1, conv_dim)
+            cd = leaf.shape[3]
+            return P(None, bdim, None, "model" if cd % msize == 0 else None)
+        return P(*([None] * leaf.ndim))
+
+    abstract = model.abstract_cache(shape.global_batch, shape.seq_len)
+    return jax.tree_util.tree_map_with_path(spec_for, abstract)
+
+
+# ---------------------------------------------------------------------------
+# the paper's LDA state (φ̂ vocab-sharded — the parameter-streaming analogue)
+# ---------------------------------------------------------------------------
+
+def lda_pspecs(mesh: Mesh, *, shard_topics: bool = False):
+    """Specs for GlobalStats: φ̂ (W, K) sharded over the model axis.
+
+    ``shard_topics=False`` (default) shards the *vocabulary* axis — the
+    direct analogue of the paper's parameter streaming (each chip owns W/16
+    columns).  ``shard_topics=True`` shards K instead (all-gather-free
+    E-step, all-reduce on the normaliser) — the §Perf alternative.
+    """
+    if shard_topics:
+        phi_wk = P(None, "model")
+        phi_k = P("model")
+    else:
+        phi_wk = P("model", None)
+        phi_k = P(None)
+    from repro.core.types import GlobalStats
+
+    return GlobalStats(phi_wk=phi_wk, phi_k=phi_k, step=P())
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (
+    BoundedStalenessMerger,
+    StragglerMonitor,
+)
+
+__all__ = ["BoundedStalenessMerger", "StragglerMonitor"]

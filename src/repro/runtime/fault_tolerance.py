@@ -1,0 +1,98 @@
+"""Fault tolerance & straggler mitigation for the streaming EM runtime.
+
+Two mechanisms, both exploiting stochastic-approximation slack (paper
+eq. 19: any valid sufficient-statistics fold improves the bound — *order*
+across minibatches is free):
+
+* ``StragglerMonitor`` — tracks per-shard step latencies (EWMA + deviation);
+  shards slower than ``threshold × median`` are flagged.  The trainer then
+  either (a) re-issues the minibatch elsewhere (restartable because the
+  global φ̂ is externalised — paper §3.2), or (b) accepts the late delta via
+  the merger below.
+
+* ``BoundedStalenessMerger`` — holds per-shard pending Δφ̂ contributions and
+  folds them up to ``max_staleness`` rounds late.  In ``accumulate`` mode
+  (FOEM eq. 33) the fold is commutative+associative, so a late fold is
+  *exactly* equivalent to an on-time one — staleness costs freshness of the
+  E-step's φ̂ view, not correctness.  Tests assert the order-invariance.
+
+Checkpoint/restart: launch/train.py persists (params/stats, opt state, data
+cursor, RNG) through checkpoint/ckpt.py; the FOEM path additionally has the
+always-external ParameterStore.  A killed run resumes at the last cursor —
+exercised in tests/test_fault_tolerance.py by killing mid-stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ShardStats:
+    ewma: float = 0.0
+    n: int = 0
+
+    def update(self, dt: float, alpha: float = 0.3) -> None:
+        self.ewma = dt if self.n == 0 else (1 - alpha) * self.ewma + alpha * dt
+        self.n += 1
+
+
+class StragglerMonitor:
+    """Flags shards whose step latency exceeds threshold × median EWMA."""
+
+    def __init__(self, threshold: float = 2.0, warmup_steps: int = 3):
+        self.threshold = threshold
+        self.warmup = warmup_steps
+        self.stats: Dict[int, ShardStats] = defaultdict(ShardStats)
+
+    def record(self, shard: int, seconds: float) -> None:
+        self.stats[shard].update(seconds)
+
+    def median_latency(self) -> float:
+        vals = [s.ewma for s in self.stats.values() if s.n >= 1]
+        return float(np.median(vals)) if vals else 0.0
+
+    def stragglers(self) -> List[int]:
+        med = self.median_latency()
+        if med <= 0:
+            return []
+        return [
+            k for k, s in self.stats.items()
+            if s.n >= self.warmup and s.ewma > self.threshold * med
+        ]
+
+    def should_reissue(self, shard: int) -> bool:
+        return shard in self.stragglers()
+
+
+class BoundedStalenessMerger:
+    """Collects per-shard Δ-statistics and folds them within a staleness bound.
+
+    ``submit(shard, round, delta)`` parks a contribution; ``drain(round)``
+    returns every delta whose age ≤ max_staleness and drops (reporting) the
+    rest — the trainer re-issues dropped minibatches.
+    """
+
+    def __init__(self, max_staleness: int = 1):
+        self.max_staleness = max_staleness
+        self.pending: Deque[Tuple[int, int, object]] = deque()
+        self.dropped: List[Tuple[int, int]] = []
+
+    def submit(self, shard: int, round_idx: int, delta) -> None:
+        self.pending.append((shard, round_idx, delta))
+
+    def drain(self, current_round: int) -> List[object]:
+        ready, keep = [], deque()
+        while self.pending:
+            shard, rnd, delta = self.pending.popleft()
+            age = current_round - rnd
+            if age <= self.max_staleness:
+                ready.append(delta)
+            else:
+                self.dropped.append((shard, rnd))
+        self.pending = keep
+        return ready

@@ -1,0 +1,4 @@
+from repro.sparse.docword import DocWordMatrix, bucketize
+from repro.sparse.minibatch import MinibatchStream
+
+__all__ = ["DocWordMatrix", "bucketize", "MinibatchStream"]

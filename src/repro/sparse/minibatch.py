@@ -1,0 +1,93 @@
+"""Minibatch streaming over a (possibly unbounded) document source.
+
+The stream yields fixed-shape bucketed minibatches — the unit both the FOEM
+trainer and the pjit path consume.  Shapes are static per stream (XLA-friendly)
+with one bucket length chosen from a warmup sample quantile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.sparse.docword import DocWordMatrix, bucket_length, bucketize, localize_vocab
+
+
+@dataclasses.dataclass
+class Minibatch:
+    """Host-side minibatch with both global and local (vocab-major) views."""
+
+    word_ids: np.ndarray        # (D_s, L) global vocab ids
+    counts: np.ndarray          # (D_s, L)
+    local_vocab: np.ndarray     # (W_s,)  global ids of this minibatch's vocab
+    local_word_ids: np.ndarray  # (D_s, L) ids into local_vocab
+    index: int                  # minibatch counter s
+
+    @property
+    def num_docs(self) -> int:
+        return self.word_ids.shape[0]
+
+    @property
+    def nnz(self) -> float:
+        return float((self.counts > 0).sum())
+
+    def ntokens(self) -> float:
+        return float(self.counts.sum())
+
+
+class MinibatchStream:
+    """Cut a DocWordMatrix (or an endless generator of them) into minibatches.
+
+    ``epochs=None`` yields forever (the paper's lifelong stream); the document
+    order is reshuffled per epoch.
+    """
+
+    def __init__(
+        self,
+        corpus: DocWordMatrix,
+        minibatch_docs: int,
+        *,
+        bucket_len: Optional[int] = None,
+        seed: int = 0,
+        epochs: Optional[int] = 1,
+        drop_remainder: bool = True,
+    ):
+        self.corpus = corpus
+        self.D_s = int(minibatch_docs)
+        self.epochs = epochs
+        self.drop_remainder = drop_remainder
+        self.rng = np.random.default_rng(seed)
+        if bucket_len is None:
+            lens = np.diff(corpus.indptr)
+            q = int(np.quantile(lens, 0.98)) if len(lens) else 1
+            bucket_len = bucket_length(max(q, int(lens.max()) if len(lens) else 1))
+        self.bucket_len = bucket_len
+
+    def __iter__(self) -> Iterator[Minibatch]:
+        s = 0
+        epoch = 0
+        while self.epochs is None or epoch < self.epochs:
+            order = self.rng.permutation(self.corpus.num_docs)
+            for lo in range(0, len(order), self.D_s):
+                ids = order[lo : lo + self.D_s]
+                if len(ids) < self.D_s:
+                    if self.drop_remainder:
+                        break
+                    ids = np.concatenate([ids, order[: self.D_s - len(ids)]])
+                word_ids, counts = bucketize(
+                    self.corpus, ids, bucket_len=self.bucket_len
+                )
+                uniq, local = localize_vocab(word_ids)
+                s += 1
+                yield Minibatch(
+                    word_ids=word_ids,
+                    counts=counts,
+                    local_vocab=uniq,
+                    local_word_ids=local,
+                    index=s,
+                )
+            epoch += 1
+
+    def num_minibatches_per_epoch(self) -> int:
+        return self.corpus.num_docs // self.D_s

@@ -1,0 +1,40 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the 512-device override is
+# exclusively for launch/dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LDAConfig, MinibatchData
+from repro.data import synthetic_lda_corpus
+from repro.sparse import MinibatchStream
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    corpus, true_phi = synthetic_lda_corpus(
+        96, 240, 6, mean_doc_len=50, seed=7
+    )
+    return corpus, true_phi
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return LDAConfig(num_topics=6, vocab_size=240, max_sweeps=16,
+                     iem_blocks=4)
+
+
+@pytest.fixture(scope="session")
+def tiny_batch(tiny_corpus):
+    import jax.numpy as jnp
+
+    corpus, _ = tiny_corpus
+    stream = MinibatchStream(corpus, 48, seed=0, epochs=1)
+    mb = next(iter(stream))
+    return MinibatchData(jnp.asarray(mb.word_ids), jnp.asarray(mb.counts))

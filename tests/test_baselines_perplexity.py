@@ -1,0 +1,92 @@
+"""Online baselines (SEM/OVB/SCVB/OGS) + predictive-perplexity protocol."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GlobalStats, LDAConfig, MinibatchData, foem, sem
+from repro.core.baselines import ogs_step, ovb_step, scvb_step
+from repro.core.perplexity import predictive_perplexity, split_heldout_counts
+from repro.sparse import MinibatchStream
+from repro.sparse.docword import bucketize
+
+
+STEPS = {"sem": sem.sem_step, "ovb": ovb_step, "scvb": scvb_step,
+         "ogs": ogs_step}
+
+
+@pytest.mark.parametrize("algo", sorted(STEPS))
+def test_baseline_step_runs(algo, tiny_batch, tiny_cfg):
+    cfg = dataclasses.replace(tiny_cfg, max_sweeps=8, rho_mode="stepwise")
+    stats = GlobalStats.zeros(cfg)
+    new_stats, local, diag = STEPS[algo](
+        jax.random.PRNGKey(0), tiny_batch, stats, cfg
+    )
+    assert int(new_stats.step) == 1
+    assert np.isfinite(float(diag.final_train_ppl))
+    assert float(new_stats.phi_k.sum()) > 0
+    assert np.all(np.asarray(new_stats.phi_wk) >= 0)
+
+
+def _train(algo_step, corpus, cfg, steps=6, **kw):
+    stats = GlobalStats.zeros(cfg)
+    key = jax.random.PRNGKey(0)
+    for i, mb in enumerate(MinibatchStream(corpus, 32, seed=3, epochs=4)):
+        if i >= steps:
+            break
+        batch = MinibatchData(jnp.asarray(mb.word_ids), jnp.asarray(mb.counts))
+        key, sub = jax.random.split(key)
+        stats, _, _ = algo_step(sub, batch, stats, cfg, **kw)
+    return stats
+
+
+def _predictive(corpus, stats, cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = list(range(corpus.num_docs - 24, corpus.num_docs))
+    w, c = bucketize(corpus, ids)
+    est, ev = split_heldout_counts(c, rng)
+    return float(predictive_perplexity(
+        jax.random.PRNGKey(1),
+        MinibatchData(jnp.asarray(w), jnp.asarray(est)),
+        MinibatchData(jnp.asarray(w), jnp.asarray(ev)),
+        stats.phi_wk, stats.phi_k, cfg, fit_sweeps=30,
+    ))
+
+
+def test_foem_beats_ovb_predictive_perplexity(tiny_corpus, tiny_cfg):
+    """paper Figs. 9/11/12: the EM posterior yields lower perplexity than
+    the VB-family baselines (loose CPU-scale check)."""
+    corpus, _ = tiny_corpus
+    cfg_em = dataclasses.replace(tiny_cfg, active_topics=3, max_sweeps=12)
+    # paper §4: all algorithms share α−1 = β−1 = 0.01 in the main runs
+    cfg_vb = dataclasses.replace(
+        tiny_cfg, max_sweeps=12, rho_mode="stepwise",
+    )
+    stats_em = _train(foem.foem_step, corpus, cfg_em)
+    stats_vb = _train(ovb_step, corpus, cfg_vb)
+    p_em = _predictive(corpus, stats_em, cfg_em)
+    p_vb = _predictive(corpus, stats_vb, cfg_vb)
+    assert p_em < p_vb * 1.15, (p_em, p_vb)
+    assert 1 < p_em < tiny_cfg.W
+
+
+def test_scvb_equiv_sem_shape_behaviour(tiny_batch, tiny_cfg):
+    """paper Table 3: SCVB ≡ SEM up to pseudo-count constants — both must
+    produce the same sufficient-statistics mass."""
+    cfg = dataclasses.replace(tiny_cfg, max_sweeps=6, rho_mode="stepwise")
+    s1, _, _ = sem.sem_step(jax.random.PRNGKey(0), tiny_batch,
+                            GlobalStats.zeros(cfg), cfg)
+    s2, _, _ = scvb_step(jax.random.PRNGKey(0), tiny_batch,
+                         GlobalStats.zeros(cfg), cfg)
+    m1, m2 = float(s1.phi_k.sum()), float(s2.phi_k.sum())
+    assert m1 == pytest.approx(m2, rel=1e-3)
+
+
+def test_split_heldout_counts_partition():
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 6, (10, 20)).astype(np.float32)
+    est, ev = split_heldout_counts(counts, rng)
+    np.testing.assert_allclose(est + ev, counts)
+    assert est.sum() > ev.sum()      # ~80/20

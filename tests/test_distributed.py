@@ -1,0 +1,232 @@
+"""Distributed semantics on an 8-fake-device host mesh (subprocess so the
+XLA device-count flag never leaks into the rest of the suite)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(body: str) -> str:
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        """
+    ) + textwrap.dedent(body)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_ep_moe_matches_tp_moe():
+    """shard_map EP MoE ≡ single-device sort+ragged_dot MoE (no drops)."""
+    _run("""
+    from repro.models import moe as moe_lib
+    from repro.parallel.moe_ep import moe_apply_ep
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    D, F, E, k = 16, 32, 8, 2
+    p = moe_lib.moe_init(jax.random.PRNGKey(0), D, F, E, 1, 32, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 8, D)).astype(np.float32))
+    ref = moe_lib.moe_apply(p, x, experts_per_token=k)
+    with mesh:
+        out = jax.jit(lambda p, x: moe_apply_ep(
+            p, x, experts_per_token=k, mesh=mesh, dp_spec=("data",),
+            capacity_factor=8.0,     # high cap => dropless => exact match
+        ))(p, x)
+    err = np.abs(np.asarray(out) - np.asarray(ref)).max()
+    assert err < 2e-4, err
+    print("ep==tp ok", err)
+    """)
+
+
+def test_pipeline_forward_matches_sequential():
+    _run("""
+    from repro.parallel.pipeline import make_pipelined_apply
+    mesh = jax.make_mesh((4,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    S, D = 4, 16                      # 4 stages
+    Ws = jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32)) * 0.3
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    x = jnp.asarray(rng.normal(size=(8, D)).astype(np.float32))
+    ref = x
+    for i in range(S):
+        ref = stage_fn(Ws[i], ref)
+
+    run = make_pipelined_apply(stage_fn, mesh, num_stages=S,
+                               num_microbatches=4)
+    out = run(Ws, x)
+    err = np.abs(np.asarray(out) - np.asarray(ref)).max()
+    assert err < 1e-5, err
+    print("pipeline ok", err)
+    """)
+
+
+def test_compressed_psum_close_to_exact():
+    _run("""
+    from repro.parallel.compression import compressed_psum, ef_init
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
+
+    def body(xs):
+        out, _ = compressed_psum(xs, "data", ef_init(xs))
+        return out
+
+    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+                                out_specs=P("data")))(x)
+    exact = np.asarray(x).sum(0)
+    got = np.asarray(out)[0]
+    rel = np.abs(got - exact).max() / (np.abs(exact).max() + 1e-9)
+    assert rel < 0.02, rel
+    print("compressed psum ok", rel)
+    """)
+
+
+def test_collective_helpers_semantics():
+    """collectives.py: RS+AG ≡ psum; chunked psum ≡ psum; ring all-gather."""
+    _run("""
+    from repro.parallel.collectives import (
+        chunked_psum, psum_scatter_then_gather, ring_all_gather)
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16, 32)).astype(np.float32))
+
+    def body(xs):
+        xs = xs[0]                                  # (16, 32) per shard
+        a = psum_scatter_then_gather(xs, "data")    # dim0 16 % 8 == 0
+        b = chunked_psum(xs, "data", num_chunks=4)
+        c = jax.lax.psum(xs, "data")
+        g = ring_all_gather(xs[:1], "data", 8)      # (8, 1, 32), global order
+        return a, b, c, g
+
+    a, b, c, g = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=P("data"),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    ))(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(c), rtol=1e-5,
+                               atol=1e-5)
+    # ring gather row j == shard j's first row (global order after roll)
+    np.testing.assert_allclose(np.asarray(g)[:, 0], np.asarray(x)[:, 0],
+                               rtol=1e-6)
+    print("collectives ok")
+    """)
+
+
+def test_elastic_reshard_across_meshes():
+    _run("""
+    import tempfile
+    from repro.checkpoint import save_checkpoint, restore_checkpoint
+    from repro.checkpoint.elastic import reshard
+    mesh_a = jax.make_mesh((8, 1), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tree = {"w": jnp.arange(64.0).reshape(8, 8),
+            "b": jnp.arange(8.0)}
+    spec = {"w": P("data", "model"), "b": P(None)}
+    placed = reshard(tree, spec, mesh_a)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, placed)
+        _, host = restore_checkpoint(d, tree)
+        moved = reshard(host, spec, mesh_b)
+    np.testing.assert_allclose(np.asarray(moved["w"]), np.asarray(tree["w"]))
+    shard_shapes = {s.data.shape for s in moved["w"].addressable_shards}
+    assert shard_shapes == {(4, 2)}, shard_shapes
+    print("elastic ok")
+    """)
+
+
+def test_foem_sharded_stream_quality_and_mass():
+    """Shard-local FOEM (core/foem_sharded.py): mass conservation + learning
+    on a (data=2, model=4) mesh, both Δφ̂ fold cadences."""
+    _run("""
+    import dataclasses
+    from repro.core import GlobalStats, LDAConfig, MinibatchData
+    from repro.core.foem_sharded import foem_step_sharded
+    from repro.data import synthetic_lda_corpus
+    from repro.sparse import MinibatchStream
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    corpus, _ = synthetic_lda_corpus(128, 300, 8, mean_doc_len=50, seed=3)
+    base = LDAConfig(num_topics=16, vocab_size=300, max_sweeps=20,
+                     iem_blocks=2, active_topics=8, topk_shards=4,
+                     ppl_check_every=5)
+    sh = GlobalStats(phi_wk=NamedSharding(mesh, P(None, "model")),
+                     phi_k=NamedSharding(mesh, P("model")),
+                     step=NamedSharding(mesh, P()))
+    for fold in ("sweep", "minibatch"):
+        cfg = dataclasses.replace(base, dp_fold=fold)
+        stats = jax.device_put(GlobalStats.zeros(cfg), sh)
+        key = jax.random.PRNGKey(0)
+        tokens = 0.0
+        ppls = []
+        with mesh:
+            fn = jax.jit(lambda k, b, s: foem_step_sharded(k, b, s, cfg, mesh))
+            for i, mb in enumerate(MinibatchStream(corpus, 32, seed=0,
+                                                   epochs=3)):
+                if i >= 6:
+                    break
+                b = MinibatchData(jnp.asarray(mb.word_ids),
+                                  jnp.asarray(mb.counts))
+                key, sub = jax.random.split(key)
+                stats, ppl = fn(sub, b, stats)
+                tokens += float(b.counts.sum())
+                ppls.append(float(ppl))
+        mass = float(stats.phi_k.sum())
+        assert abs(mass - tokens) / tokens < 1e-3, (fold, mass, tokens)
+        assert min(ppls[2:]) < ppls[0], (fold, ppls)
+        phi = np.asarray(stats.phi_wk)
+        assert (phi >= -1e-4).all()
+        print(fold, "ok", ppls[-1])
+    """)
+
+
+def test_lda_pjit_vocab_sharded_step():
+    """FOEM step under pjit with φ̂ vocab-sharded over the model axis —
+    the pod-scale parameter-streaming analogue (small sizes, 8 devices)."""
+    _run("""
+    from repro.core import GlobalStats, LDAConfig, MinibatchData, foem
+    from repro.parallel.sharding import lda_pspecs
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = LDAConfig(num_topics=8, vocab_size=64, max_sweeps=6,
+                    iem_blocks=2, active_topics=4)
+    rng = np.random.default_rng(0)
+    wid = jnp.asarray(rng.integers(0, 64, (8, 16)), jnp.int32)
+    cnt = jnp.asarray(rng.integers(0, 3, (8, 16)).astype(np.float32))
+    batch = MinibatchData(wid, cnt)
+    stats = GlobalStats.zeros(cfg)
+    specs = lda_pspecs(mesh, shard_topics=True)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    stats = jax.device_put(stats, sh)
+    with mesh:
+        new_stats, local, diag = jax.jit(
+            lambda k, b, s: foem.foem_step(k, b, s, cfg)
+        )(jax.random.PRNGKey(0), batch, stats)
+    assert np.isfinite(float(diag.final_train_ppl))
+    np.testing.assert_allclose(float(new_stats.phi_k.sum()),
+                               float(cnt.sum()), rtol=1e-3)
+    print("lda pjit ok", float(diag.final_train_ppl))
+    """)

@@ -1,0 +1,99 @@
+"""Core EM invariants: monotonicity, oracle equivalence, mass conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LDAConfig, MinibatchData, em
+
+
+def _mu0(key, batch, K):
+    return jax.random.dirichlet(
+        key, jnp.ones(K), batch.word_ids.shape
+    ).astype(jnp.float32)
+
+
+def test_bem_monotone_loglik(tiny_batch, tiny_cfg):
+    """paper eq. 12: BEM monotonically improves the MAP objective."""
+    mu0 = _mu0(jax.random.PRNGKey(0), tiny_batch, tiny_cfg.K)
+    _, _, _, lls = em.bem_fit(tiny_batch, mu0, tiny_cfg, sweeps=12)
+    lls = np.asarray(lls)
+    assert np.all(np.diff(lls) >= -1e-2), f"not monotone: {lls}"
+
+
+def test_iem_converges_faster_than_bem(tiny_batch, tiny_cfg):
+    """paper §2.2: T_IEM < T_BEM — IEM reaches a higher ll in equal sweeps."""
+    mu0 = _mu0(jax.random.PRNGKey(1), tiny_batch, tiny_cfg.K)
+    _, _, _, ll_b = em.bem_fit(tiny_batch, mu0, tiny_cfg, sweeps=10)
+    _, _, _, ll_i = em.iem_fit(tiny_batch, mu0, tiny_cfg, sweeps=10)
+    assert float(ll_i[-1]) >= float(ll_b[-1]) - 1e-3
+
+
+def test_blocked_iem_matches_serial_oracle_single_doc():
+    """B == L blocked IEM ≡ the paper's serial per-non-zero IEM (Fig. 2)."""
+    rng = np.random.default_rng(0)
+    L, K, W = 8, 5, 40
+    word_ids = rng.permutation(W)[:L].reshape(1, L).astype(np.int32)
+    counts = rng.integers(1, 5, size=(1, L)).astype(np.float32)
+    mu0 = rng.dirichlet(np.ones(K), size=(1, L)).astype(np.float32)
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    mu_np, theta_np, phi_np = em.iem_exact_numpy(
+        word_ids, counts, mu0, cfg, sweeps=4
+    )
+    batch = MinibatchData(jnp.asarray(word_ids), jnp.asarray(counts))
+    local, phi, _, _ = em.iem_fit(
+        batch, jnp.asarray(mu0), cfg, sweeps=4, num_blocks=L
+    )
+    np.testing.assert_allclose(np.asarray(local.mu), mu_np, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(phi), phi_np, atol=2e-4)
+
+
+def test_sufficient_stats_mass_conservation(tiny_batch, tiny_cfg):
+    """Σ_k θ̂_d(k) == doc token count; Σ φ̂ == total tokens (EM invariant)."""
+    mu0 = _mu0(jax.random.PRNGKey(2), tiny_batch, tiny_cfg.K)
+    local, phi, ptot, _ = em.iem_fit(tiny_batch, mu0, tiny_cfg, sweeps=5)
+    doc_tokens = np.asarray(tiny_batch.counts.sum(axis=1))
+    np.testing.assert_allclose(
+        np.asarray(local.theta_dk.sum(-1)), doc_tokens, rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        float(ptot.sum()), float(tiny_batch.counts.sum()), rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(phi.sum(0)), np.asarray(ptot), rtol=1e-4
+    )
+
+
+def test_estep_rows_normalised(tiny_batch, tiny_cfg):
+    mu0 = _mu0(jax.random.PRNGKey(3), tiny_batch, tiny_cfg.K)
+    theta = em.fold_theta(mu0, tiny_batch.counts)
+    phi, ptot = em.fold_phi(
+        mu0, tiny_batch.counts, tiny_batch.word_ids, tiny_cfg.W
+    )
+    rows = em.gather_phi_rows(phi, tiny_batch.word_ids)
+    mu = em.estep(theta[:, None, :], rows, ptot, tiny_cfg)
+    np.testing.assert_allclose(
+        np.asarray(mu.sum(-1)), 1.0, atol=1e-5
+    )
+    assert np.all(np.asarray(mu) >= 0)
+
+
+def test_normalizers():
+    cfg = LDAConfig(num_topics=4, vocab_size=10)
+    theta = jnp.asarray(np.random.default_rng(0).gamma(2, 1, (3, 4)),
+                        jnp.float32)
+    tn = em.normalize_theta(theta, cfg)
+    np.testing.assert_allclose(np.asarray(tn.sum(-1)), 1.0, atol=1e-5)
+    phi = jnp.asarray(np.random.default_rng(1).gamma(2, 1, (10, 4)),
+                      jnp.float32)
+    pn = em.normalize_phi(phi, phi.sum(0), cfg)
+    np.testing.assert_allclose(np.asarray(pn.sum(0)), 1.0, atol=1e-4)
+
+
+def test_training_perplexity_bounded_by_vocab(tiny_batch, tiny_cfg):
+    mu0 = _mu0(jax.random.PRNGKey(4), tiny_batch, tiny_cfg.K)
+    local, phi, ptot, _ = em.iem_fit(tiny_batch, mu0, tiny_cfg, sweeps=8)
+    ppl = em.training_perplexity(
+        tiny_batch, local.theta_dk, phi, ptot, tiny_cfg
+    )
+    assert 1.0 < float(ppl) < tiny_cfg.W

@@ -1,0 +1,126 @@
+"""FOEM + dynamic scheduling: the paper's §3.1 semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GlobalStats, LDAConfig, MinibatchData, foem
+from repro.core import scheduling as sched
+
+
+def test_eq38_renorm_preserves_active_mass():
+    rng = np.random.default_rng(0)
+    new = jnp.asarray(rng.gamma(2, 1, (4, 7, 5)).astype(np.float32))
+    prev = jnp.asarray(rng.dirichlet(np.ones(8), (4, 7))[..., :5]
+                       .astype(np.float32))
+    out = sched.sparse_estep_renorm(new, prev)
+    np.testing.assert_allclose(
+        np.asarray(out.sum(-1)), np.asarray(prev.sum(-1)), rtol=1e-5
+    )
+
+
+def test_residual_replace_and_persist():
+    cfg = LDAConfig(num_topics=4, vocab_size=6)
+    s = sched.init_scheduler(6, cfg)
+    delta = jnp.zeros((6, 4)).at[2, 1].set(0.5)
+    touched = jnp.zeros((6, 4), bool).at[2, 1].set(True)
+    s2 = sched.update_residuals(s, delta, touched)
+    assert float(s2.r_wk[2, 1]) == pytest.approx(0.5)
+    # untouched entries keep the (huge) init value -> visited next
+    assert float(s2.r_wk[0, 0]) == float(s.r_wk[0, 0])
+
+
+def test_active_topic_selection_topk():
+    cfg = LDAConfig(num_topics=5, vocab_size=3, active_topics=2)
+    r = jnp.asarray([[0.1, 0.9, 0.2, 0.8, 0.0],
+                     [5.0, 0.0, 1.0, 2.0, 3.0],
+                     [0.0, 0.0, 0.0, 0.0, 1.0]], jnp.float32)
+    s = sched.SchedulerState(r_wk=r, r_w=r.sum(-1))
+    ids = np.asarray(sched.select_active_topics(s, 2))
+    assert set(ids[0]) == {1, 3}
+    assert set(ids[1]) == {0, 4}
+    assert 4 in set(ids[2])
+
+
+def test_word_threshold_fraction():
+    cfg = LDAConfig(num_topics=2, vocab_size=10)
+    r_w = jnp.arange(10, dtype=jnp.float32)
+    s = sched.SchedulerState(r_wk=jnp.zeros((10, 2)), r_w=r_w)
+    t = sched.select_active_words_threshold(s, 0.3)
+    assert int((r_w >= t).sum()) == 3
+    t_all = sched.select_active_words_threshold(s, 1.0)
+    assert int((r_w >= t_all).sum()) == 10
+
+
+def _run_foem(batch, cfg, key=0):
+    stats = GlobalStats.zeros(cfg)
+    return foem.foem_step(jax.random.PRNGKey(key), batch, stats, cfg)
+
+
+def test_foem_mass_conservation(tiny_batch, tiny_cfg):
+    cfg = dataclasses.replace(tiny_cfg, active_topics=3)
+    stats, local, diag = _run_foem(tiny_batch, cfg)
+    np.testing.assert_allclose(
+        float(stats.phi_k.sum()), float(tiny_batch.counts.sum()), rtol=1e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(stats.phi_wk.sum(0)), np.asarray(stats.phi_k), rtol=1e-3,
+        atol=1e-2,
+    )
+
+
+def test_scheduled_close_to_full_sweeps():
+    """paper Fig. 7: λ_k = 0.5 loses <~5% training perplexity vs λ_k = 1
+    (the paper's sparsity argument needs K large enough that most topics per
+    word are inactive; ΔP tolerance scaled to CPU-size perplexities)."""
+    from repro.data import synthetic_lda_corpus
+    from repro.sparse import MinibatchStream
+
+    corpus, _ = synthetic_lda_corpus(96, 240, 12, mean_doc_len=60, seed=7)
+    mb = next(iter(MinibatchStream(corpus, 48, seed=0, epochs=1)))
+    batch = MinibatchData(jnp.asarray(mb.word_ids), jnp.asarray(mb.counts))
+    base = LDAConfig(num_topics=12, vocab_size=240, max_sweeps=40,
+                     iem_blocks=4, ppl_rel_tol=0.02, ppl_check_every=5)
+    full = dataclasses.replace(base, active_topics=0)
+    scheduled = dataclasses.replace(base, active_topics=6)
+    _, _, diag_full = _run_foem(batch, full)
+    _, _, diag_sched = _run_foem(batch, scheduled)
+    rel = abs(float(diag_sched.final_train_ppl) -
+              float(diag_full.final_train_ppl)) / float(diag_full.final_train_ppl)
+    assert rel < 0.15, (
+        f"scheduled ppl {float(diag_sched.final_train_ppl):.1f} vs "
+        f"full {float(diag_full.final_train_ppl):.1f}"
+    )
+
+
+def test_foem_stream_improves(tiny_corpus, tiny_cfg):
+    """Perplexity on later minibatches < first (the stream learns)."""
+    import dataclasses as dc
+    from repro.sparse import MinibatchStream
+
+    corpus, _ = tiny_corpus
+    cfg = dc.replace(tiny_cfg, active_topics=3, max_sweeps=12)
+    stats = GlobalStats.zeros(cfg)
+    key = jax.random.PRNGKey(0)
+    ppls = []
+    stream = MinibatchStream(corpus, 32, seed=1, epochs=3)
+    for i, mb in enumerate(stream):
+        if i >= 6:
+            break
+        batch = MinibatchData(jnp.asarray(mb.word_ids), jnp.asarray(mb.counts))
+        key, sub = jax.random.split(key)
+        stats, _, diag = foem.foem_step(sub, batch, stats, cfg)
+        ppls.append(float(diag.final_train_ppl))
+    assert min(ppls[3:]) < ppls[0], ppls
+
+
+def test_rho_modes(tiny_batch, tiny_cfg):
+    import dataclasses as dc
+
+    for mode in ("accumulate", "stepwise"):
+        cfg = dc.replace(tiny_cfg, rho_mode=mode, active_topics=3)
+        stats, _, _ = _run_foem(tiny_batch, cfg)
+        assert np.isfinite(float(stats.phi_k.sum()))
+        assert int(stats.step) == 1

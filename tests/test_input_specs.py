@@ -1,0 +1,64 @@
+"""The assignment grid itself: every (arch × shape) cell's input specs."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import LM_SHAPES
+from repro.configs.registry import ARCHS, get_shape
+from repro.launch.specs import input_specs
+
+
+def _cells():
+    for name, cfg in sorted(ARCHS.items()):
+        for s in cfg.shapes():
+            yield name, s.name
+
+
+@pytest.mark.parametrize("arch,shape", list(_cells()))
+def test_input_specs_shapes(arch, shape):
+    cfg = ARCHS[arch]
+    s = get_shape(cfg, shape)
+    specs = input_specs(arch, shape)
+    B = s.global_batch
+    S = s.seq_len if s.kind != "decode" else 1
+    if cfg.frontend == "audio_frames":
+        assert specs["embeds"].shape == (B, S, cfg.d_model)
+        assert specs["embeds"].dtype == jnp.bfloat16
+    else:
+        assert specs["tokens"].shape == (B, S)
+        assert specs["tokens"].dtype == jnp.int32
+    if s.kind == "train":
+        assert specs["labels"].shape == (B, S)
+    if cfg.frontend == "image_patches":
+        assert specs["image_embeds"].shape == (B, cfg.image_tokens, cfg.d_model)
+
+
+def test_grid_has_40_assigned_cells():
+    """10 archs × 4 shapes = 40 assigned cells; full-attention archs skip
+    long_500k by design (sub-quadratic requirement) — exactly 3 run it."""
+    total_assigned = len(ARCHS) * len(LM_SHAPES)
+    assert total_assigned == 40
+    runnable = sum(len(cfg.shapes()) for cfg in ARCHS.values())
+    long_runners = [n for n, c in ARCHS.items() if c.long_context_ok]
+    assert sorted(long_runners) == [
+        "h2o-danube-3-4b", "jamba-1.5-large-398b", "mamba2-370m",
+    ]
+    assert runnable == 40 - (len(ARCHS) - len(long_runners))
+
+
+def test_arch_exact_figures():
+    """Spot-check the assigned architecture figures are EXACT."""
+    g = ARCHS["granite-20b"]
+    assert (g.num_layers, g.d_model, g.num_heads, g.num_kv_heads,
+            g.d_ff, g.vocab_size) == (52, 6144, 48, 1, 24576, 49152)
+    q = ARCHS["qwen3-moe-235b-a22b"]
+    assert (q.num_layers, q.d_model, q.num_experts, q.experts_per_token,
+            q.vocab_size) == (94, 4096, 128, 8, 151936)
+    m = ARCHS["mamba2-370m"]
+    assert (m.num_layers, m.d_model, m.ssm_state, m.d_ff) == (48, 1024, 128, 0)
+    j = ARCHS["jamba-1.5-large-398b"]
+    assert (j.num_layers, j.d_model, j.num_experts, j.experts_per_token,
+            j.attn_every) == (72, 8192, 16, 2, 8)
+    # parameter budgets within 2% of the advertised totals
+    assert abs(q.param_count() - 235e9) / 235e9 < 0.02
+    assert abs(q.active_param_count() - 22e9) / 22e9 < 0.02
+    assert abs(j.param_count() - 398e9) / 398e9 < 0.02

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps per the deliverable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.foem_estep import fused_estep_pallas, token_block_for
+from repro.kernels.topk_estep import topk_estep_pallas
+
+
+@pytest.mark.parametrize("T,K,blk", [(32, 64, 8), (64, 128, 16), (128, 256, 32)])
+@pytest.mark.parametrize("use_exclude", [False, True])
+def test_fused_estep_kernel(T, K, blk, use_exclude):
+    rng = np.random.default_rng(T + K)
+    th = jnp.asarray(rng.gamma(2., 1., (T, K)).astype(np.float32))
+    ph = jnp.asarray(rng.gamma(2., 1., (T, K)).astype(np.float32))
+    pt = jnp.asarray(rng.gamma(5., 1., (K,)).astype(np.float32)) + 50
+    mu_old = jnp.asarray(rng.dirichlet(np.ones(K), T).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(1, 5, T).astype(np.float32))
+    ex = cnt[:, None] * mu_old if use_exclude else None
+    mu, res = fused_estep_pallas(
+        th, ph, pt, ex, mu_old, cnt,
+        alpha_m1=0.01, beta_m1=0.01, wb=0.01 * 5000,
+        use_exclude=use_exclude, block_tokens=blk, interpret=True,
+    )
+    mu_r, res_r = ref.fused_estep_ref(
+        th, ph, pt, ex, mu_old, cnt, 0.01, 0.01, 0.01 * 5000
+    )
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(res_r), atol=1e-6)
+
+
+@pytest.mark.parametrize("T,A", [(32, 8), (64, 16), (128, 32)])
+def test_topk_estep_kernel(T, A):
+    rng = np.random.default_rng(T)
+    th = jnp.asarray(rng.gamma(2., 1., (T, A)).astype(np.float32)) + 1
+    ph = jnp.asarray(rng.gamma(2., 1., (T, A)).astype(np.float32)) + 1
+    pt = jnp.asarray(rng.gamma(5., 1., (T, A)).astype(np.float32)) + 50
+    mu = jnp.asarray((rng.dirichlet(np.ones(A), T) * 0.6).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(1, 4, T).astype(np.float32))
+    act = jnp.asarray(rng.random(T) > 0.4)
+    o = topk_estep_pallas(th, ph, pt, mu, cnt, act, alpha_m1=.01,
+                          beta_m1=.01, wb=50., block_tokens=16,
+                          interpret=True)
+    r = ref.topk_estep_ref(th, ph, pt, mu, cnt, act, .01, .01, 50.)
+    np.testing.assert_allclose(np.asarray(o[0]), np.asarray(r[0]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o[1]), np.asarray(r[1]), atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "BH,BHkv,Sq,Sk,d,causal,window,qoff",
+    [
+        (4, 2, 64, 64, 32, True, 0, 0),
+        (4, 1, 48, 48, 32, True, 0, 0),       # MQA, padded seq
+        (2, 2, 64, 64, 32, True, 24, 0),      # sliding window
+        (4, 2, 8, 96, 32, True, 0, 88),       # decode tail
+        (2, 2, 64, 64, 64, False, 0, 0),      # cross-attn (non-causal)
+    ],
+)
+def test_flash_attention_kernel(BH, BHkv, Sq, Sk, d, causal, window, qoff):
+    rng = np.random.default_rng(Sq + Sk)
+    q = jnp.asarray(rng.normal(size=(BH, Sq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(BHkv, Sk, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(BHkv, Sk, d)).astype(np.float32))
+    o = flash_attention(q, k, v, causal=causal, window=window, q_offset=qoff,
+                        block_q=32, block_k=32, interpret=True)
+    o_ref = ref.mha_ref(q, k, v, causal=causal, window=window, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 32, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 32, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 32, 32)), jnp.bfloat16)
+    o = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    o_ref = ref.mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref), atol=3e-2
+    )
+
+
+def test_token_block_vmem_budget():
+    assert token_block_for(128) >= 8
+    assert token_block_for(16384) >= 8
+    assert token_block_for(128) % 8 == 0

@@ -1,0 +1,166 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LDAConfig, em
+from repro.core.scheduling import sparse_estep_renorm
+from repro.parallel.compression import TILE, compress, decompress, ef_init
+from repro.sparse.docword import DocWordMatrix, bucketize, localize_vocab
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@given(
+    d=st.integers(1, 6), l=st.integers(1, 8), k=st.integers(2, 8),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SET)
+def test_estep_is_normalised_and_nonnegative(d, l, k, seed):
+    rng = np.random.default_rng(seed)
+    cfg = LDAConfig(num_topics=k, vocab_size=50)
+    theta = jnp.asarray(rng.gamma(1.0, 1.0, (d, 1, k)).astype(np.float32))
+    rows = jnp.asarray(rng.gamma(1.0, 1.0, (d, l, k)).astype(np.float32))
+    ptot = jnp.asarray(rng.gamma(2.0, 1.0, (k,)).astype(np.float32)) + 1
+    mu = em.estep(theta, rows, ptot, cfg)
+    m = np.asarray(mu)
+    assert np.all(m >= 0)
+    np.testing.assert_allclose(m.sum(-1), 1.0, atol=1e-5)
+
+
+@given(
+    d=st.integers(1, 5), l=st.integers(1, 6), k=st.integers(2, 6),
+    w=st.integers(4, 20), seed=st.integers(0, 10_000),
+)
+@settings(**SET)
+def test_fold_phi_conserves_mass(d, l, k, w, seed):
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.dirichlet(np.ones(k), (d, l)).astype(np.float32))
+    counts = jnp.asarray(rng.integers(0, 4, (d, l)).astype(np.float32))
+    wid = jnp.asarray(rng.integers(0, w, (d, l)), jnp.int32)
+    phi, ptot = em.fold_phi(mu, counts, wid, w)
+    np.testing.assert_allclose(
+        float(phi.sum()), float(counts.sum()), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(phi.sum(0)), np.asarray(ptot), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    t=st.integers(1, 6), a=st.integers(1, 6), seed=st.integers(0, 10_000),
+)
+@settings(**SET)
+def test_eq38_renorm_mass_preservation(t, a, seed):
+    rng = np.random.default_rng(seed)
+    new = jnp.asarray(rng.gamma(1.0, 1.0, (t, 1, a)).astype(np.float32)) + 1e-6
+    prev = jnp.asarray(rng.dirichlet(np.ones(a + 1), (t, 1))[..., :a]
+                       .astype(np.float32))
+    out = sparse_estep_renorm(new, prev)
+    np.testing.assert_allclose(
+        np.asarray(out.sum(-1)), np.asarray(prev.sum(-1)), rtol=1e-4,
+        atol=1e-6,
+    )
+
+
+@given(
+    n=st.integers(1, 600), scale=st.floats(1e-3, 1e3), seed=st.integers(0, 99),
+)
+@settings(**SET)
+def test_compression_error_bound_and_ef(n, scale, seed):
+    """int8 EF quantisation: per-tile error ≤ scale/2; EF carries residual."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=n) * scale).astype(np.float32))
+    state = ef_init(x)
+    c, state2 = compress(x, state)
+    deq = decompress(c, x.shape)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    tiles = np.asarray(c.scale)
+    bound = np.repeat(tiles, TILE)[:n] * 0.5 + 1e-9
+    assert np.all(err <= bound + 1e-6)
+    np.testing.assert_allclose(
+        np.asarray(state2.error), np.asarray(x) - np.asarray(deq), atol=1e-6
+    )
+
+
+@given(
+    docs=st.integers(1, 10), w=st.integers(5, 30), seed=st.integers(0, 1000),
+)
+@settings(**SET)
+def test_bucketize_roundtrip(docs, w, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.integers(0, 3, (docs, w)).astype(np.float32)
+    mat = DocWordMatrix.from_dense(dense)
+    wid, cnt = bucketize(mat, list(range(docs)))
+    rec = np.zeros_like(dense)
+    for dd in range(docs):
+        for j in range(wid.shape[1]):
+            if cnt[dd, j] > 0:
+                rec[dd, wid[dd, j]] += cnt[dd, j]
+    np.testing.assert_allclose(rec, dense)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(**SET)
+def test_localize_vocab_consistency(seed):
+    rng = np.random.default_rng(seed)
+    wid = rng.integers(0, 100, (4, 6)).astype(np.int32)
+    uniq, local = localize_vocab(wid)
+    np.testing.assert_array_equal(uniq[local], wid)
+    assert len(set(uniq.tolist())) == len(uniq)
+
+
+@given(
+    window=st.integers(2, 12), s=st.integers(4, 20), seed=st.integers(0, 500),
+)
+@settings(max_examples=10, deadline=None)
+def test_ring_kv_cache_decode_property(window, s, seed):
+    """Ring-buffer SWA decode ≡ full-cache SWA decode for any (window, S)."""
+    import jax
+    from repro.models.layers import attention_apply, attention_init
+
+    rng = np.random.default_rng(seed)
+    B, D, H, KV, hd = 1, 16, 2, 1, 8
+    p = attention_init(jax.random.PRNGKey(seed), D, H, KV, hd, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, s, D)).astype(np.float32))
+
+    def decode_loop(cache_len):
+        ck = jnp.zeros((B, KV, cache_len, hd))
+        cv = jnp.zeros((B, KV, cache_len, hd))
+        outs = []
+        for t in range(s):
+            o, (ck, cv) = attention_apply(
+                p, x[:, t:t + 1], None, num_heads=H, num_kv=KV, hd=hd,
+                causal=True, window=window,
+                positions=jnp.arange(t, t + 1), rope_theta=1e4,
+                kv_cache=(ck, cv), cache_pos=jnp.int32(t),
+            )
+            outs.append(o)
+        return jnp.concatenate(outs, axis=1)
+
+    ring = decode_loop(min(window, s))     # ring buffer
+    full = decode_loop(s)                  # full cache
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(full), atol=1e-4)
+
+
+@given(
+    k=st.integers(2, 8), seed=st.integers(0, 1000),
+)
+@settings(**SET)
+def test_adamw_step_finite_and_decreases_quadratic(k, seed):
+    from repro.optim import adamw_init, adamw_update
+
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(k, k)).astype(np.float32))
+    params = {"w": jnp.zeros((k, k))}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(10):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(g, opt, params, lr=0.1, weight_decay=0.0)
+    assert float(loss(params)) < l0

@@ -1,0 +1,95 @@
+"""Sharding-rule unit tests against an AbstractMesh (no devices needed)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.base import LM_SHAPES
+from repro.configs.registry import ARCHS, get_shape
+from repro.models import build
+from repro.parallel import sharding as rules
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_rank_and_divisibility(name):
+    mesh = _mesh()
+    model = build(ARCHS[name])
+    specs = rules.param_pspecs(model, mesh)
+    abstract = model.abstract_params()
+
+    def check(path, leaf, spec):
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert leaf.shape[dim] % size == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(check, abstract, specs)
+
+
+@pytest.mark.parametrize("name", ["qwen3-moe-235b-a22b", "jamba-1.5-large-398b"])
+def test_fsdp_shards_over_data(name):
+    mesh = _mesh()
+    model = build(ARCHS[name])
+    specs = rules.param_pspecs(model, mesh)
+    flat = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    n_data = sum(1 for s in flat if "data" in jax.tree.leaves(tuple(s)))
+    assert n_data > 5, f"FSDP produced only {n_data} data-sharded params"
+
+
+def test_kv_replicated_when_heads_dont_divide():
+    mesh = _mesh()
+    model = build(ARCHS["granite-8b"])          # kv=8 < model=16
+    specs = rules.param_pspecs(model, mesh)
+    wk = specs["blocks"]["l0"]["attn"]["wk"]
+    assert wk == P(None, None, None)            # (block, D, KV·hd) replicated
+    wq = specs["blocks"]["l0"]["attn"]["wq"]
+    assert wq == P(None, None, "model")
+
+
+def test_cache_specs_sp_fallback():
+    mesh = _mesh()
+    cfg = ARCHS["granite-20b"]                  # MQA kv=1 -> SP on seq axis
+    model = build(cfg)
+    shape = get_shape(cfg, "decode_32k")
+    specs = rules.cache_pspecs(model, shape, mesh)
+    k = specs["l0"]["k"]
+    assert k[3] == "model" and k[2] is None     # seq sharded, head not
+
+
+def test_batch_specs_long_context_single_request():
+    mesh = _mesh()
+    cfg = ARCHS["mamba2-370m"]
+    shape = get_shape(cfg, "long_500k")         # global_batch=1
+    specs = rules.batch_pspecs(cfg, shape, mesh)
+    assert specs["tokens"][0] is None           # B=1 cannot shard over data
+
+
+def test_multi_pod_dp_axes():
+    mesh = _mesh(multi=True)
+    assert rules.dp_axes(mesh) == ("pod", "data")
+    cfg = ARCHS["granite-8b"]
+    shape = get_shape(cfg, "train_4k")
+    specs = rules.batch_pspecs(cfg, shape, mesh)
+    assert specs["tokens"][0] == ("pod", "data")
+
+
+def test_lda_pspecs_axes():
+    mesh = _mesh()
+    vocab = rules.lda_pspecs(mesh, shard_topics=False)
+    assert vocab.phi_wk == P("model", None)
+    topic = rules.lda_pspecs(mesh, shard_topics=True)
+    assert topic.phi_wk == P(None, "model")
+    assert topic.phi_k == P("model")

@@ -1,0 +1,84 @@
+"""ParameterStore: the paper's §3.2 parameter streaming + fault tolerance."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.streaming import ParameterStore
+
+
+def _mk(tmp_path, buffer_rows=0, K=8, W=100):
+    return ParameterStore(str(tmp_path), num_topics=K, vocab_capacity=W,
+                          buffer_rows=buffer_rows)
+
+
+def test_roundtrip_unbuffered(tmp_path):
+    st = _mk(tmp_path)
+    ids = np.array([3, 7, 42])
+    rows = np.arange(24, dtype=np.float32).reshape(3, 8)
+    st.write_rows(ids, rows)
+    out = st.fetch_rows(ids)
+    np.testing.assert_allclose(out, rows)
+    assert st.stats.disk_writes == 3 and st.stats.disk_reads == 3
+
+
+def test_buffer_hits_and_eviction(tmp_path):
+    st = _mk(tmp_path, buffer_rows=2)
+    ids = np.array([1, 2, 3])                  # 3 rows through a 2-row buffer
+    st.write_rows(ids, np.ones((3, 8), np.float32))
+    assert st.stats.evictions == 1             # LRU evicted row 1
+    st.stats.reset()
+    st.fetch_rows(np.array([2, 3]))            # both still buffered
+    assert st.stats.buffer_hits == 2 and st.stats.disk_reads == 0
+    st.fetch_rows(np.array([1]))               # evicted -> disk
+    assert st.stats.disk_reads == 1
+
+
+def test_io_decreases_with_buffer(tmp_path):
+    """Table 5's invariant: bigger buffer ⇒ fewer backing-store accesses."""
+    rng = np.random.default_rng(0)
+    seq = [rng.choice(60, size=20, replace=False) for _ in range(12)]
+    totals = {}
+    for buf in (0, 16, 64):
+        st = ParameterStore(str(tmp_path / f"b{buf}"), num_topics=4,
+                            vocab_capacity=64, buffer_rows=buf)
+        for ids in seq:
+            rows = st.fetch_rows(ids)
+            st.write_rows(ids, rows + 1)
+        totals[buf] = st.stats.disk_reads + st.stats.disk_writes
+    assert totals[0] > totals[16] > totals[64]
+    assert totals[64] <= 64 * 2   # at most one read per distinct row (+ none written yet)
+
+
+def test_flush_restart_restores_state(tmp_path):
+    st = _mk(tmp_path, buffer_rows=4)
+    ids = np.array([5, 6])
+    st.write_rows(ids, np.full((2, 8), 3.0, np.float32))
+    st.phi_k = np.full(8, 1.5)
+    st.step = 17
+    st.ensure_vocab(6)
+    st.flush()
+    st2 = _mk(tmp_path, buffer_rows=4)
+    np.testing.assert_allclose(st2.fetch_rows(ids), 3.0)
+    np.testing.assert_allclose(st2.phi_k, 1.5)
+    assert st2.step == 17 and st2.live_vocab == 7
+
+
+def test_dirty_rows_survive_crash_after_flush(tmp_path):
+    st = _mk(tmp_path, buffer_rows=8)
+    st.write_rows(np.array([1]), np.full((1, 8), 9.0, np.float32))
+    st.flush()
+    del st                                      # simulated crash
+    st2 = _mk(tmp_path, buffer_rows=0)
+    np.testing.assert_allclose(st2.fetch_rows(np.array([1])), 9.0)
+
+
+def test_vocab_watermark_and_capacity(tmp_path):
+    st = _mk(tmp_path)
+    st.ensure_vocab(50)
+    assert st.live_vocab == 51
+    with pytest.raises(ValueError):
+        st.ensure_vocab(100)                    # beyond capacity
+
+def test_rows_for_bytes():
+    assert ParameterStore.rows_for_bytes(1000, 4_000_000) == 1000
