@@ -49,7 +49,7 @@ class Workload:
 
 def lda_config(K, W, algo, **kw) -> LDAConfig:
     base = dict(
-        num_topics=K, vocab_size=W, max_sweeps=16, iem_blocks=4,
+        num_topics=K, vocab_size=W, max_sweeps=16, iem_blocks=0,
         ppl_check_every=5, ppl_rel_tol=0.01,
     )
     if algo == "foem":

@@ -22,6 +22,8 @@ def main():
     ap.add_argument("--vocab", type=int, default=20000)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--workdir", default="/tmp/foem_stream")
+    ap.add_argument("--prefetch-depth", type=int, default=1,
+                    help="φ̂-row prefetch pipeline depth (0 = synchronous)")
     args = ap.parse_args()
 
     argv = [
@@ -37,6 +39,7 @@ def main():
         "--active-topics", "10",
         "--max-sweeps", "12",
         "--buffer-rows", "4096",
+        "--prefetch-depth", str(args.prefetch_depth),
         "--ckpt-every", "5",
         "--topics-true", "32",
     ]

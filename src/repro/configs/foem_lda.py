@@ -46,7 +46,8 @@ def lda_config(shape: LDAShapeConfig, active_topics: int = 16) -> LDAConfig:
         alpha_m1=0.01,
         beta_m1=0.01,
         max_sweeps=32,
-        iem_blocks=4,
+        iem_blocks=0,   # column-serial folds (B = L): keeps T_IEM < T_BEM
+
         active_topics=active_topics,
         rho_mode="accumulate",
     )

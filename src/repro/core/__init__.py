@@ -8,7 +8,7 @@ from repro.core.types import (
     uniform_responsibilities,
 )
 from repro.core import em, foem, sem, scheduling, perplexity, baselines
-from repro.core.streaming import ParameterStore
+from repro.core.streaming import ParameterStore, StoreStats, StreamPrefetcher
 from repro.core.trainer import FOEMTrainer
 
 __all__ = [
@@ -25,5 +25,7 @@ __all__ = [
     "perplexity",
     "baselines",
     "ParameterStore",
+    "StoreStats",
+    "StreamPrefetcher",
     "FOEMTrainer",
 ]

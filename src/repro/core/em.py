@@ -11,8 +11,14 @@ This module holds the *algorithmic core* of the paper in pure JAX:
                            slots are split into B sequential blocks; within a
                            block the E-step is vectorized (Jacobi), and the
                            sufficient statistics are folded in *between* blocks
-                           (Gauss-Seidel across blocks).  B=1 recovers BEM,
-                           B=L recovers column-serial IEM.
+                           (Gauss-Seidel across blocks).  The default
+                           (``cfg.iem_blocks == 0``) is B=L — column-serial,
+                           doc-parallel IEM, the faithful Fig.-2 adaptation.
+                           Coarser B trades per-sweep convergence for shorter
+                           scans; B=1 degenerates to Jacobi-with-self-exclusion
+                           (*slower* per sweep than BEM — see the §2.2
+                           regression test), so only shrink B when scan length
+                           dominates the step time.
   * ``iem_exact_numpy``  — the paper's serial per-non-zero IEM (Fig. 2) in
                            NumPy; the oracle for tests.
 
@@ -147,16 +153,20 @@ def blocked_iem_sweep(
       2. Replace the block's contribution in θ̂ (local) and φ̂ (in the sweep's
          working copy) — the Gauss-Seidel fold.
 
+    ``num_blocks``/``cfg.iem_blocks`` of 0 means B = L: every token column is
+    its own block (fully column-serial Gauss-Seidel, documents vectorized),
+    which is the granularity at which the paper's T_IEM < T_BEM ordering
+    (§2.2) actually holds.  Coarse blocks fold too rarely and lose it.
+
     The working copy of φ̂ starts at ``phi_wk (+ this minibatch's μ folded in
     by the caller)``; we return the updated LocalState plus the *delta* of the
     minibatch totals so the caller can merge into the global stream state.
     """
-    B = num_blocks or cfg.iem_blocks
     D, L = batch.word_ids.shape
+    B = cfg.resolve_blocks(L, num_blocks)
     K = cfg.K
     W = vocab_size if vocab_size is not None else cfg.W
     Wrows = phi_wk.shape[0]
-    B = max(1, min(B, L))
     pad = (-L) % B
     # Static split: pad L to a multiple of B with zero-count slots.
     if pad:
@@ -232,15 +242,18 @@ def iem_fit(
     batch: MinibatchData, mu0: jax.Array, cfg: LDAConfig, sweeps: int,
     num_blocks: int = 0,
 ) -> Tuple[LocalState, jax.Array, jax.Array, jax.Array]:
-    """Run ``sweeps`` blocked-IEM iterations on one (small) corpus."""
+    """Run ``sweeps`` blocked-IEM iterations on one (small) corpus.
+
+    ``num_blocks == 0`` defers to ``cfg.iem_blocks`` (whose 0 default means
+    fully column-serial, B = L).
+    """
     theta0 = fold_theta(mu0, batch.counts)
     phi0, ptot0 = fold_phi(mu0, batch.counts, batch.word_ids, cfg.W)
-    nb = num_blocks or cfg.iem_blocks
 
     def sweep(carry, _):
         local, phi_wk, phi_k = carry
         new_local, d_wk, d_k = blocked_iem_sweep(
-            batch, local, phi_wk, phi_k, cfg, num_blocks=nb
+            batch, local, phi_wk, phi_k, cfg, num_blocks=num_blocks
         )
         phi_wk = phi_wk + d_wk
         phi_k = phi_k + d_k
@@ -264,10 +277,23 @@ def normalize_theta(theta_dk: jax.Array, cfg: LDAConfig) -> jax.Array:
     return num / jnp.maximum(den, 1e-30)
 
 
-def normalize_phi(phi_wk: jax.Array, phi_k: jax.Array, cfg: LDAConfig) -> jax.Array:
-    """eq. (10): φ_w(k) = (φ̂+β−1) / (φ̂(k) + W(β−1)) — vocab-major (W, K)."""
+def normalize_phi(
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    cfg: LDAConfig,
+    *,
+    vocab_size: Optional[jax.Array | int] = None,
+) -> jax.Array:
+    """eq. (10): φ_w(k) = (φ̂+β−1) / (φ̂(k) + W(β−1)) — vocab-major (W, K).
+
+    ``phi_wk`` may be a *local* (W_s, K) view of the global matrix (parameter
+    streaming); the smoothing mass in the denominator must still use the
+    *model's* vocabulary size, so callers operating on a view pass the global
+    ``vocab_size`` explicitly (mirrors ``estep``'s override).
+    """
+    W = cfg.W if vocab_size is None else vocab_size
     num = phi_wk + cfg.beta_m1
-    den = phi_k + cfg.W * cfg.beta_m1
+    den = phi_k + W * cfg.beta_m1
     return num / jnp.maximum(den, 1e-30)[None, :]
 
 
@@ -277,10 +303,16 @@ def map_log_likelihood(
     phi_wk: jax.Array,
     phi_k: jax.Array,
     cfg: LDAConfig,
+    *,
+    vocab_size: Optional[jax.Array | int] = None,
 ) -> jax.Array:
-    """Word log-likelihood  Σ x log Σ_k θ_d(k) φ_w(k)  (eq. 3's data term)."""
+    """Word log-likelihood  Σ x log Σ_k θ_d(k) φ_w(k)  (eq. 3's data term).
+
+    On a local (W_s, K) view, ``batch.word_ids`` index the view's rows and
+    ``vocab_size`` carries the global W for the φ normaliser.
+    """
     theta = normalize_theta(theta_dk, cfg)                     # (D, K)
-    phi = normalize_phi(phi_wk, phi_k, cfg)                    # (W, K)
+    phi = normalize_phi(phi_wk, phi_k, cfg, vocab_size=vocab_size)
     rows = gather_phi_rows(phi, batch.word_ids)                # (D, L, K)
     lik = jnp.einsum("dlk,dk->dl", rows, theta)                # (D, L)
     lik = jnp.maximum(lik, 1e-30)
@@ -293,9 +325,13 @@ def training_perplexity(
     phi_wk: jax.Array,
     phi_k: jax.Array,
     cfg: LDAConfig,
+    *,
+    vocab_size: Optional[jax.Array | int] = None,
 ) -> jax.Array:
     """exp(−loglik / ntokens) on the training minibatch (inner-loop stop rule)."""
-    ll = map_log_likelihood(batch, theta_dk, phi_wk, phi_k, cfg)
+    ll = map_log_likelihood(
+        batch, theta_dk, phi_wk, phi_k, cfg, vocab_size=vocab_size
+    )
     return jnp.exp(-ll / jnp.maximum(batch.counts.sum(), 1.0))
 
 

@@ -86,8 +86,8 @@ def scheduled_iem_sweep(
         jnp.take(scheduler.r_w, batch.word_ids, axis=0) >= word_thresh
     ) & (batch.counts > 0)                                         # (D, L)
 
-    # ---- blocked Gauss-Seidel over token columns ----
-    B = max(1, min(cfg.iem_blocks, L))
+    # ---- blocked Gauss-Seidel over token columns (0 = column-serial) ----
+    B = cfg.resolve_blocks(L)
     pad = (-L) % B
     def _pad(x, fill=0):
         if not pad:
@@ -216,7 +216,9 @@ def foem_minibatch(
         local.mu, prev_mu, batch.counts, batch.word_ids, phi.shape[0]
     )
 
-    ppl0 = em.training_perplexity(batch, local.theta_dk, phi, ptot, cfg)
+    ppl0 = em.training_perplexity(
+        batch, local.theta_dk, phi, ptot, cfg, vocab_size=W
+    )
 
     use_sched = cfg.active_topics > 0
 
@@ -240,7 +242,9 @@ def foem_minibatch(
         check = (t + 1) % cfg.ppl_check_every == 0
         ppl = jax.lax.cond(
             check,
-            lambda: em.training_perplexity(batch, local.theta_dk, phi, ptot, cfg),
+            lambda: em.training_perplexity(
+                batch, local.theta_dk, phi, ptot, cfg, vocab_size=W
+            ),
             lambda: last_ppl,
         )
         done = check & (

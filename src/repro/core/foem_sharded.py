@@ -79,7 +79,7 @@ def _scheduled_sweep_local(batch, local, phi, ptot, scheduler, cfg,
     token_topics = jnp.take(word_topics, batch.word_ids, axis=0)
     token_active = batch.counts > 0
 
-    B = max(1, min(cfg.iem_blocks, L))
+    B = cfg.resolve_blocks(L)
     pad = (-L) % B
 
     def _pad(x, fill=0):

@@ -9,7 +9,7 @@ baseline FOEM is measured against in Figs. 8-12.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +36,17 @@ def sem_step(
     stats: GlobalStats,
     cfg: LDAConfig,
     stream_scale: float = 1.0,
+    vocab_size: Optional[jax.Array | int] = None,
 ) -> Tuple[GlobalStats, LocalState, SEMDiagnostics]:
     """One SEM minibatch step: inner BEM to convergence + eq. 20 merge.
 
     The inner E-step reads the *frozen* φ̂^{s−1} (paper Fig. 3 line 5) while
-    θ̂ iterates to convergence; only then is φ̂ interpolated.
+    θ̂ iterates to convergence; only then is φ̂ interpolated.  On a local
+    (W_s, K) parameter-streaming view, ``vocab_size`` carries the global W
+    for the smoothing mass (mirrors ``foem_minibatch``).
     """
     D, L = batch.word_ids.shape
+    W = cfg.W if vocab_size is None else vocab_size
     mu0 = uniform_responsibilities(key, (D, L, cfg.K), cfg.dtype)
     theta0 = em.fold_theta(mu0, batch.counts)
     local0 = LocalState(mu=mu0, theta_dk=theta0)
@@ -52,7 +56,7 @@ def sem_step(
     def inner_ppl(local):
         # training perplexity with frozen φ̂ (θ only refreshes)
         theta = em.normalize_theta(local.theta_dk, cfg)
-        phin = em.normalize_phi(stats.phi_wk, stats.phi_k, cfg)
+        phin = em.normalize_phi(stats.phi_wk, stats.phi_k, cfg, vocab_size=W)
         rows = em.gather_phi_rows(phin, batch.word_ids)
         lik = jnp.maximum(jnp.einsum("dlk,dk->dl", rows, theta), 1e-30)
         ll = (batch.counts * jnp.log(lik)).sum()
@@ -60,7 +64,8 @@ def sem_step(
 
     def sweep(local):
         mu = em.estep(
-            local.theta_dk[:, None, :], phi_rows, stats.phi_k, cfg
+            local.theta_dk[:, None, :], phi_rows, stats.phi_k, cfg,
+            vocab_size=W,
         )
         return LocalState(mu=mu, theta_dk=em.fold_theta(mu, batch.counts))
 

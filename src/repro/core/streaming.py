@@ -13,6 +13,38 @@ construction: a crash loses at most the current minibatch (§3.2 "Fault
 tolerance is also assured because the global topic-word matrix is stored in
 hard disk for restarting the online learning").
 
+Architecture of the host-I/O path (this PR's pipeline)::
+
+      MinibatchStream ──► StreamPrefetcher (worker thread)
+                             │  bucketize + localize_vocab
+                             │  ParameterStore.fetch_rows  ← vectorized:
+                             │     one fancy-indexed memmap gather per
+                             │     minibatch + array-backed LRU hit/miss
+                             ▼
+      queue (depth = prefetch_depth) ──► FOEMTrainer.step
+                             │             reconcile vs. recent write-backs
+                             │             jitted foem_step  (device)
+                             ▼
+      ParameterStore.write_rows  ← coalesced scatter of W_s dirty rows
+
+    While the device executes minibatch *s*, the worker fetches minibatch
+    *s+1*'s φ̂ rows — disk/host I/O overlaps device compute end-to-end, so a
+    step costs ≈ max(compute, I/O) instead of their sum.  The fetch of *s+1*
+    may race the write-back of *s*; ``write_version`` orders the two and the
+    trainer patches the (tiny) overlap from the freshly computed host rows,
+    making results bitwise-identical with prefetching on or off.
+
+All LRU state is arrays (contiguous ``(W*, K)`` row buffer + id/clock/dirty
+vectors + a word→slot map), so a whole minibatch's hit partition, clock
+bump, insertion and batched eviction are NumPy ops — no per-row Python loop
+anywhere on the hot path.
+
+How the knobs map to the paper's Table 5: ``buffer_rows`` is W* (0 = the
+0.0GB row: every access hits the backing store; ``rows_for_bytes`` converts
+a byte budget), ``W_s`` is the per-minibatch unique vocabulary, and
+``prefetch_depth`` is the number of minibatches fetched ahead (1 = double
+buffering, the Fig. 4 "while GPU computes, CPU fetches" overlap).
+
 At pod scale the same role is played by sharding φ̂ over the ``model`` mesh
 axis (see ``parallel/sharding.py``); this module is the single-host tier and
 the checkpoint substrate.
@@ -22,8 +54,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+import threading
+import time
+from typing import Iterable, Iterator, NamedTuple, Tuple
 
 import numpy as np
 
@@ -36,14 +69,34 @@ class StoreStats:
     disk_writes: int = 0     # rows written to the backing store
     buffer_hits: int = 0     # rows served from the hot buffer
     evictions: int = 0
+    prefetch_hits: int = 0   # minibatches whose rows were already staged
+    overlap_seconds: float = 0.0  # host I/O time hidden behind device compute
 
     def reset(self) -> None:
         self.disk_reads = self.disk_writes = 0
         self.buffer_hits = self.evictions = 0
+        self.prefetch_hits = 0
+        self.overlap_seconds = 0.0
 
 
 class ParameterStore:
     """Disk-backed φ̂_{W×K} with a write-back LRU hot-word buffer.
+
+    All row I/O is *vectorized*: a minibatch's W_s rows move as one
+    fancy-indexed gather/scatter against the memmap and one partitioned
+    gather against the hot buffer.  The LRU itself is array-backed — a
+    contiguous ``(W*, K)`` row buffer plus id/clock/dirty vectors and a
+    word→slot index — so hit partitioning, recency bumps and batched
+    eviction are O(W_s) NumPy work instead of O(W_s) interpreter work.
+
+    Thread safety: every public mutator takes ``_lock`` so a background
+    prefetcher (``StreamPrefetcher``) can fetch while the trainer writes
+    back.  ``write_version`` increments on every value-changing write; a
+    fetch tagged with an older version may miss those writes and must be
+    reconciled by the caller (see ``fetch_rows_versioned``).
+
+    Row ids within one ``fetch_rows``/``write_rows`` call must be unique —
+    they are a minibatch's (deduplicated) local vocabulary.
 
     Parameters
     ----------
@@ -76,54 +129,182 @@ class ParameterStore:
         self.phi_k = np.zeros((self.K,), np.float64)  # topic totals (small, RAM)
         self.step = 0                            # minibatch cursor (restart point)
         self.stats = StoreStats()
-        self._buffer: "OrderedDict[int, np.ndarray]" = OrderedDict()
-        self._dirty: Dict[int, bool] = {}
+        self.write_version = 0                   # bumps on every write_rows
+        self._lock = threading.RLock()
+        # ---- array-backed LRU (empty slots carry id == -1) ----
+        W_star = self.buffer_rows
+        self._buf = np.zeros((W_star, self.K), self.dtype)
+        self._buf_ids = np.full((W_star,), -1, np.int64)
+        self._buf_clock = np.zeros((W_star,), np.int64)
+        self._buf_dirty = np.zeros((W_star,), bool)
+        self._slot_of = np.full((self.capacity,), -1, np.int64)
+        self._clock = 0
         os.makedirs(path, exist_ok=True)
         backing = os.path.join(path, self.BACKING)
         mode = "r+" if os.path.exists(backing) else "w+"
         self._mm = np.memmap(
             backing, dtype=self.dtype, mode=mode, shape=(self.capacity, self.K)
         )
+        # Plain ndarray view of the same mapping: fancy gathers/scatters on it
+        # skip np.memmap.__getitem__'s subclass overhead (~4x on 4096-row
+        # blocks); durability still goes through self._mm.flush().
+        self._arr = np.asarray(self._mm)
         if mode == "r+":
             self._load_manifest()
 
     # ------------------------------------------------------------------ I/O
 
     def fetch_rows(self, word_ids: np.ndarray) -> np.ndarray:
-        """Read φ̂ rows for a minibatch's (unique) vocabulary — one read each."""
-        out = np.empty((len(word_ids), self.K), self.dtype)
-        for i, w in enumerate(word_ids):
-            w = int(w)
-            row = self._buffer.get(w)
-            if row is not None:
-                self._buffer.move_to_end(w)
-                self.stats.buffer_hits += 1
-                out[i] = row
-            else:
-                out[i] = self._mm[w]
-                self.stats.disk_reads += 1
-        return out
+        """Read φ̂ rows for a minibatch's unique vocabulary — one block I/O.
 
-    def write_rows(self, word_ids: np.ndarray, rows: np.ndarray) -> None:
-        """Write updated rows back — buffered words stay dirty until eviction."""
-        for i, w in enumerate(word_ids):
-            w = int(w)
+        Buffer hits are gathered from the hot buffer, misses from the memmap
+        with a single fancy-indexed read; missed rows are then *promoted*
+        into the buffer (insert-on-read, clean) so a read-heavy stream still
+        accumulates hits under the same LRU eviction policy as writes.
+        """
+        return self.fetch_rows_versioned(word_ids)[0]
+
+    def fetch_rows_versioned(
+        self, word_ids: np.ndarray
+    ) -> Tuple[np.ndarray, int]:
+        """``fetch_rows`` plus the ``write_version`` the read is consistent
+        with — the prefetch pipeline's reconciliation token."""
+        with self._lock:
+            ids = np.asarray(word_ids, np.int64)
+            if len(ids) and int(ids.max()) >= self.capacity:
+                raise ValueError(
+                    f"word id {int(ids.max())} exceeds store capacity "
+                    f"{self.capacity}; grow capacity at construction "
+                    "(static allocation for XLA)"
+                )
+            if self.buffer_rows == 0:
+                out = self._arr[ids]
+                self.stats.disk_reads += len(ids)
+                return out, self.write_version
+            slots = self._slot_of[ids]
+            hit = slots >= 0
+            n_hit = int(hit.sum())
+            if n_hit == len(ids):                 # warm stream fast path
+                out = self._buf[slots]
+                self._touch(slots)
+                self.stats.buffer_hits += n_hit
+                return out, self.write_version
+            if n_hit == 0:                        # cold stream fast path
+                out = self._arr[ids]
+                self.stats.disk_reads += len(ids)
+                self._insert(ids, out, dirty=False)
+                return out, self.write_version
+            out = np.empty((len(ids), self.K), self.dtype)
+            hit_idx = np.flatnonzero(hit)
+            miss_idx = np.flatnonzero(~hit)
+            hit_slots = slots[hit_idx]
+            out[hit_idx] = self._buf[hit_slots]
+            self._touch(hit_slots)
+            self.stats.buffer_hits += n_hit
+            miss_ids = ids[miss_idx]
+            rows = self._arr[miss_ids]
+            out[miss_idx] = rows
+            self.stats.disk_reads += len(miss_ids)
+            self._insert(miss_ids, rows, dirty=False)
+            return out, self.write_version
+
+    def write_rows(self, word_ids: np.ndarray, rows: np.ndarray) -> int:
+        """Write updated rows back (coalesced) — buffered words stay dirty
+        until eviction.  Returns the new ``write_version``."""
+        with self._lock:
+            ids = np.asarray(word_ids, np.int64)
+            rows = np.asarray(rows, self.dtype)
             if self.buffer_rows > 0:
-                self._buffer[w] = np.asarray(rows[i], self.dtype)
-                self._buffer.move_to_end(w)
-                self._dirty[w] = True
-                if len(self._buffer) > self.buffer_rows:
-                    self._evict_one()
+                self._insert(ids, rows, dirty=True)
             else:
-                self._mm[w] = rows[i]
-                self.stats.disk_writes += 1
+                order = np.argsort(ids)           # sorted scatter: sequential I/O
+                self._arr[ids[order]] = rows[order]
+                self.stats.disk_writes += len(ids)
+            self.write_version += 1
+            return self.write_version
 
-    def _evict_one(self) -> None:
-        w, row = self._buffer.popitem(last=False)
-        if self._dirty.pop(w, False):
-            self._mm[w] = row
-            self.stats.disk_writes += 1
-        self.stats.evictions += 1
+    # ----------------------------------------------------- LRU internals
+
+    def _touch(self, slots: np.ndarray) -> None:
+        """Recency bump: later position in the batch == more recent (matches
+        per-row ``move_to_end`` order; clocks stay unique)."""
+        n = len(slots)
+        if n:
+            self._buf_clock[slots] = np.arange(self._clock, self._clock + n)
+            self._clock += n
+
+    def _insert(self, ids: np.ndarray, rows: np.ndarray, dirty: bool) -> None:
+        """Vectorized buffer insertion with batched LRU eviction.
+
+        Semantically equivalent to inserting ``ids`` one by one (in order)
+        into the old OrderedDict LRU: the final residents, eviction count and
+        dirty write-backs match the per-row implementation.
+        """
+        W_star = self.buffer_rows
+        slots = self._slot_of[ids]
+        have = slots >= 0
+        n_have = int(have.sum())
+        if n_have == len(ids):                    # pure overwrite (write-back)
+            self._buf[slots] = rows
+            if dirty:
+                self._buf_dirty[slots] = True
+            self._touch(slots)
+            return
+        if n_have:
+            have_idx = np.flatnonzero(have)
+            have_slots = slots[have_idx]
+            self._buf[have_slots] = rows[have_idx]
+            if dirty:
+                self._buf_dirty[have_slots] = True
+            # Bump residents now so batched eviction can never pick them.
+            self._touch(have_slots)
+            new_idx = np.flatnonzero(~have)
+            new_ids, new_rows = ids[new_idx], rows[new_idx]
+        else:
+            new_ids, new_rows = ids, rows
+        n_new = len(new_ids)
+        if n_new > W_star:
+            # The leading n_new - W* fresh rows would be inserted then
+            # immediately evicted by the per-row LRU — spill them straight to
+            # the store (write back if dirty, count the pass-through evictions).
+            head = n_new - W_star
+            if dirty:
+                order = np.argsort(new_ids[:head])
+                self._arr[new_ids[:head][order]] = new_rows[:head][order]
+                self.stats.disk_writes += head
+            self.stats.evictions += head
+            new_ids, new_rows = new_ids[head:], new_rows[head:]
+            n_new = W_star
+        free = np.flatnonzero(self._buf_ids < 0)
+        need = n_new - len(free)
+        if need > 0:
+            occupied = np.flatnonzero(self._buf_ids >= 0)
+            oldest = occupied[
+                np.argpartition(self._buf_clock[occupied], need - 1)[:need]
+            ]
+            self._evict_slots(oldest)
+            free = np.concatenate([free, oldest])
+        tgt = free[:n_new]
+        self._buf[tgt] = new_rows
+        self._buf_ids[tgt] = new_ids
+        self._buf_dirty[tgt] = dirty
+        self._slot_of[new_ids] = tgt
+        self._touch(tgt)
+
+    def _evict_slots(self, slots: np.ndarray) -> None:
+        """Batched eviction: one sorted scatter writes back the dirty rows."""
+        vict_ids = self._buf_ids[slots]
+        dirty = self._buf_dirty[slots]
+        if dirty.any():
+            d_ids = vict_ids[dirty]
+            d_slots = slots[dirty]
+            order = np.argsort(d_ids)       # sorted scatter, single gather pass
+            self._arr[d_ids[order]] = self._buf[d_slots[order]]
+            self.stats.disk_writes += len(d_ids)
+        self.stats.evictions += len(slots)
+        self._slot_of[vict_ids] = -1
+        self._buf_ids[slots] = -1
+        self._buf_dirty[slots] = False
 
     # -------------------------------------------------------------- vocab
 
@@ -140,13 +321,16 @@ class ParameterStore:
 
     def flush(self) -> None:
         """Write back all dirty buffer rows + memmap + manifest (fsync'd)."""
-        for w, row in self._buffer.items():
-            if self._dirty.get(w, False):
-                self._mm[w] = row
-                self.stats.disk_writes += 1
-                self._dirty[w] = False
-        self._mm.flush()
-        self._save_manifest()
+        with self._lock:
+            dirty_slots = np.flatnonzero(self._buf_dirty)
+            if len(dirty_slots):
+                d_ids = self._buf_ids[dirty_slots]
+                order = np.argsort(d_ids)
+                self._arr[d_ids[order]] = self._buf[dirty_slots[order]]
+                self.stats.disk_writes += len(d_ids)
+                self._buf_dirty[dirty_slots] = False
+            self._mm.flush()
+            self._save_manifest()
 
     def _manifest_path(self) -> str:
         return os.path.join(self.path, self.MANIFEST)
@@ -185,10 +369,78 @@ class ParameterStore:
         self.flush()
         return np.asarray(self._mm[: max(self.live_vocab, 1)])
 
+    def resident_rows(self) -> int:
+        return int((self._buf_ids >= 0).sum())
+
     def buffer_bytes(self) -> int:
-        return len(self._buffer) * self.K * self.dtype.itemsize
+        return self.resident_rows() * self.K * self.dtype.itemsize
 
     @staticmethod
     def rows_for_bytes(num_topics: int, nbytes: float, dtype=np.float32) -> int:
         """Translate a Table-5 style buffer size in bytes into W* rows."""
         return int(nbytes // (num_topics * np.dtype(dtype).itemsize))
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous prefetch — double-buffered fetch stage of the pipeline
+# ---------------------------------------------------------------------------
+
+
+class PrefetchedBatch(NamedTuple):
+    """A minibatch staged by the worker: its φ̂ rows, the store version the
+    fetch is consistent with, and how long the host I/O took."""
+
+    minibatch: object            # sparse.minibatch.Minibatch
+    phi_rows: np.ndarray         # (W_s, K)
+    version: int                 # store.write_version at fetch time
+    fetch_seconds: float
+
+
+class StreamPrefetcher:
+    """Background fetch of upcoming minibatches' φ̂ rows (double buffering).
+
+    A worker thread (``sparse.minibatch.prefetch_iterator``) drains
+    ``stream`` — so bucketization and ``localize_vocab`` also run off the
+    critical path — fetches each minibatch's rows, and stages
+    ``PrefetchedBatch`` items in a bounded queue.  With ``depth=1`` the
+    worker is fetching minibatch s+1 while the consumer computes on
+    minibatch s.
+
+    Because a staged fetch may predate the consumer's most recent
+    ``write_rows``, each item carries the store ``write_version`` it saw;
+    the consumer patches rows overlapping any newer write-back (the
+    trainer keeps the last few write sets) — that reconciliation is what
+    makes prefetched and sequential execution bitwise-identical.
+    """
+
+    def __init__(self, store: ParameterStore, stream: Iterable, depth: int = 1):
+        if depth < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        # local import: core.streaming is imported by repro.core's package
+        # init, which sparse must not depend on at module load
+        from repro.sparse.minibatch import prefetch_iterator
+
+        def staged() -> Iterator[PrefetchedBatch]:
+            for mb in stream:
+                t0 = time.perf_counter()
+                rows, version = store.fetch_rows_versioned(mb.local_vocab)
+                yield PrefetchedBatch(
+                    mb, rows, version, time.perf_counter() - t0
+                )
+
+        self._inner = prefetch_iterator(staged(), depth=depth)
+
+    def __iter__(self) -> Iterator[Tuple[PrefetchedBatch, float]]:
+        """Yields ``(staged_batch, wait_seconds)`` — wait_seconds is how long
+        the consumer blocked on the queue (≈0 ⇒ the fetch fully overlapped)."""
+        while True:
+            t0 = time.perf_counter()
+            try:
+                item = next(self._inner)
+            except StopIteration:
+                return
+            yield item, time.perf_counter() - t0
+
+    def close(self) -> None:
+        """Stop the worker and release the source (safe to call repeatedly)."""
+        self._inner.close()

@@ -8,6 +8,12 @@ Per minibatch:
   4. write the updated rows back, update the (K,) topic totals, advance the
      stream cursor, optionally checkpoint (fault-tolerant restart point).
 
+With ``prefetch_depth > 0``, stages 1-2 for minibatch s+1 run on a background
+thread while the device executes minibatch s, and stage 4's write-back is
+reconciled against in-flight fetches (see ``streaming.StreamPrefetcher``) —
+the pipelined step costs ≈ max(device compute, host I/O) instead of their
+sum, with bitwise-identical results.
+
 The device never holds more than O(K·(D_s + NNZ_s + W_s)) — the paper's
 space bound with W* = buffer_rows.
 """
@@ -15,14 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Iterator, List, Optional
+from collections import deque
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import em, foem, sem
-from repro.core.streaming import ParameterStore
+from repro.core.streaming import ParameterStore, StreamPrefetcher
 from repro.core.types import GlobalStats, LDAConfig, MinibatchData
 from repro.sparse.minibatch import Minibatch, MinibatchStream
 
@@ -36,6 +43,8 @@ class StepMetrics:
     disk_reads: int
     disk_writes: int
     buffer_hits: int
+    prefetch_hit: bool = False      # rows were staged before we needed them
+    overlap_seconds: float = 0.0    # host I/O hidden behind device compute
 
 
 class FOEMTrainer:
@@ -49,6 +58,7 @@ class FOEMTrainer:
         seed: int = 0,
         checkpoint_every: int = 0,
         algorithm: str = "foem",   # "foem" | "sem"
+        prefetch_depth: int = 1,   # 0 = fully synchronous host I/O
     ):
         if store.K != cfg.K:
             raise ValueError("store/config topic count mismatch")
@@ -57,7 +67,13 @@ class FOEMTrainer:
         self.key = jax.random.PRNGKey(seed)
         self.checkpoint_every = checkpoint_every
         self.algorithm = algorithm
+        self.prefetch_depth = int(prefetch_depth)
         self.history: List[StepMetrics] = []
+        # snapshot of cumulative store I/O counters at the last step boundary
+        self._stats_base = (
+            store.stats.disk_reads, store.stats.disk_writes,
+            store.stats.buffer_hits,
+        )
         # jit cache keyed by (D_s, L, W_s-padded) static shapes
         self._jit_cache: Dict = {}
 
@@ -75,7 +91,9 @@ class FOEMTrainer:
         elif algorithm == "sem":
             def run(key, batch, phi_rows, phi_k, live_w):
                 stats = GlobalStats(phi_wk=phi_rows, phi_k=phi_k, step=jnp.int32(0))
-                new_stats, local, diag = sem.sem_step(key, batch, stats, cfg)
+                new_stats, local, diag = sem.sem_step(
+                    key, batch, stats, cfg, vocab_size=live_w
+                )
                 return (
                     new_stats.phi_wk,
                     new_stats.phi_k,
@@ -97,13 +115,35 @@ class FOEMTrainer:
     # ------------------------------------------------------------------
 
     def step(self, mb: Minibatch) -> StepMetrics:
-        cfg = self.cfg
+        """Synchronous step: fetch → compute → write back."""
         t0 = time.perf_counter()
-        self.store.stats.reset()
-        self.store.ensure_vocab(int(mb.local_vocab.max(initial=0)))
-
-        # --- parameter streaming: fetch exactly W_s rows ---
         phi_rows = self.store.fetch_rows(mb.local_vocab)           # (W_s, K)
+        return self._step_with_rows(mb, phi_rows, t0=t0)[0]
+
+    def _step_with_rows(
+        self,
+        mb: Minibatch,
+        phi_rows: np.ndarray,
+        *,
+        prefetch_hit: bool = False,
+        overlap_seconds: float = 0.0,
+        t0: Optional[float] = None,
+    ) -> Tuple[StepMetrics, np.ndarray]:
+        """Run the jitted inner loop on pre-fetched rows and write back.
+
+        Returns ``(metrics, new_rows)`` — new_rows feed the prefetch
+        reconciliation log.  ``t0`` is when the step's host I/O started
+        (the fetch in the sync path, the queue wait in the pipelined
+        path) so ``StepMetrics.seconds`` covers fetch + compute + write
+        back in both.  I/O counters are per-step deltas of the store's
+        cumulative stats; in the pipelined path a step's delta includes
+        the *next* minibatch's background fetch (sums over the run are
+        exact either way).
+        """
+        cfg = self.cfg
+        if t0 is None:
+            t0 = time.perf_counter()
+        self.store.ensure_vocab(int(mb.local_vocab.max(initial=0)))
         phi_k = self.store.phi_k.astype(np.float32)                # (K,)
 
         batch = MinibatchData(
@@ -128,17 +168,27 @@ class FOEMTrainer:
         if self.checkpoint_every and self.store.step % self.checkpoint_every == 0:
             self.store.flush()
 
+        st = self.store.stats
+        st.overlap_seconds += overlap_seconds
+        if prefetch_hit:
+            st.prefetch_hits += 1
+        base = self._stats_base
+        self._stats_base = (st.disk_reads, st.disk_writes, st.buffer_hits)
         m = StepMetrics(
             step=self.store.step,
             sweeps=int(sweeps),
             train_ppl=float(ppl),
             seconds=time.perf_counter() - t0,
-            disk_reads=self.store.stats.disk_reads,
-            disk_writes=self.store.stats.disk_writes,
-            buffer_hits=self.store.stats.buffer_hits,
+            disk_reads=st.disk_reads - base[0],
+            disk_writes=st.disk_writes - base[1],
+            buffer_hits=st.buffer_hits - base[2],
+            prefetch_hit=prefetch_hit,
+            overlap_seconds=overlap_seconds,
         )
         self.history.append(m)
-        return m
+        return m, new_rows
+
+    # ------------------------------------------------------------------
 
     def fit_stream(
         self,
@@ -146,6 +196,8 @@ class FOEMTrainer:
         max_steps: Optional[int] = None,
         callback: Optional[Callable[[StepMetrics], None]] = None,
     ) -> List[StepMetrics]:
+        if self.prefetch_depth > 0:
+            return self._fit_stream_prefetched(stream, max_steps, callback)
         out = []
         for mb in stream:
             if max_steps is not None and len(out) >= max_steps:
@@ -154,6 +206,60 @@ class FOEMTrainer:
             out.append(m)
             if callback:
                 callback(m)
+        self.store.flush()
+        return out
+
+    def _fit_stream_prefetched(
+        self,
+        stream: Iterator[Minibatch],
+        max_steps: Optional[int],
+        callback: Optional[Callable[[StepMetrics], None]],
+    ) -> List[StepMetrics]:
+        """Pipelined loop: the worker fetches minibatch s+1's rows (and runs
+        the stream's bucketize/localize) while the device computes on s.
+
+        A staged fetch may predate recent write-backs; every write is logged
+        with its ``write_version`` and patched into newer-versioned fetches
+        before compute — results are bitwise-identical to the sync path.
+        """
+        out: List[StepMetrics] = []
+        pf = StreamPrefetcher(self.store, stream, depth=self.prefetch_depth)
+        # (version, ids, rows) of recent write-backs; a staged fetch can be
+        # at most depth+1 writes behind.
+        writes: deque = deque(maxlen=self.prefetch_depth + 2)
+        it = iter(pf)
+        try:
+            while max_steps is None or len(out) < max_steps:
+                t0 = time.perf_counter()   # step pays the (residual) I/O wait
+                try:
+                    staged, wait = next(it)
+                except StopIteration:
+                    break
+                mb, rows = staged.minibatch, staged.phi_rows
+                for ver, w_ids, w_rows in writes:
+                    if ver > staged.version:
+                        _, ia, ib = np.intersect1d(
+                            mb.local_vocab, w_ids,
+                            assume_unique=True, return_indices=True,
+                        )
+                        rows[ia] = w_rows[ib]
+                # a hit means the rows were already staged when we arrived
+                # (wait ≈ queue overhead); blocking for the fetch is a miss
+                overlap = max(0.0, staged.fetch_seconds - wait)
+                m, new_rows = self._step_with_rows(
+                    mb, rows,
+                    prefetch_hit=wait < 1e-3,
+                    overlap_seconds=overlap,
+                    t0=t0,
+                )
+                writes.append(
+                    (self.store.write_version, mb.local_vocab, new_rows)
+                )
+                out.append(m)
+                if callback:
+                    callback(m)
+        finally:
+            pf.close()
         self.store.flush()
         return out
 

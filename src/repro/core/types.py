@@ -36,8 +36,13 @@ class LDAConfig:
     max_sweeps: int = 32       # hard cap on E/M sweeps per minibatch
     ppl_check_every: int = 10  # paper: "calculate the training perplexity every 10 iterations"
     ppl_rel_tol: float = 0.005  # relative ΔP/P stop (paper's ΔP=10 at ppl≈2k)
-    # --- blocked-IEM granularity (TPU adaptation; 1 block == BEM sweep) ---
-    iem_blocks: int = 4
+    # --- blocked-IEM granularity (TPU adaptation) ---
+    # 0 (default) = B = L: fully column-serial Gauss-Seidel folds, the
+    # paper-faithful IEM whose per-sweep convergence beats BEM (§2.2).
+    # >0 coarsens to that many blocks per sweep: shorter scans, but folds
+    # become too rare to preserve the T_IEM < T_BEM ordering (B=1 is plain
+    # Jacobi-with-self-exclusion). Only set >0 when scan length dominates.
+    iem_blocks: int = 0
     # --- dynamic scheduling (FOEM §3.1) ---
     active_topics: int = 0     # λ_k·K; 0 disables scheduling (== full IEM)
     active_words_frac: float = 1.0  # λ_w
@@ -71,6 +76,16 @@ class LDAConfig:
     @property
     def W(self) -> int:
         return self.vocab_size
+
+    def resolve_blocks(self, bucket_len: int,
+                       override: Optional[int] = None) -> int:
+        """Blocked-IEM block count B for a minibatch of ``bucket_len`` token
+        columns: ``override`` (0/None defers to ``iem_blocks``) with 0 → B =
+        bucket_len (column-serial), clamped to [1, bucket_len]."""
+        b = override if override else self.iem_blocks
+        if b <= 0:
+            b = bucket_len
+        return max(1, min(b, bucket_len))
 
 
 class GlobalStats(NamedTuple):

@@ -41,8 +41,9 @@ class TopicServer:
         uniq, local = localize_vocab(word_ids)
         rows = self.store.fetch_rows(uniq)                     # streamed φ̂
         phi_k = jnp.asarray(self.store.phi_k, jnp.float32)
+        # local (W_s, K) view: the smoothing mass must use the global W
         phi_norm = em.normalize_phi(
-            jnp.asarray(rows), phi_k, self.cfg
+            jnp.asarray(rows), phi_k, self.cfg, vocab_size=self.cfg.W
         )
         batch = MinibatchData(jnp.asarray(local), jnp.asarray(counts))
         rows_tok = em.gather_phi_rows(phi_norm, batch.word_ids)

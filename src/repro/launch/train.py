@@ -39,7 +39,7 @@ def train_lda(args) -> None:
         num_topics=args.topics,
         vocab_size=args.vocab,
         active_topics=args.active_topics,
-        iem_blocks=4,
+        iem_blocks=args.iem_blocks,
         max_sweeps=args.max_sweeps,
     )
     corpus, _ = synthetic_lda_corpus(
@@ -54,7 +54,7 @@ def train_lda(args) -> None:
     )
     trainer = FOEMTrainer(
         cfg, store, seed=args.seed, checkpoint_every=args.ckpt_every,
-        algorithm=args.algorithm,
+        algorithm=args.algorithm, prefetch_depth=args.prefetch_depth,
     )
     start = trainer.resume_step() if args.resume else 0
     if start:
@@ -66,10 +66,12 @@ def train_lda(args) -> None:
 
     def report(m):
         if m.step % args.log_every == 0:
+            pf = "+" if m.prefetch_hit else "-"
             print(
                 f"step {m.step:5d} sweeps={m.sweeps:2d} "
                 f"train_ppl={m.train_ppl:9.2f} io r/w={m.disk_reads}/"
-                f"{m.disk_writes} hits={m.buffer_hits} {m.seconds:5.2f}s"
+                f"{m.disk_writes} hits={m.buffer_hits} pf{pf} "
+                f"overlap={m.overlap_seconds*1e3:5.1f}ms {m.seconds:5.2f}s"
             )
 
     trainer.fit_stream(iter(stream), max_steps=args.steps, callback=report)
@@ -153,7 +155,12 @@ def main() -> None:
     ap.add_argument("--minibatch", type=int, default=256)
     ap.add_argument("--active-topics", type=int, default=16)
     ap.add_argument("--max-sweeps", type=int, default=24)
+    ap.add_argument("--iem-blocks", type=int, default=0,
+                    help="0 = column-serial IEM folds (paper-faithful)")
     ap.add_argument("--buffer-rows", type=int, default=2048)
+    ap.add_argument("--prefetch-depth", type=int, default=1,
+                    help="minibatches fetched ahead of the device "
+                         "(0 = synchronous host I/O)")
     # LM options
     ap.add_argument("--seq-len", type=int, default=128)
     args = ap.parse_args()

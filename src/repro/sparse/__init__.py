@@ -1,4 +1,5 @@
 from repro.sparse.docword import DocWordMatrix, bucketize
-from repro.sparse.minibatch import MinibatchStream
+from repro.sparse.minibatch import MinibatchStream, prefetch_iterator
 
-__all__ = ["DocWordMatrix", "bucketize", "MinibatchStream"]
+__all__ = ["DocWordMatrix", "bucketize", "MinibatchStream",
+           "prefetch_iterator"]

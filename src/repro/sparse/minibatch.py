@@ -7,11 +7,66 @@ with one bucket length chosen from a warmup sample quantile.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator, Optional, Tuple
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, Optional, Tuple
 
 import numpy as np
 
 from repro.sparse.docword import DocWordMatrix, bucket_length, bucketize, localize_vocab
+
+
+def prefetch_iterator(it: Iterable, depth: int = 2) -> Iterator:
+    """Drain ``it`` on a background thread, staging up to ``depth`` items.
+
+    Moves host-side minibatch construction (bucketize + localize_vocab)
+    off the consumer's critical path; item order is preserved, so results
+    are identical to iterating ``it`` directly.  Exceptions raised by the
+    producer re-raise at the consumer's next pull.  Abandoning the
+    generator (``close()`` / GC, e.g. a ``max_steps`` break upstream)
+    stops the worker thread — even against an infinite source.
+    """
+    q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+    sentinel = object()
+    stop = threading.Event()
+
+    def put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def worker():
+        try:
+            for item in it:
+                if not put(item):
+                    return
+            put(sentinel)
+        except BaseException as e:   # re-raised on the consumer side
+            put(e)
+
+    thread = threading.Thread(target=worker, daemon=True,
+                              name="minibatch-prefetch")
+    thread.start()
+    try:
+        while True:
+            item = q.get()
+            if item is sentinel:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+        try:
+            while True:
+                q.get_nowait()
+        except queue.Empty:
+            pass
+        thread.join(timeout=5.0)
 
 
 @dataclasses.dataclass
@@ -88,6 +143,13 @@ class MinibatchStream:
                     index=s,
                 )
             epoch += 1
+
+    def prefetch(self, depth: int = 2) -> Iterator[Minibatch]:
+        """Iterate with background minibatch construction (see
+        ``prefetch_iterator``); pairs with the ParameterStore-level
+        prefetch in ``core/streaming.StreamPrefetcher``, which additionally
+        stages the φ̂ rows."""
+        return prefetch_iterator(iter(self), depth=depth)
 
     def num_minibatches_per_epoch(self) -> int:
         return self.corpus.num_docs // self.D_s

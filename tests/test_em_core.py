@@ -97,3 +97,43 @@ def test_training_perplexity_bounded_by_vocab(tiny_batch, tiny_cfg):
         tiny_batch, local.theta_dk, phi, ptot, tiny_cfg
     )
     assert 1.0 < float(ppl) < tiny_cfg.W
+
+
+def test_local_view_perplexity_matches_global(tiny_batch, tiny_cfg):
+    """Parameter-streaming view: perplexity on the (W_s, K) slice must equal
+    the global-view value when the global W is threaded through (the local
+    view only re-indexes rows; the smoothing mass W(β−1) is a model constant).
+    """
+    from repro.sparse.docword import localize_vocab
+
+    mu0 = _mu0(jax.random.PRNGKey(5), tiny_batch, tiny_cfg.K)
+    local, phi, ptot, _ = em.iem_fit(tiny_batch, mu0, tiny_cfg, sweeps=3)
+    ppl_global = em.training_perplexity(
+        tiny_batch, local.theta_dk, phi, ptot, tiny_cfg
+    )
+
+    wid = np.asarray(tiny_batch.word_ids)
+    uniq, local_ids = localize_vocab(wid)
+    batch_local = MinibatchData(
+        jnp.asarray(local_ids), tiny_batch.counts
+    )
+    phi_local = jnp.asarray(np.asarray(phi)[uniq])      # (W_s, K) slice
+    # A naive caller hands a cfg sized to the slice; only the vocab_size
+    # override makes the local computation agree with the global one.
+    cfg_local = LDAConfig(
+        num_topics=tiny_cfg.K, vocab_size=len(uniq),
+        alpha_m1=tiny_cfg.alpha_m1, beta_m1=tiny_cfg.beta_m1,
+    )
+    ppl_wrong = em.training_perplexity(
+        batch_local, local.theta_dk, phi_local, ptot, cfg_local
+    )
+    ppl_local = em.training_perplexity(
+        batch_local, local.theta_dk, phi_local, ptot, cfg_local,
+        vocab_size=tiny_cfg.W,
+    )
+    np.testing.assert_allclose(
+        float(ppl_local), float(ppl_global), rtol=1e-5
+    )
+    assert abs(float(ppl_wrong) - float(ppl_global)) > 1e-3, (
+        "test is vacuous: W_s-sized smoothing did not move the perplexity"
+    )

@@ -82,3 +82,158 @@ def test_vocab_watermark_and_capacity(tmp_path):
 
 def test_rows_for_bytes():
     assert ParameterStore.rows_for_bytes(1000, 4_000_000) == 1000
+
+
+# ---------------------------------------------------------------------------
+# Vectorized-store specifics: per-row equivalence, batched LRU order,
+# insert-on-read, prefetch pipeline.
+# ---------------------------------------------------------------------------
+
+
+class _PerRowReference:
+    """Per-row LRU oracle for the vectorized store: ordered-dict recency,
+    write-back dirty eviction, insert-on-read promotion.  A batch is atomic
+    ("up to batching"): residents are looked up / bumped first, then the
+    batch's new rows are inserted row by row — so a row never gets evicted
+    by its own batch before being served."""
+
+    def __init__(self, K, cap, buffer_rows):
+        from collections import OrderedDict
+
+        self.K, self.buffer_rows = K, buffer_rows
+        self.disk = np.zeros((cap, K), np.float32)
+        self.buf = OrderedDict()          # id -> (row, dirty)
+        self.reads = self.writes = self.hits = self.evict = 0
+
+    def _insert(self, w, row, dirty):
+        assert w not in self.buf
+        self.buf[w] = (row.copy(), dirty)
+        if len(self.buf) > self.buffer_rows:
+            wv, (r, d) = self.buf.popitem(last=False)
+            if d:
+                self.disk[wv] = r
+                self.writes += 1
+            self.evict += 1
+
+    def fetch(self, ids):
+        out = np.empty((len(ids), self.K), np.float32)
+        missed = []
+        for i, w in enumerate(ids):
+            w = int(w)
+            if w in self.buf:
+                out[i] = self.buf[w][0]
+                self.buf.move_to_end(w)
+                self.hits += 1
+            else:
+                out[i] = self.disk[w]
+                self.reads += 1
+                missed.append((w, out[i]))
+        if self.buffer_rows:
+            for w, row in missed:
+                self._insert(w, row, dirty=False)
+        return out
+
+    def write(self, ids, rows):
+        if not self.buffer_rows:
+            for i, w in enumerate(ids):
+                self.disk[int(w)] = rows[i]
+                self.writes += 1
+            return
+        fresh = []
+        for i, w in enumerate(ids):
+            w = int(w)
+            if w in self.buf:
+                self.buf[w] = (np.asarray(rows[i]).copy(), True)
+                self.buf.move_to_end(w)
+            else:
+                fresh.append((w, np.asarray(rows[i])))
+        for w, row in fresh:
+            self._insert(w, row, dirty=True)
+
+    def dense(self):
+        for w, (r, d) in self.buf.items():
+            if d:
+                self.disk[w] = r
+                self.writes += 1
+        return self.disk
+
+
+@pytest.mark.parametrize("buf", [0, 7, 32])
+def test_vectorized_matches_perrow_reference(tmp_path, buf):
+    """Random mixed fetch/write workload: values, stats and final state of
+    the batched store must equal the per-row LRU reference exactly."""
+    K, W = 4, 64
+    rng = np.random.default_rng(buf + 1)
+    st = ParameterStore(str(tmp_path / f"v{buf}"), num_topics=K,
+                        vocab_capacity=W, buffer_rows=buf)
+    ref = _PerRowReference(K, W, buf)
+    for it in range(25):
+        ids = np.unique(rng.choice(W, rng.integers(1, 20), replace=False))
+        got = st.fetch_rows(ids)
+        want = ref.fetch(ids)
+        np.testing.assert_array_equal(got, want)
+        new = rng.normal(size=(len(ids), K)).astype(np.float32)
+        st.write_rows(ids, new)
+        ref.write(ids, new)
+    assert st.stats.disk_reads == ref.reads
+    assert st.stats.buffer_hits == ref.hits
+    assert st.stats.evictions == ref.evict
+    assert st.stats.disk_writes == ref.writes
+    np.testing.assert_array_equal(st.dense_phi(), ref.dense()[:st.live_vocab or 1])
+
+
+def test_lru_eviction_order_batched(tmp_path):
+    """Batched access must preserve per-row LRU recency: within a batch,
+    later ids are more recent; a hit refreshes recency."""
+    st = _mk(tmp_path, buffer_rows=3)
+    st.write_rows(np.array([1, 2, 3]), np.ones((3, 8), np.float32))
+    st.fetch_rows(np.array([1]))               # bump 1 → LRU order now 2,3,1
+    st.write_rows(np.array([4]), np.ones((1, 8), np.float32))  # evicts 2
+    st.stats.reset()
+    st.fetch_rows(np.array([1, 3, 4]))
+    assert st.stats.buffer_hits == 3 and st.stats.disk_reads == 0
+    st.fetch_rows(np.array([2]))
+    assert st.stats.disk_reads == 1            # 2 was the evicted one
+
+
+def test_insert_on_read_promotes_rows(tmp_path):
+    """satellite: a read-heavy stream must accumulate buffer hits — rows
+    read from disk are promoted into the hot buffer (clean)."""
+    st = _mk(tmp_path, buffer_rows=8)
+    ids = np.array([3, 9, 27])
+    st.fetch_rows(ids)                          # cold: all disk
+    assert st.stats.disk_reads == 3 and st.stats.buffer_hits == 0
+    st.stats.reset()
+    for _ in range(5):
+        st.fetch_rows(ids)                      # warm: all buffer
+    assert st.stats.buffer_hits == 15 and st.stats.disk_reads == 0
+    # promoted rows are clean: eviction must not write them back
+    st.write_rows(np.arange(8, dtype=np.int64) + 40,
+                  np.ones((8, 8), np.float32))  # flood the buffer
+    assert st.stats.disk_writes == 0            # only clean rows evicted
+
+
+def test_fetch_write_roundtrip_large_batch_through_small_buffer(tmp_path):
+    """Batch larger than W*: overflow spills to disk; values survive."""
+    st = _mk(tmp_path, buffer_rows=4)
+    ids = np.arange(20, dtype=np.int64)
+    rows = np.arange(20 * 8, dtype=np.float32).reshape(20, 8)
+    st.write_rows(ids, rows)
+    np.testing.assert_array_equal(st.fetch_rows(ids), rows)
+    st.flush()
+    st2 = _mk(tmp_path, buffer_rows=0)          # restart: values on disk
+    np.testing.assert_array_equal(st2.fetch_rows(ids), rows)
+
+
+def test_versioned_fetch_orders_writes(tmp_path):
+    st = _mk(tmp_path, buffer_rows=4)
+    _, v0 = st.fetch_rows_versioned(np.array([1]))
+    v1 = st.write_rows(np.array([1]), np.ones((1, 8), np.float32))
+    _, v2 = st.fetch_rows_versioned(np.array([1]))
+    assert v0 < v1 <= v2
+
+
+def test_fetch_beyond_capacity_raises_explanatory_error(tmp_path):
+    st = _mk(tmp_path, buffer_rows=4)
+    with pytest.raises(ValueError, match="exceeds store capacity"):
+        st.fetch_rows(np.array([150]))          # capacity is 100
