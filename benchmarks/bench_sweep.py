@@ -1,0 +1,133 @@
+"""Sweep benchmark — the fused Gauss-Seidel sweep vs the legacy scan.
+
+Measures one full column-serial IEM sweep (B = L) at the reference cell
+D_s=256, L=64, K=128 on this backend's portable path, before (legacy
+``lax.scan`` + full-(W_s, K) segment-sum fold per column) and after (the
+delta-compacted fused path behind ``kernels.ops.gs_sweep``), plus the
+scheduled-sweep variant.  Emits machine-readable ``BENCH_sweep.json`` so
+future PRs have a pinned baseline trajectory.
+
+``--quick`` shrinks the cell for CI smoke runs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import em, foem
+from repro.core import scheduling as sched_lib
+from repro.core.types import LDAConfig, LocalState, MinibatchData
+
+
+def _timeit(fn, reps: int) -> float:
+    """Min wall seconds per call (least-noise estimator), compile excluded."""
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times))
+
+
+def _make_state(D, L, K, W, seed=0):
+    rng = np.random.default_rng(seed)
+    wid = jnp.asarray(rng.integers(0, W, (D, L)).astype(np.int32))
+    cnt = jnp.asarray(rng.integers(1, 5, (D, L)).astype(np.float32))
+    mu = jnp.asarray(rng.dirichlet(np.ones(K), (D, L)).astype(np.float32))
+    batch = MinibatchData(word_ids=wid, counts=cnt)
+    theta = em.fold_theta(mu, cnt)
+    phi, ptot = em.fold_phi(mu, cnt, wid, W)
+    return batch, LocalState(mu=mu, theta_dk=theta), phi, ptot
+
+
+def bench_cell(D, L, K, W, reps, active_topics):
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    batch, local, phi, ptot = _make_state(D, L, K, W)
+
+    def sweep_fn(cfg_v):
+        @jax.jit
+        def run(local, phi, ptot):
+            new_local, d_wk, d_k = em.blocked_iem_sweep(
+                batch, local, phi, ptot, cfg_v
+            )
+            return new_local.theta_dk, d_wk, d_k
+        return lambda: run(local, phi, ptot)
+
+    before = _timeit(sweep_fn(dataclasses.replace(cfg, sweep_impl="scan")),
+                     reps)
+    after = _timeit(sweep_fn(cfg), reps)
+
+    # scheduled (sparse) sweep variant at the same cell
+    cfg_s = dataclasses.replace(cfg, active_topics=min(active_topics, K))
+    scheduler = sched_lib.full_sweep_residuals(
+        local.mu, jnp.zeros_like(local.mu), batch.counts, batch.word_ids, W
+    )
+
+    @jax.jit
+    def run_sched(local, phi, ptot, scheduler):
+        new_local, phi, ptot, scheduler = foem.scheduled_iem_sweep(
+            batch, local, phi, ptot, scheduler, cfg_s
+        )
+        return new_local.theta_dk, phi, ptot, scheduler.r_w
+
+    scheduled = _timeit(lambda: run_sched(local, phi, ptot, scheduler), reps)
+    return before, after, scheduled
+
+
+def main(rows=None, argv=None):
+    rows = rows if rows is not None else []
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small smoke cell (CI)")
+    ap.add_argument("--out", default=None,
+                    help="output path; quick mode defaults to a separate "
+                         "file so it can't clobber the pinned baseline")
+    args = ap.parse_args(argv if argv is not None else [])
+
+    if args.quick:
+        D, L, K, W, reps = 32, 16, 32, 512, 3
+    else:
+        D, L, K, W, reps = 256, 64, 128, 8192, 9
+    if args.out is None:
+        args.out = "BENCH_sweep_quick.json" if args.quick else "BENCH_sweep.json"
+
+    before, after, scheduled = bench_cell(D, L, K, W, reps,
+                                          active_topics=16)
+    speedup = before / max(after, 1e-12)
+
+    cell = f"D{D}_L{L}_K{K}_W{W}"
+    rows.append(csv_row(f"sweep_scan_{cell}", before * 1e6,
+                        f"impl=scan;speedup=1.00"))
+    rows.append(csv_row(f"sweep_fused_{cell}", after * 1e6,
+                        f"impl=fused;speedup={speedup:.2f}"))
+    rows.append(csv_row(f"sweep_scheduled_{cell}", scheduled * 1e6,
+                        "impl=scheduled;active_topics=16"))
+
+    payload = {
+        "cell": {"D_s": D, "L": L, "K": K, "W": W, "B": L, "reps": reps},
+        "backend": jax.default_backend(),
+        "quick": bool(args.quick),
+        "full_sweep": {
+            "before_scan_s": before,
+            "after_fused_s": after,
+            "speedup": speedup,
+        },
+        "scheduled_sweep": {"seconds": scheduled, "active_topics": 16},
+    }
+    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out} (speedup {speedup:.2f}x)", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(argv=sys.argv[1:])

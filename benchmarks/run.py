@@ -7,12 +7,15 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   * Figs 10/11 topic-count sweep                 (bench_topics)
   * Fig. 12  perplexity-vs-time convergence      (bench_convergence)
   * Table 3  complexity accounting               (bench_complexity)
+  * sweep    fused vs scan Gauss-Seidel sweep    (bench_sweep → BENCH_sweep.json)
 
-``python -m benchmarks.run [--only fig7,table5,...]``
+``python -m benchmarks.run [--only fig7,table5,sweep,...] [--quick]``
+(``--quick`` currently applies to the sweep suite's smoke cell.)
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -23,6 +26,7 @@ from benchmarks import (
     bench_minibatch,
     bench_scheduling,
     bench_streaming,
+    bench_sweep,
     bench_topics,
 )
 
@@ -33,12 +37,15 @@ SUITES = {
     "fig10_11": bench_topics.main,
     "fig12": bench_convergence.main,
     "table3": bench_complexity.main,
+    "sweep": bench_sweep.main,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", help="comma-separated suite filter")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode for suites that support it")
     args = ap.parse_args()
     picks = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
@@ -46,7 +53,16 @@ def main() -> None:
     for name in picks:
         t0 = time.time()
         try:
-            SUITES[name]([])
+            fn = SUITES[name]
+            # forward --quick to any suite main that supports a quick mode
+            # (either an argparse-style `argv` or a `quick` keyword)
+            params = inspect.signature(fn).parameters
+            if "argv" in params:
+                fn([], argv=["--quick"] if args.quick else [])
+            elif "quick" in params:
+                fn([], quick=args.quick)
+            else:
+                fn([])
         except Exception:                      # noqa: BLE001
             failures.append(name)
             traceback.print_exc()

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import GlobalStats, LDAConfig, LocalState, MinibatchData
+from repro.kernels import ops as kops
 
 
 # ---------------------------------------------------------------------------
@@ -103,6 +104,19 @@ def fold_phi(
     return delta_wk, weighted.sum(axis=(0, 1))
 
 
+def fold_phi_delta(
+    mu_new: jax.Array, mu_old: jax.Array, counts: jax.Array,
+    word_ids: jax.Array, vocab_size: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Replacement fold Δφ̂ = Σ x (μ_new − μ_old) as ONE scatter.
+
+    Equivalent to ``fold_phi(mu_new) − fold_phi(mu_old)`` but touches the
+    (W, K) matrix once instead of twice — the delta-compacted form used by
+    the warm-up sweeps.
+    """
+    return fold_phi(mu_new - mu_old, counts, word_ids, vocab_size)
+
+
 # ---------------------------------------------------------------------------
 # Sweeps
 # ---------------------------------------------------------------------------
@@ -161,12 +175,24 @@ def blocked_iem_sweep(
     The working copy of φ̂ starts at ``phi_wk (+ this minibatch's μ folded in
     by the caller)``; we return the updated LocalState plus the *delta* of the
     minibatch totals so the caller can merge into the global stream state.
+
+    The default column-serial case (B == L) dispatches to the fused
+    Gauss-Seidel sweep (``kernels.ops.gs_sweep``): one launch instead of an
+    L-step scan, with the fold touching only the D gathered φ̂ rows per
+    column.  ``cfg.sweep_impl == "scan"`` or a coarse B keeps the legacy
+    blocked scan.
     """
     D, L = batch.word_ids.shape
     B = cfg.resolve_blocks(L, num_blocks)
     K = cfg.K
     W = vocab_size if vocab_size is not None else cfg.W
     Wrows = phi_wk.shape[0]
+
+    if B == L and cfg.sweep_impl == "fused":
+        new_local, d_wk, d_k, _ = gs_sweep_with_residuals(
+            batch, local, phi_wk, phi_k, cfg, vocab_size=W, as_delta=True
+        )
+        return new_local, d_wk, d_k
     pad = (-L) % B
     # Static split: pad L to a multiple of B with zero-count slots.
     if pad:
@@ -210,6 +236,39 @@ def blocked_iem_sweep(
     return LocalState(mu=mu_out, theta_dk=theta), d_wk, d_k
 
 
+def gs_sweep_with_residuals(
+    batch: MinibatchData,
+    local: LocalState,
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    cfg: LDAConfig,
+    *,
+    vocab_size: Optional[int] = None,
+    as_delta: bool = False,
+    interpret: bool = False,
+) -> Tuple[LocalState, jax.Array, jax.Array, jax.Array]:
+    """One fused column-serial Gauss-Seidel sweep, emitting eq. 36 residuals.
+
+    Returns ``(new_local, phi, ptot, residual (D, L, K))`` — with
+    ``as_delta=True`` the stats come back as minibatch deltas (the
+    ``blocked_iem_sweep`` contract) instead of updated working copies.
+    The residual is counts·|Δμ| per token, measured inside the sweep, so
+    scheduler initialisation after a warm-up sweep costs one scatter instead
+    of a full re-measurement pass (``scheduling.residuals_from_sweep``).
+    """
+    W = vocab_size if vocab_size is not None else cfg.W
+    mu, res, theta, phi, ptot = kops.gs_sweep(
+        batch.word_ids, batch.counts, local.mu, local.theta_dk,
+        phi_wk, phi_k,
+        alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1, wb=W * cfg.beta_m1,
+        unroll=cfg.sweep_unroll, interpret=interpret,
+    )
+    if as_delta:
+        phi = phi - phi_wk
+        ptot = ptot - phi_k
+    return LocalState(mu=mu, theta_dk=theta), phi, ptot, res
+
+
 # ---------------------------------------------------------------------------
 # Batch driver (BEM, paper Fig. 1) — used by tests/benchmarks on small corpora
 # ---------------------------------------------------------------------------
@@ -249,14 +308,25 @@ def iem_fit(
     """
     theta0 = fold_theta(mu0, batch.counts)
     phi0, ptot0 = fold_phi(mu0, batch.counts, batch.word_ids, cfg.W)
+    L = batch.word_ids.shape[1]
+    use_fused = (
+        cfg.sweep_impl == "fused" and cfg.resolve_blocks(L, num_blocks) == L
+    )
 
     def sweep(carry, _):
         local, phi_wk, phi_k = carry
-        new_local, d_wk, d_k = blocked_iem_sweep(
-            batch, local, phi_wk, phi_k, cfg, num_blocks=num_blocks
-        )
-        phi_wk = phi_wk + d_wk
-        phi_k = phi_k + d_k
+        if use_fused:
+            # working-copy form: the delta contract would keep the donated
+            # φ̂ operands live (and re-add them right away) — skip it
+            new_local, phi_wk, phi_k, _ = gs_sweep_with_residuals(
+                batch, local, phi_wk, phi_k, cfg
+            )
+        else:
+            new_local, d_wk, d_k = blocked_iem_sweep(
+                batch, local, phi_wk, phi_k, cfg, num_blocks=num_blocks
+            )
+            phi_wk = phi_wk + d_wk
+            phi_k = phi_k + d_k
         ll = map_log_likelihood(batch, new_local.theta_dk, phi_wk, phi_k, cfg)
         return (new_local, phi_wk, phi_k), ll
 

@@ -151,7 +151,8 @@ def scheduled_iem_sweep(
         return (theta, phi, ptot), (mu_out, abs_delta)
 
     (theta, phi, ptot), (mu_out_b, absdelta_b) = jax.lax.scan(
-        body, (local.theta_dk, phi_wk, phi_k), (w_b, c_b, mu_b, tt_b, ta_b)
+        body, (local.theta_dk, phi_wk, phi_k), (w_b, c_b, mu_b, tt_b, ta_b),
+        unroll=max(1, min(cfg.sweep_unroll, B)),
     )
 
     def unblk(x):
@@ -202,19 +203,31 @@ def foem_minibatch(
     local = LocalState(mu=mu0, theta_dk=theta0)
 
     # ---- warm-up full sweeps (paper Fig. 4's unscheduled first iteration);
-    # the last pair of sweeps initialises the residual matrices ----
-    prev_mu = local.mu
+    # the last sweep initialises the residual matrices ----
     warm = max(1, cfg.warmup_sweeps)
-    for _ in range(warm):
-        prev_mu = local.mu
-        local, dd_wk, dd_k = em.blocked_iem_sweep(
-            batch, local, phi, ptot, cfg, vocab_size=W
+    use_fused = cfg.sweep_impl == "fused" and cfg.resolve_blocks(L) == L
+    if use_fused:
+        # fused Gauss-Seidel sweep: residuals are emitted by the sweep
+        # itself, so the init costs one scatter instead of a re-measurement
+        res = None
+        for _ in range(warm):
+            local, phi, ptot, res = em.gs_sweep_with_residuals(
+                batch, local, phi, ptot, cfg, vocab_size=W
+            )
+        scheduler = sched_lib.residuals_from_sweep(
+            res, batch.word_ids, phi.shape[0]
         )
-        phi = phi + dd_wk
-        ptot = ptot + dd_k
-    scheduler = sched_lib.full_sweep_residuals(
-        local.mu, prev_mu, batch.counts, batch.word_ids, phi.shape[0]
-    )
+    else:
+        for _ in range(warm):
+            prev_mu = local.mu
+            local, dd_wk, dd_k = em.blocked_iem_sweep(
+                batch, local, phi, ptot, cfg, vocab_size=W
+            )
+            phi = phi + dd_wk
+            ptot = ptot + dd_k
+        scheduler = sched_lib.full_sweep_residuals(
+            local.mu, prev_mu, batch.counts, batch.word_ids, phi.shape[0]
+        )
 
     ppl0 = em.training_perplexity(
         batch, local.theta_dk, phi, ptot, cfg, vocab_size=W
@@ -227,6 +240,12 @@ def foem_minibatch(
             return scheduled_iem_sweep(
                 batch, local, phi, ptot, scheduler, cfg, vocab_size=W
             )
+        if use_fused:
+            # working-copy form: skip the delta round trip entirely
+            new_local, phi, ptot, _ = em.gs_sweep_with_residuals(
+                batch, local, phi, ptot, cfg, vocab_size=W
+            )
+            return new_local, phi, ptot, scheduler
         new_local, dwk, dk = em.blocked_iem_sweep(
             batch, local, phi, ptot, cfg, vocab_size=W
         )

@@ -122,6 +122,25 @@ def scatter_residuals(
     return summed, touched
 
 
+def residuals_from_sweep(
+    residual: jax.Array,    # (D, L, K) counts·|Δμ| emitted by the fused sweep
+    word_ids: jax.Array,    # (D, L)
+    num_words: int,
+) -> SchedulerState:
+    """Build the residual state from the fused sweep's emitted residuals.
+
+    The fused Gauss-Seidel sweep (``kernels.ops.gs_sweep``) measures
+    counts·|μ_new − μ_old| per token as a by-product of the E-step, so the
+    post-warm-up init (``full_sweep_residuals``) needs only this one
+    scatter — no re-measurement pass over (D, L, K)."""
+    D, L, K = residual.shape
+    r_wk = jax.ops.segment_sum(
+        residual.reshape(D * L, K), word_ids.reshape(D * L),
+        num_segments=num_words,
+    )
+    return SchedulerState(r_wk=r_wk, r_w=r_wk.sum(-1))
+
+
 def full_sweep_residuals(
     mu_new: jax.Array,      # (D, L, K)
     mu_old: jax.Array,      # (D, L, K)
@@ -131,10 +150,10 @@ def full_sweep_residuals(
 ) -> SchedulerState:
     """Residual init after a full (unscheduled) sweep — paper Fig. 4 ('In the
     first iteration FOEM ... scans the entire non-zero elements and topics,
-    which also initializes and updates the residual matrices')."""
-    d = counts[..., None] * jnp.abs(mu_new - mu_old)          # (D, L, K)
-    D, L, K = d.shape
-    r_wk = jax.ops.segment_sum(
-        d.reshape(D * L, K), word_ids.reshape(D * L), num_segments=num_words
+    which also initializes and updates the residual matrices').
+
+    Measures counts·|Δμ| post hoc; the fused sweep emits the same quantity
+    for free, in which case use ``residuals_from_sweep`` directly."""
+    return residuals_from_sweep(
+        counts[..., None] * jnp.abs(mu_new - mu_old), word_ids, num_words
     )
-    return SchedulerState(r_wk=r_wk, r_w=r_wk.sum(-1))

@@ -102,7 +102,11 @@ class FOEMTrainer:
                 )
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}")
-        return jax.jit(run)
+        # Donate the (W_s, K) rows and (K,) totals: the inner loop rewrites
+        # both wholesale, so the device can update them in place instead of
+        # copying per step.  (CPU has no donation; skip the warning there.)
+        donate = () if jax.default_backend() == "cpu" else (2, 3)
+        return jax.jit(run, donate_argnums=donate)
 
     def _get_step_fn(self, shapes):
         key = (self.algorithm, shapes)
@@ -158,7 +162,12 @@ class FOEMTrainer:
         new_rows, new_phi_k, sweeps, ppl = step_fn(
             sub, batch, jnp.asarray(phi_rows), jnp.asarray(phi_k), live_w
         )
-        new_rows = np.asarray(new_rows)
+        # One transfer for rows, totals AND the diagnostic scalars: fetching
+        # int(sweeps)/float(ppl) separately would stall the prefetch pipeline
+        # with two extra device syncs after the row sync.
+        new_rows, new_phi_k, sweeps, ppl = jax.device_get(
+            (new_rows, new_phi_k, sweeps, ppl)
+        )
         new_phi_k = np.asarray(new_phi_k, np.float64)
 
         # --- write back + advance cursor ---

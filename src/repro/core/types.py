@@ -43,6 +43,14 @@ class LDAConfig:
     # become too rare to preserve the T_IEM < T_BEM ordering (B=1 is plain
     # Jacobi-with-self-exclusion). Only set >0 when scan length dominates.
     iem_blocks: int = 0
+    # --- column-serial sweep implementation ---
+    # "fused": the single-launch Gauss-Seidel sweep (kernels/gs_sweep.py on
+    # TPU, the delta-compacted portable scan elsewhere) — one launch per
+    # sweep, fold touches only the D gathered φ̂ rows per column.
+    # "scan": the legacy L-step lax.scan with a full-(W_s, K) segment-sum
+    # fold per column (kept as the coarse-block path and a reference).
+    sweep_impl: str = "fused"
+    sweep_unroll: int = 8      # column-tile chunking of the portable scan
     # --- dynamic scheduling (FOEM §3.1) ---
     active_topics: int = 0     # λ_k·K; 0 disables scheduling (== full IEM)
     active_words_frac: float = 1.0  # λ_w
@@ -68,6 +76,10 @@ class LDAConfig:
             raise ValueError("active_words_frac (λ_w) must be in (0, 1]")
         if self.rho_mode not in ("accumulate", "stepwise"):
             raise ValueError(f"unknown rho_mode {self.rho_mode!r}")
+        if self.sweep_impl not in ("fused", "scan"):
+            raise ValueError(f"unknown sweep_impl {self.sweep_impl!r}")
+        if self.sweep_unroll < 1:
+            raise ValueError("sweep_unroll must be >= 1")
 
     @property
     def K(self) -> int:

@@ -26,10 +26,11 @@ DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024   # bytes; ~half of a v5e core's VMEM
 
 
 def _estep_kernel(
-    theta_ref, phi_ref, ptot_ref, ex_ref, mu_old_ref, counts_ref,
-    mu_ref, res_ref, *, alpha_m1: float, beta_m1: float, wb: float,
+    theta_ref, phi_ref, ptot_ref, ex_ref, mu_old_ref, counts_ref, wb_ref,
+    mu_ref, res_ref, *, alpha_m1: float, beta_m1: float,
     use_exclude: bool,
 ):
+    wb = wb_ref[0, 0]             # W·(β−1); W may be traced (live vocab)
     th = theta_ref[...]
     ph = phi_ref[...]
     pt = ptot_ref[...]            # (1, K) broadcast row
@@ -56,7 +57,7 @@ def token_block_for(num_topics: int, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("alpha_m1", "beta_m1", "wb", "use_exclude", "block_tokens",
+    static_argnames=("alpha_m1", "beta_m1", "use_exclude", "block_tokens",
                      "interpret"),
 )
 def fused_estep_pallas(
@@ -69,18 +70,32 @@ def fused_estep_pallas(
     *,
     alpha_m1: float,
     beta_m1: float,
-    wb: float,
+    wb: jax.Array | float,    # W·(β−1); may be traced (live vocab size)
     use_exclude: bool,
     block_tokens: int = 0,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (mu_new (T,K), residual (T,K)).  T must divide by the block."""
+    """Returns (mu_new (T,K), residual (T,K)).
+
+    ``T`` need not divide the token block: the wrapper pads the token axis
+    to the block boundary with zero-count/zero-stat rows (whose μ is a
+    harmless normalised row and whose residual is 0) and slices the outputs,
+    so callers never have to know BT.
+    """
     T, K = theta_rows.shape
     BT = block_tokens or token_block_for(K)
     BT = min(BT, T)
-    if T % BT:
-        raise ValueError(f"token count {T} not divisible by block {BT}")
-    grid = (T // BT,)
+    pad = (-T) % BT
+    if pad:
+        pad_rows = ((0, pad), (0, 0))
+        theta_rows = jnp.pad(theta_rows, pad_rows)
+        phi_rows = jnp.pad(phi_rows, pad_rows)
+        mu_old = jnp.pad(mu_old, pad_rows)
+        counts = jnp.pad(counts, ((0, pad),))
+        if use_exclude:
+            exclude = jnp.pad(exclude, pad_rows)
+    Tp = T + pad
+    grid = (Tp // BT,)
 
     tok_spec = pl.BlockSpec((BT, K), lambda i: (i, 0))
     tot_spec = pl.BlockSpec((1, K), lambda i: (0, 0))
@@ -91,16 +106,18 @@ def fused_estep_pallas(
 
     kernel = functools.partial(
         _estep_kernel,
-        alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, use_exclude=use_exclude,
+        alpha_m1=alpha_m1, beta_m1=beta_m1, use_exclude=use_exclude,
     )
+    wb_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     mu, res = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[tok_spec, tok_spec, tot_spec, ex_spec, tok_spec, cnt_spec],
+        in_specs=[tok_spec, tok_spec, tot_spec, ex_spec, tok_spec, cnt_spec,
+                  wb_spec],
         out_specs=[tok_spec, tok_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((T, K), theta_rows.dtype),
-            jax.ShapeDtypeStruct((T, K), theta_rows.dtype),
+            jax.ShapeDtypeStruct((Tp, K), theta_rows.dtype),
+            jax.ShapeDtypeStruct((Tp, K), theta_rows.dtype),
         ],
         interpret=interpret,
     )(
@@ -110,5 +127,6 @@ def fused_estep_pallas(
         ex,
         mu_old,
         counts[:, None],
+        jnp.reshape(jnp.asarray(wb, theta_rows.dtype), (1, 1)),
     )
-    return mu, res
+    return mu[:T], res[:T]

@@ -1,0 +1,235 @@
+"""Pallas TPU kernel: fused column-serial Gauss-Seidel IEM sweep.
+
+The paper's inner loop (Fig. 2, adapted to TPU as ``em.blocked_iem_sweep``
+with B = L) is a *sequential* scan over token columns: E-step with eq. 13
+self-exclusion for the column's D documents, then an immediate fold of the
+Δ-statistics into θ̂ and φ̂ so the next column sees them (Gauss-Seidel).
+Expressed as ``lax.scan`` + ``segment_sum`` that is L kernel launches per
+sweep, each paying a full-matrix φ̂ round trip; expressed here it is ONE
+launch:
+
+  * the grid is the column index — Pallas grids execute sequentially on a
+    TPU core, which is exactly the Gauss-Seidel ordering we need;
+  * θ̂ (D, K), φ̂ (W_s, K) and φ̂(k) are carried in VMEM across grid steps:
+    their block index maps are constant, so Pallas neither re-fetches nor
+    writes them back until the last column — the fold is on-chip;
+  * the HBM buffers for θ̂/φ̂/φ̂(k) are donated via ``input_output_aliases``
+    (no second (W_s, K) allocation), with the gmm-style first-visit copy
+    initialising the output blocks;
+  * the word ids are a scalar-prefetch operand (``PrefetchScalarGridSpec``)
+    so the kernel can issue the per-document dynamic row gather/scatter on
+    φ̂ without materialising one-hot matrices;
+  * the per-column residual counts·|Δμ| (paper eq. 36) is emitted as a
+    second (D, L, K) output, which makes the post-warm-up
+    ``scheduling.full_sweep_residuals`` re-measurement free.
+
+Per column the kernel touches O(D·K) values of φ̂ (the D gathered rows)
+instead of the O(W_s·K) full-matrix scatter of the scan formulation — the
+sweep becomes arithmetic-bound, not launch/HBM-bound.
+
+VMEM budget: 2·(W_s + D)·K·4 B for the carried φ̂/θ̂ pairs plus the small
+per-column blocks; W_s ≤ ~8k at K = 128 fits comfortably.  The dispatch
+layer (``ops.gs_sweep``) falls back to the delta-compacted portable path
+when the working set is larger or the backend is not TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_VMEM_BUDGET = 12 * 1024 * 1024   # bytes (~3/4 of a 16 MB core)
+
+
+def fits_vmem(num_rows: int, num_docs: int, num_topics: int,
+              budget: int = DEFAULT_VMEM_BUDGET) -> bool:
+    """Can the kernel's live VMEM set fit for one launch?
+
+    Counts what the compiled kernel actually holds, at the padded shapes:
+    the carried φ̂/θ̂/φ̂(k) pairs (in + aliased out block each), the
+    l-varying per-column blocks (μ in/out, residual out — double-buffered
+    by the pipeline), the counts column and the gather scratch.
+    """
+    Dp = num_docs + (-num_docs) % 8
+    Kp = num_topics + (-num_topics) % 128      # lane_align=128 when compiled
+    carried = 2 * (num_rows + Dp + 1) * Kp * 4
+    per_column = (2 * 3 + 1) * Dp * Kp * 4 + 2 * Dp * 128 * 4
+    return carried + per_column <= budget
+
+
+def _gs_sweep_kernel(
+    # scalar prefetch
+    wid_ref,                   # (D, L) int32 — word id per (doc, column)
+    wb_ref,                    # (1,) f32 — W·(β−1); traced (W is the live
+                               # vocab in the streaming trainer), so it is
+                               # a scalar operand, not a jit-static
+    # inputs
+    counts_ref,                # (D, 1)      — this column's counts
+    mu_in_ref,                 # (1, D, K)   — this column's μ (column-major)
+    theta_in_ref,              # (D, K)
+    phi_in_ref,                # (W_s, K)
+    ptot_in_ref,               # (1, K)
+    # outputs
+    theta_ref,                 # (D, K)   carried; aliased with theta_in
+    phi_ref,                   # (W_s, K) carried; aliased with phi_in
+    ptot_ref,                  # (1, K)   carried; aliased with ptot_in
+    mu_ref,                    # (1, D, K) this column's new μ
+    res_ref,                   # (1, D, K) counts·|Δμ| (eq. 36 residual)
+    # scratch
+    rows_ref,                  # (D, K) VMEM — gathered φ̂ rows
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    k_actual: int,
+):
+    l = pl.program_id(0)
+    D, K = theta_ref.shape
+    wb = wb_ref[0]
+
+    # First column: bring the carried stats into the output blocks (they are
+    # aliased with the inputs in HBM but the VMEM out block starts undefined).
+    @pl.when(l == 0)
+    def _():
+        theta_ref[...] = theta_in_ref[...]
+        phi_ref[...] = phi_in_ref[...]
+        ptot_ref[...] = ptot_in_ref[...]
+
+    cnt = counts_ref[...]                       # (D, 1)
+    mu_old = mu_in_ref[0]                       # (D, K)
+    theta = theta_ref[...]
+    ptot = ptot_ref[...]                        # (1, K)
+
+    # ---- gather: φ̂ rows for this column's D word ids (dynamic, serial) ----
+    def gather(d, _):
+        w = wid_ref[d, l]
+        rows_ref[pl.ds(d, 1), :] = phi_ref[pl.ds(w, 1), :]
+        return 0
+    jax.lax.fori_loop(0, D, gather, 0)
+    phi_rows = rows_ref[...]
+
+    # ---- fused E-step: eq. 13 exclusion + responsibility + normalise ----
+    ex = cnt * mu_old
+    th = jnp.maximum(theta - ex, 0.0)
+    ph = jnp.maximum(phi_rows - ex, 0.0)
+    pt = ptot - ex
+    num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+    if k_actual != K:
+        # padded topic lanes carry zero stats; keep them out of the renorm
+        lane = jax.lax.broadcasted_iota(jnp.int32, (D, K), 1)
+        num = jnp.where(lane < k_actual, num, 0.0)
+    denom = jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
+    mu_new = num / denom
+    delta = cnt * mu_new - ex                   # (D, K)
+
+    # ---- Gauss-Seidel fold: θ̂/φ̂/φ̂(k) updated before the next column ----
+    theta_ref[...] = theta + delta
+    ptot_ref[...] = ptot + delta.sum(0, keepdims=True)
+
+    def scatter(d, _):
+        w = wid_ref[d, l]
+        row = jax.lax.dynamic_slice(delta, (d, 0), (1, K))
+        phi_ref[pl.ds(w, 1), :] = phi_ref[pl.ds(w, 1), :] + row
+        return 0
+    jax.lax.fori_loop(0, D, scatter, 0)
+
+    mu_ref[0] = mu_new
+    res_ref[0] = cnt * jnp.abs(mu_new - mu_old)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha_m1", "beta_m1", "lane_align", "interpret"),
+)
+def gs_sweep_pallas(
+    word_ids: jax.Array,       # (D, L) int32 — rows into phi_wk
+    counts: jax.Array,         # (D, L) float32
+    mu: jax.Array,             # (D, L, K)
+    theta: jax.Array,          # (D, K)
+    phi_wk: jax.Array,         # (W_s, K)
+    phi_k: jax.Array,          # (K,)
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: jax.Array | float,     # W·(β−1), with the *global* W; may be traced
+    lane_align: int = 1,       # pad K to this multiple (128 for compiled TPU)
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused column-serial Gauss-Seidel sweep in a single launch.
+
+    Returns ``(mu_new (D,L,K), residual (D,L,K), theta (D,K),
+    phi_wk (W_s,K), phi_k (K,))`` — the same stats the scan formulation
+    produces, plus the eq. 36 residuals measured for free.
+
+    Documents are padded to the 8-sublane boundary with zero-count slots
+    (zero counts ⇒ zero Δ, so padding is exact); ``lane_align`` pads the
+    topic axis, with padded lanes masked out of the renormalisation.
+    """
+    D, L = word_ids.shape
+    K = mu.shape[-1]
+    Wrows = phi_wk.shape[0]
+
+    pad_d = (-D) % 8
+    pad_k = (-K) % lane_align if lane_align > 1 else 0
+    Dp, Kp = D + pad_d, K + pad_k
+    if pad_d or pad_k:
+        word_ids = jnp.pad(word_ids, ((0, pad_d), (0, 0)))
+        counts = jnp.pad(counts, ((0, pad_d), (0, 0)))
+        mu = jnp.pad(mu, ((0, pad_d), (0, 0), (0, pad_k)))
+        theta = jnp.pad(theta, ((0, pad_d), (0, pad_k)))
+        phi_wk = jnp.pad(phi_wk, ((0, 0), (0, pad_k)))
+        phi_k = jnp.pad(phi_k, ((0, pad_k),))
+
+    mu_cols = mu.transpose(1, 0, 2)             # (L, Dp, Kp) column-major
+
+    kernel = functools.partial(
+        _gs_sweep_kernel,
+        alpha_m1=alpha_m1, beta_m1=beta_m1, k_actual=K,
+    )
+    wb_arr = jnp.reshape(jnp.asarray(wb, mu.dtype), (1,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((Dp, 1), lambda l, wid, wb: (0, l)),
+            pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (l, 0, 0)),
+            pl.BlockSpec((Dp, Kp), lambda l, wid, wb: (0, 0)),
+            pl.BlockSpec((Wrows, Kp), lambda l, wid, wb: (0, 0)),
+            pl.BlockSpec((1, Kp), lambda l, wid, wb: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Dp, Kp), lambda l, wid, wb: (0, 0)),
+            pl.BlockSpec((Wrows, Kp), lambda l, wid, wb: (0, 0)),
+            pl.BlockSpec((1, Kp), lambda l, wid, wb: (0, 0)),
+            pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (l, 0, 0)),
+            pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (l, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dp, Kp), mu.dtype)],
+    )
+    theta_out, phi_out, ptot_out, mu_out, res_out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp, Kp), theta.dtype),
+            jax.ShapeDtypeStruct((Wrows, Kp), phi_wk.dtype),
+            jax.ShapeDtypeStruct((1, Kp), phi_k.dtype),
+            jax.ShapeDtypeStruct((L, Dp, Kp), mu.dtype),
+            jax.ShapeDtypeStruct((L, Dp, Kp), mu.dtype),
+        ],
+        # flat operands: wid(0) wb(1) counts(2) mu(3) theta(4) phi(5) ptot(6)
+        input_output_aliases={4: 0, 5: 1, 6: 2},
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(word_ids, wb_arr, counts, mu_cols, theta, phi_wk, phi_k[None, :])
+
+    mu_new = mu_out.transpose(1, 0, 2)[:D, :, :K]
+    res = res_out.transpose(1, 0, 2)[:D, :, :K]
+    return (
+        mu_new, res, theta_out[:D, :K], phi_out[:, :K], ptot_out[0, :K],
+    )

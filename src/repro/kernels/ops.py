@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.foem_estep import fused_estep_pallas
+from repro.kernels.gs_sweep import fits_vmem, gs_sweep_pallas
 from repro.kernels.topk_estep import topk_estep_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 
@@ -72,6 +73,109 @@ def topk_estep(
     return ref.topk_estep_ref(
         theta_a, phi_a, ptot_a, mu_prev_a, counts, active,
         alpha_m1, beta_m1, wb,
+    )
+
+
+def _gs_sweep_portable(
+    word_ids: jax.Array,       # (D, L) int32
+    counts: jax.Array,         # (D, L)
+    mu: jax.Array,             # (D, L, K)
+    theta: jax.Array,          # (D, K)
+    phi_wk: jax.Array,         # (W_s, K)
+    phi_k: jax.Array,          # (K,)
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,
+    unroll: int = 8,
+    use_pallas: bool = False,
+    interpret: bool = False,
+):
+    """Delta-compacted column-serial Gauss-Seidel sweep — portable jnp path.
+
+    The legacy formulation folded each column with a full-(W_s, K)
+    ``segment_sum``; here the fold touches only the D gathered rows
+    (``.at[wid].add``), columns are chunked into unrolled scan tiles, and
+    the E-step arithmetic routes through ``fused_estep`` (the Pallas
+    kernel's jnp oracle on CPU, the kernel itself on TPU).
+    """
+    L = word_ids.shape[1]
+
+    def col(carry, xs):
+        theta, phi, ptot = carry
+        wid, cnt, mu_old = xs                       # (D,) (D,) (D, K)
+        ex = cnt[:, None] * mu_old
+        rows = jnp.take(phi, wid, axis=0)           # gather D rows only
+        mu_new, res = fused_estep(
+            theta, rows, ptot, ex, mu_old, cnt,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        delta = cnt[:, None] * mu_new - ex
+        carry = (
+            theta + delta,
+            phi.at[wid].add(delta),                 # scatter D rows only
+            ptot + delta.sum(0),
+        )
+        return carry, (mu_new, res)
+
+    (theta, phi, ptot), (mu_cols, res_cols) = jax.lax.scan(
+        col,
+        (theta, phi_wk, phi_k),
+        (word_ids.T, counts.T, mu.transpose(1, 0, 2)),
+        unroll=max(1, min(unroll, L)),
+    )
+    return (
+        mu_cols.transpose(1, 0, 2), res_cols.transpose(1, 0, 2),
+        theta, phi, ptot,
+    )
+
+
+def gs_sweep(
+    word_ids: jax.Array,       # (D, L) int32 — rows into phi_wk
+    counts: jax.Array,         # (D, L)
+    mu: jax.Array,             # (D, L, K)
+    theta: jax.Array,          # (D, K)
+    phi_wk: jax.Array,         # (W_s, K)
+    phi_k: jax.Array,          # (K,)
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,
+    unroll: int = 8,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused column-serial Gauss-Seidel IEM sweep: one launch per sweep.
+
+    Returns ``(mu_new, residual, theta, phi_wk, phi_k)`` where ``residual``
+    is the per-token counts·|Δμ| (paper eq. 36), emitted for free.
+
+    Dispatch: the single-launch Pallas kernel on TPU whenever the carried
+    (W_s + D, K) working set fits VMEM; otherwise the delta-compacted
+    portable scan (which still routes its E-step through the fused kernel
+    on TPU).  ``interpret=True`` forces the kernel body on CPU (tests).
+    """
+    D, L = word_ids.shape
+    K = mu.shape[-1]
+    auto = use_pallas is None
+    if use_pallas is False:
+        interpret = False       # explicit False wins: pure-jnp oracle
+    elif auto:
+        use_pallas = on_tpu() and fits_vmem(phi_wk.shape[0], D, K)
+    if use_pallas or interpret:
+        return gs_sweep_pallas(
+            word_ids, counts, mu, theta, phi_wk, phi_k,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+            lane_align=128 if (use_pallas and not interpret) else 1,
+            interpret=interpret,
+        )
+    # an explicit use_pallas=False means NO kernels at all (pure-jnp oracle
+    # for tests); only the auto path lets the inner E-step use the kernel
+    return _gs_sweep_portable(
+        word_ids, counts, mu, theta, phi_wk, phi_k,
+        alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, unroll=unroll,
+        use_pallas=on_tpu() if auto else False,
     )
 
 

@@ -22,8 +22,9 @@ from jax.experimental import pallas as pl
 
 def _topk_kernel(
     theta_ref, phi_ref, ptot_ref, mu_prev_ref, counts_ref, active_ref,
-    mu_ref, delta_ref, *, alpha_m1: float, beta_m1: float, wb: float,
+    wb_ref, mu_ref, delta_ref, *, alpha_m1: float, beta_m1: float,
 ):
+    wb = wb_ref[0, 0]             # W·(β−1); W may be traced (live vocab)
     mu_prev = mu_prev_ref[...]
     cnt = counts_ref[...]                       # (BT, 1)
     ex = cnt * mu_prev
@@ -47,7 +48,7 @@ def _topk_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("alpha_m1", "beta_m1", "wb", "block_tokens", "interpret"),
+    static_argnames=("alpha_m1", "beta_m1", "block_tokens", "interpret"),
 )
 def topk_estep_pallas(
     theta_a: jax.Array,     # (T, A)
@@ -59,7 +60,7 @@ def topk_estep_pallas(
     *,
     alpha_m1: float,
     beta_m1: float,
-    wb: float,
+    wb: jax.Array | float,    # W·(β−1); may be traced (live vocab size)
     block_tokens: int = 256,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
@@ -70,13 +71,14 @@ def topk_estep_pallas(
     grid = (T // BT,)
     tile = pl.BlockSpec((BT, A), lambda i: (i, 0))
     col = pl.BlockSpec((BT, 1), lambda i: (i, 0))
+    scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
     kernel = functools.partial(
-        _topk_kernel, alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb
+        _topk_kernel, alpha_m1=alpha_m1, beta_m1=beta_m1
     )
     mu, delta = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[tile, tile, tile, tile, col, col],
+        in_specs=[tile, tile, tile, tile, col, col, scal],
         out_specs=[tile, tile],
         out_shape=[
             jax.ShapeDtypeStruct((T, A), theta_a.dtype),
@@ -86,5 +88,6 @@ def topk_estep_pallas(
     )(
         theta_a, phi_a, ptot_a, mu_prev_a,
         counts[:, None], active.astype(theta_a.dtype)[:, None],
+        jnp.reshape(jnp.asarray(wb, theta_a.dtype), (1, 1)),
     )
     return mu, delta

@@ -84,6 +84,82 @@ def test_flash_attention_bf16():
     )
 
 
+@pytest.mark.parametrize("T,blk", [(33, 16), (7, 8), (100, 32)])
+def test_fused_estep_kernel_pads_ragged_token_count(T, blk):
+    """T % BT != 0 must pad-and-slice inside the wrapper, not raise."""
+    K = 32
+    rng = np.random.default_rng(T)
+    th = jnp.asarray(rng.gamma(2., 1., (T, K)).astype(np.float32))
+    ph = jnp.asarray(rng.gamma(2., 1., (T, K)).astype(np.float32))
+    pt = jnp.asarray(rng.gamma(5., 1., (K,)).astype(np.float32)) + 50
+    mu_old = jnp.asarray(rng.dirichlet(np.ones(K), T).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(1, 5, T).astype(np.float32))
+    ex = cnt[:, None] * mu_old
+    mu, res = fused_estep_pallas(
+        th, ph, pt, ex, mu_old, cnt,
+        alpha_m1=0.01, beta_m1=0.01, wb=0.01 * 5000,
+        use_exclude=True, block_tokens=blk, interpret=True,
+    )
+    assert mu.shape == (T, K) and res.shape == (T, K)
+    mu_r, res_r = ref.fused_estep_ref(
+        th, ph, pt, ex, mu_old, cnt, 0.01, 0.01, 0.01 * 5000
+    )
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(res_r), atol=1e-6)
+
+
+def test_fused_estep_padding_bitwise_invisible():
+    """Wrapper padding ≡ caller padding: same kernel, same bits."""
+    T, Tp, K, blk = 20, 32, 16, 16
+    rng = np.random.default_rng(5)
+    th = rng.gamma(2., 1., (Tp, K)).astype(np.float32)
+    ph = rng.gamma(2., 1., (Tp, K)).astype(np.float32)
+    pt = rng.gamma(5., 1., K).astype(np.float32) + 50
+    mu_old = rng.dirichlet(np.ones(K), Tp).astype(np.float32)
+    cnt = rng.integers(1, 5, Tp).astype(np.float32)
+    th[T:], ph[T:], mu_old[T:], cnt[T:] = 0., 0., 0., 0.
+    kw = dict(alpha_m1=0.01, beta_m1=0.01, wb=50., use_exclude=False,
+              block_tokens=blk, interpret=True)
+    args = lambda n: tuple(map(jnp.asarray, (th[:n], ph[:n], pt)))
+    mu_a, res_a = fused_estep_pallas(
+        *args(T), None, jnp.asarray(mu_old[:T]), jnp.asarray(cnt[:T]), **kw)
+    mu_b, res_b = fused_estep_pallas(
+        *args(Tp), None, jnp.asarray(mu_old), jnp.asarray(cnt), **kw)
+    np.testing.assert_array_equal(np.asarray(mu_a), np.asarray(mu_b)[:T])
+    np.testing.assert_array_equal(np.asarray(res_a), np.asarray(res_b)[:T])
+
+
+def test_estep_kernels_accept_traced_wb():
+    """wb = W·(β−1) arrives as a tracer from the streaming trainer's
+    traced live-vocab argument; both E-step kernels must treat it as an
+    operand (regression: jit-static wb raised at trace time)."""
+    T, K, A = 16, 8, 8
+    rng = np.random.default_rng(0)
+    th = jnp.asarray(rng.gamma(2., 1., (T, K)).astype(np.float32)) + 1
+    pt = jnp.asarray(rng.gamma(5., 1., (K,)).astype(np.float32)) + 50
+    mu_old = jnp.asarray(rng.dirichlet(np.ones(K), T).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(1, 4, T).astype(np.float32))
+    act = jnp.asarray(rng.random(T) > 0.4)
+
+    @jax.jit
+    def run(live_w):
+        wb = live_w * 0.01
+        mu1, _ = fused_estep_pallas(
+            th, th, pt, None, mu_old, cnt, alpha_m1=.01, beta_m1=.01,
+            wb=wb, use_exclude=False, block_tokens=8, interpret=True,
+        )
+        ptA = jnp.broadcast_to(pt[None, :A], (T, A))
+        mu2, _ = topk_estep_pallas(
+            th[:, :A], th[:, :A], ptA, mu_old[:, :A], cnt, act,
+            alpha_m1=.01, beta_m1=.01, wb=wb, block_tokens=8,
+            interpret=True,
+        )
+        return mu1, mu2
+
+    mu1, mu2 = run(jnp.int32(5000))   # must not raise
+    assert mu1.shape == (T, K) and mu2.shape == (T, A)
+
+
 def test_token_block_vmem_budget():
     assert token_block_for(128) >= 8
     assert token_block_for(16384) >= 8

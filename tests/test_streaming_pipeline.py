@@ -14,12 +14,14 @@ from repro.data import synthetic_lda_corpus
 from repro.sparse import MinibatchStream, prefetch_iterator
 
 
-def _run(tmp_path, depth, *, buffer_rows=64, steps=6, tag=""):
+def _run(tmp_path, depth, *, buffer_rows=64, steps=6, tag="",
+         sweep_impl="fused"):
     corpus, _ = synthetic_lda_corpus(120, 150, 5, mean_doc_len=30, seed=11)
     # vocab (150) << corpus tokens: consecutive minibatches overlap heavily,
     # so staged fetches always race the previous write-back — the
     # reconciliation path is exercised on every step.
-    cfg = LDAConfig(num_topics=5, vocab_size=150, max_sweeps=4)
+    cfg = LDAConfig(num_topics=5, vocab_size=150, max_sweeps=4,
+                    sweep_impl=sweep_impl)
     store = ParameterStore(
         str(tmp_path / f"d{depth}{tag}"), num_topics=5, vocab_capacity=150,
         buffer_rows=buffer_rows,
@@ -33,9 +35,12 @@ def _run(tmp_path, depth, *, buffer_rows=64, steps=6, tag=""):
 
 
 @pytest.mark.parametrize("depth", [1, 2])
-def test_prefetch_is_bitwise_deterministic(tmp_path, depth):
-    phi_sync, phi_k_sync, _ = _run(tmp_path, 0)
-    phi_pf, phi_k_pf, ms = _run(tmp_path, depth)
+@pytest.mark.parametrize("sweep_impl", ["fused", "scan"])
+def test_prefetch_is_bitwise_deterministic(tmp_path, depth, sweep_impl):
+    """Prefetch on/off must be invisible with either sweep implementation
+    (the fused Gauss-Seidel sweep and the legacy scan)."""
+    phi_sync, phi_k_sync, _ = _run(tmp_path, 0, sweep_impl=sweep_impl)
+    phi_pf, phi_k_pf, ms = _run(tmp_path, depth, sweep_impl=sweep_impl)
     np.testing.assert_array_equal(phi_sync, phi_pf)
     np.testing.assert_array_equal(phi_k_sync, phi_k_pf)
     assert len(ms) == 6
