@@ -1,13 +1,19 @@
-"""Sweep benchmark — the fused Gauss-Seidel sweep vs the legacy scan.
+"""Sweep benchmark — the fused Gauss-Seidel sweeps vs the legacy scans.
 
-Measures one full column-serial IEM sweep (B = L) at the reference cell
-D_s=256, L=64, K=128 on this backend's portable path, before (legacy
-``lax.scan`` + full-(W_s, K) segment-sum fold per column) and after (the
-delta-compacted fused path behind ``kernels.ops.gs_sweep``), plus the
-scheduled-sweep variant.  Emits machine-readable ``BENCH_sweep.json`` so
-future PRs have a pinned baseline trajectory.
+Measures, at the reference cell D_s=256, L=64, K=128 on this backend's
+portable path:
 
-``--quick`` shrinks the cell for CI smoke runs.
+  * ``full``       — one dense column-serial IEM sweep (B = L), before
+    (legacy ``lax.scan`` + full-(W_s, K) segment-sum fold per column) and
+    after (the delta-compacted fused path behind ``kernels.ops.sweep``);
+  * ``scheduled``  — one §3.1 scheduled sparse sweep at A = 16 active
+    topics, before (the PR 2 blocked scan: per-column (D, A) gathers +
+    ``topk_estep`` + three 2-D scatters) and after (the single-launch
+    dispatch: word-level lane masks, masked full-K E-step, D-row folds,
+    one-segment-sum scheduler refresh).
+
+Emits machine-readable ``BENCH_sweep.json`` so future PRs have a pinned
+baseline trajectory.  ``--quick`` shrinks the cell for CI smoke runs.
 """
 from __future__ import annotations
 
@@ -49,10 +55,8 @@ def _make_state(D, L, K, W, seed=0):
     return batch, LocalState(mu=mu, theta_dk=theta), phi, ptot
 
 
-def bench_cell(D, L, K, W, reps, active_topics):
-    cfg = LDAConfig(num_topics=K, vocab_size=W)
-    batch, local, phi, ptot = _make_state(D, L, K, W)
-
+def bench_full(batch, local, phi, ptot, cfg, reps):
+    """Dense column-serial sweep: legacy scan vs fused dispatch."""
     def sweep_fn(cfg_v):
         @jax.jit
         def run(local, phi, ptot):
@@ -65,22 +69,32 @@ def bench_cell(D, L, K, W, reps, active_topics):
     before = _timeit(sweep_fn(dataclasses.replace(cfg, sweep_impl="scan")),
                      reps)
     after = _timeit(sweep_fn(cfg), reps)
+    return before, after
 
-    # scheduled (sparse) sweep variant at the same cell
-    cfg_s = dataclasses.replace(cfg, active_topics=min(active_topics, K))
+
+def bench_scheduled(batch, local, phi, ptot, cfg, reps, active_topics):
+    """Scheduled sparse sweep: the PR 2 blocked scan vs the single-launch
+    fused dispatch, full scheduler refresh included."""
+    W = phi.shape[0]
     scheduler = sched_lib.full_sweep_residuals(
         local.mu, jnp.zeros_like(local.mu), batch.counts, batch.word_ids, W
     )
 
-    @jax.jit
-    def run_sched(local, phi, ptot, scheduler):
-        new_local, phi, ptot, scheduler = foem.scheduled_iem_sweep(
-            batch, local, phi, ptot, scheduler, cfg_s
-        )
-        return new_local.theta_dk, phi, ptot, scheduler.r_w
+    def sched_fn(cfg_v):
+        @jax.jit
+        def run(local, phi, ptot, scheduler):
+            new_local, phi, ptot, scheduler, _ = foem.scheduled_iem_sweep(
+                batch, local, phi, ptot, scheduler, cfg_v
+            )
+            return new_local.theta_dk, phi, ptot, scheduler.r_w
+        return lambda: run(local, phi, ptot, scheduler)
 
-    scheduled = _timeit(lambda: run_sched(local, phi, ptot, scheduler), reps)
-    return before, after, scheduled
+    cfg_s = dataclasses.replace(cfg, active_topics=active_topics)
+    before = _timeit(
+        sched_fn(dataclasses.replace(cfg_s, sweep_impl="scan")), reps
+    )
+    after = _timeit(sched_fn(cfg_s), reps)
+    return before, after
 
 
 def main(rows=None, argv=None):
@@ -88,44 +102,75 @@ def main(rows=None, argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small smoke cell (CI)")
+    ap.add_argument("--suite", choices=("all", "full", "scheduled"),
+                    default="all", help="which sweep variant(s) to time")
     ap.add_argument("--out", default=None,
-                    help="output path; quick mode defaults to a separate "
-                         "file so it can't clobber the pinned baseline")
+                    help="output path; quick/partial runs default to "
+                         "separate files so they can't clobber the pinned "
+                         "baseline")
     args = ap.parse_args(argv if argv is not None else [])
 
     if args.quick:
-        D, L, K, W, reps = 32, 16, 32, 512, 3
+        D, L, K, W, reps, A = 32, 16, 32, 512, 3, 8
     else:
-        D, L, K, W, reps = 256, 64, 128, 8192, 9
+        D, L, K, W, reps, A = 256, 64, 128, 8192, 9, 16
+    A = min(A, K)
     if args.out is None:
-        args.out = "BENCH_sweep_quick.json" if args.quick else "BENCH_sweep.json"
+        stem = "BENCH_sweep_quick" if args.quick else "BENCH_sweep"
+        if args.suite != "all":
+            stem += f"_{args.suite}"
+        args.out = stem + ".json"
 
-    before, after, scheduled = bench_cell(D, L, K, W, reps,
-                                          active_topics=16)
-    speedup = before / max(after, 1e-12)
-
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    batch, local, phi, ptot = _make_state(D, L, K, W)
     cell = f"D{D}_L{L}_K{K}_W{W}"
-    rows.append(csv_row(f"sweep_scan_{cell}", before * 1e6,
-                        f"impl=scan;speedup=1.00"))
-    rows.append(csv_row(f"sweep_fused_{cell}", after * 1e6,
-                        f"impl=fused;speedup={speedup:.2f}"))
-    rows.append(csv_row(f"sweep_scheduled_{cell}", scheduled * 1e6,
-                        "impl=scheduled;active_topics=16"))
-
     payload = {
-        "cell": {"D_s": D, "L": L, "K": K, "W": W, "B": L, "reps": reps},
+        "cell": {"D_s": D, "L": L, "K": K, "W": W, "B": L, "A": A,
+                 "reps": reps},
         "backend": jax.default_backend(),
         "quick": bool(args.quick),
-        "full_sweep": {
+    }
+    report = []
+
+    if args.suite in ("all", "full"):
+        before, after = bench_full(batch, local, phi, ptot, cfg, reps)
+        speedup = before / max(after, 1e-12)
+        rows.append(csv_row(f"sweep_scan_{cell}", before * 1e6,
+                            "impl=scan;speedup=1.00"))
+        rows.append(csv_row(f"sweep_fused_{cell}", after * 1e6,
+                            f"impl=fused;speedup={speedup:.2f}"))
+        payload["full_sweep"] = {
             "before_scan_s": before,
             "after_fused_s": after,
             "speedup": speedup,
-        },
-        "scheduled_sweep": {"seconds": scheduled, "active_topics": 16},
-    }
+        }
+        report.append(f"full {speedup:.2f}x")
+
+    if args.suite in ("all", "scheduled"):
+        s_before, s_after = bench_scheduled(
+            batch, local, phi, ptot, cfg, reps, A
+        )
+        s_speedup = s_before / max(s_after, 1e-12)
+        rows.append(csv_row(f"sweep_sched_scan_{cell}_A{A}", s_before * 1e6,
+                            "impl=scan;speedup=1.00"))
+        rows.append(csv_row(f"sweep_sched_fused_{cell}_A{A}", s_after * 1e6,
+                            f"impl=fused;speedup={s_speedup:.2f}"))
+        payload["scheduled_sweep"] = {
+            "before_scan_s": s_before,
+            "after_fused_s": s_after,
+            "speedup": s_speedup,
+            "active_topics": A,
+        }
+        report.append(f"scheduled {s_speedup:.2f}x")
+
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# wrote {args.out} (speedup {speedup:.2f}x)", flush=True)
+    print(f"# wrote {args.out} ({', '.join(report)})", flush=True)
     return rows
+
+
+def main_scheduled(rows=None, argv=None):
+    """run.py entry for the scheduled-sweep-only suite."""
+    return main(rows, argv=(argv or []) + ["--suite", "scheduled"])
 
 
 if __name__ == "__main__":

@@ -7,10 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   * Figs 10/11 topic-count sweep                 (bench_topics)
   * Fig. 12  perplexity-vs-time convergence      (bench_convergence)
   * Table 3  complexity accounting               (bench_complexity)
-  * sweep    fused vs scan Gauss-Seidel sweep    (bench_sweep → BENCH_sweep.json)
+  * sweep    fused vs scan Gauss-Seidel sweeps — dense AND scheduled
+             (bench_sweep → BENCH_sweep.json)
+  * scheduled  the §3.1 scheduled sparse sweep alone: PR 2 blocked scan vs
+             the single-launch fused dispatch (bench_sweep --suite scheduled)
 
-``python -m benchmarks.run [--only fig7,table5,sweep,...] [--quick]``
-(``--quick`` currently applies to the sweep suite's smoke cell.)
+``python -m benchmarks.run [--only fig7,table5,sweep,scheduled,...] [--quick]``
+(``--quick`` currently applies to the sweep suites' smoke cell.)
 """
 from __future__ import annotations
 
@@ -38,6 +41,7 @@ SUITES = {
     "fig12": bench_convergence.main,
     "table3": bench_complexity.main,
     "sweep": bench_sweep.main,
+    "scheduled": bench_sweep.main_scheduled,
 }
 
 
@@ -47,7 +51,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode for suites that support it")
     args = ap.parse_args()
-    picks = args.only.split(",") if args.only else list(SUITES)
+    # "scheduled" is a focused subset of "sweep" (same cell, scheduled
+    # variant only) — opt-in via --only so default runs don't time it twice
+    picks = args.only.split(",") if args.only else [
+        n for n in SUITES if n != "scheduled"
+    ]
     print("name,us_per_call,derived")
     failures = []
     for name in picks:

@@ -5,6 +5,7 @@ from repro.core.types import (
     LocalState,
     MinibatchData,
     SchedulerState,
+    SweepResult,
     uniform_responsibilities,
 )
 from repro.core import em, foem, sem, scheduling, perplexity, baselines
@@ -17,6 +18,7 @@ __all__ = [
     "LocalState",
     "MinibatchData",
     "SchedulerState",
+    "SweepResult",
     "uniform_responsibilities",
     "em",
     "foem",

@@ -34,7 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import GlobalStats, LDAConfig, LocalState, MinibatchData
+from repro.core.types import (
+    GlobalStats, LDAConfig, LocalState, MinibatchData, SweepResult,
+)
 from repro.kernels import ops as kops
 
 
@@ -102,19 +104,6 @@ def fold_phi(
     seg = word_ids.reshape(D * L)
     delta_wk = jax.ops.segment_sum(flat, seg, num_segments=vocab_size)
     return delta_wk, weighted.sum(axis=(0, 1))
-
-
-def fold_phi_delta(
-    mu_new: jax.Array, mu_old: jax.Array, counts: jax.Array,
-    word_ids: jax.Array, vocab_size: int,
-) -> Tuple[jax.Array, jax.Array]:
-    """Replacement fold Δφ̂ = Σ x (μ_new − μ_old) as ONE scatter.
-
-    Equivalent to ``fold_phi(mu_new) − fold_phi(mu_old)`` but touches the
-    (W, K) matrix once instead of twice — the delta-compacted form used by
-    the warm-up sweeps.
-    """
-    return fold_phi(mu_new - mu_old, counts, word_ids, vocab_size)
 
 
 # ---------------------------------------------------------------------------
@@ -189,10 +178,10 @@ def blocked_iem_sweep(
     Wrows = phi_wk.shape[0]
 
     if B == L and cfg.sweep_impl == "fused":
-        new_local, d_wk, d_k, _ = gs_sweep_with_residuals(
+        r = gs_sweep_with_residuals(
             batch, local, phi_wk, phi_k, cfg, vocab_size=W, as_delta=True
         )
-        return new_local, d_wk, d_k
+        return LocalState(mu=r.mu, theta_dk=r.theta), r.phi_wk, r.phi_k
     pad = (-L) % B
     # Static split: pad L to a multiple of B with zero-count slots.
     if pad:
@@ -245,28 +234,32 @@ def gs_sweep_with_residuals(
     *,
     vocab_size: Optional[int] = None,
     as_delta: bool = False,
+    compute_loglik: bool = False,
     interpret: bool = False,
-) -> Tuple[LocalState, jax.Array, jax.Array, jax.Array]:
+) -> SweepResult:
     """One fused column-serial Gauss-Seidel sweep, emitting eq. 36 residuals.
 
-    Returns ``(new_local, phi, ptot, residual (D, L, K))`` — with
-    ``as_delta=True`` the stats come back as minibatch deltas (the
-    ``blocked_iem_sweep`` contract) instead of updated working copies.
-    The residual is counts·|Δμ| per token, measured inside the sweep, so
-    scheduler initialisation after a warm-up sweep costs one scatter instead
-    of a full re-measurement pass (``scheduling.residuals_from_sweep``).
+    Thin config adapter over ``kernels.ops.sweep`` (the unified sweep entry
+    point).  With ``as_delta=True`` the φ̂ stats come back as minibatch
+    deltas (the ``blocked_iem_sweep`` contract) instead of updated working
+    copies.  ``residual`` is counts·|Δμ| per token, measured inside the
+    sweep, so scheduler initialisation after a warm-up sweep costs one
+    scatter instead of a full re-measurement pass
+    (``scheduling.residuals_from_sweep``); ``compute_loglik`` additionally
+    fills ``SweepResult.loglik`` with the post-sweep eq. 3 data term — the
+    in-sweep training-perplexity stop rule.
     """
     W = vocab_size if vocab_size is not None else cfg.W
-    mu, res, theta, phi, ptot = kops.gs_sweep(
+    r = kops.sweep(
         batch.word_ids, batch.counts, local.mu, local.theta_dk,
         phi_wk, phi_k,
         alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1, wb=W * cfg.beta_m1,
-        unroll=cfg.sweep_unroll, interpret=interpret,
+        compute_loglik=compute_loglik, unroll=cfg.sweep_unroll,
+        interpret=interpret,
     )
     if as_delta:
-        phi = phi - phi_wk
-        ptot = ptot - phi_k
-    return LocalState(mu=mu, theta_dk=theta), phi, ptot, res
+        r = r._replace(phi_wk=r.phi_wk - phi_wk, phi_k=r.phi_k - phi_k)
+    return r
 
 
 # ---------------------------------------------------------------------------
@@ -318,9 +311,9 @@ def iem_fit(
         if use_fused:
             # working-copy form: the delta contract would keep the donated
             # φ̂ operands live (and re-add them right away) — skip it
-            new_local, phi_wk, phi_k, _ = gs_sweep_with_residuals(
-                batch, local, phi_wk, phi_k, cfg
-            )
+            r = gs_sweep_with_residuals(batch, local, phi_wk, phi_k, cfg)
+            new_local = LocalState(mu=r.mu, theta_dk=r.theta)
+            phi_wk, phi_k = r.phi_wk, r.phi_k
         else:
             new_local, d_wk, d_k = blocked_iem_sweep(
                 batch, local, phi_wk, phi_k, cfg, num_blocks=num_blocks

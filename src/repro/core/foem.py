@@ -61,11 +61,22 @@ def scheduled_iem_sweep(
     cfg: LDAConfig,
     *,
     vocab_size: Optional[int] = None,
-) -> Tuple[LocalState, jax.Array, jax.Array, SchedulerState]:
+    compute_loglik: bool = False,
+) -> Tuple[LocalState, jax.Array, jax.Array, SchedulerState,
+           Optional[jax.Array]]:
     """One dynamic-scheduling sweep: update only active (word, topic) entries.
 
     Work per sweep is O(NNZ_s · λ_k K + W_s · K log K) — the paper's
     'time-efficient IEM' bound — instead of O(NNZ_s · 2K).
+
+    The column-serial case (B = L, ``cfg.sweep_impl == "fused"``) routes
+    through ``kernels.ops.sweep``: one launch on the kernel path, the
+    delta-compacted portable scan elsewhere, with the eq. 36 replacement
+    residuals and (``compute_loglik``) the stop-rule log-likelihood emitted
+    by the sweep itself.  A coarse block count keeps the legacy blocked
+    scan over ``kops.topk_estep``.
+
+    Returns ``(local, phi, ptot, scheduler, loglik-or-None)``.
     """
     A = cfg.active_topics
     assert A > 0, "scheduled_iem_sweep requires cfg.active_topics > 0"
@@ -81,14 +92,31 @@ def scheduled_iem_sweep(
     word_thresh = sched_lib.select_active_words_threshold(
         scheduler, cfg.active_words_frac
     )
-    token_topics = jnp.take(word_topics, batch.word_ids, axis=0)   # (D, L, A)
     token_active = (
         jnp.take(scheduler.r_w, batch.word_ids, axis=0) >= word_thresh
     ) & (batch.counts > 0)                                         # (D, L)
 
     # ---- blocked Gauss-Seidel over token columns (0 = column-serial) ----
     B = cfg.resolve_blocks(L)
+    if B == L and cfg.sweep_impl == "fused":
+        r = kops.sweep(
+            batch.word_ids, batch.counts, local.mu, local.theta_dk,
+            phi_wk, phi_k,
+            alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
+            wb=W * cfg.beta_m1,
+            word_topics=word_topics, token_active=token_active,
+            compute_loglik=compute_loglik, unroll=cfg.sweep_unroll,
+        )
+        scheduler = sched_lib.scheduler_update_from_sweep(
+            scheduler, r.residual, batch.word_ids, word_topics
+        )
+        return (
+            LocalState(mu=r.mu, theta_dk=r.theta), r.phi_wk, r.phi_k,
+            scheduler, r.loglik,
+        )
+    token_topics = jnp.take(word_topics, batch.word_ids, axis=0)   # (D, L, A)
     pad = (-L) % B
+
     def _pad(x, fill=0):
         if not pad:
             return x
@@ -168,7 +196,12 @@ def scheduled_iem_sweep(
         abs_delta, batch.word_ids, token_topics, Wrows, K
     )
     scheduler = sched_lib.update_residuals(scheduler, r_new, touched)
-    return LocalState(mu=mu_out, theta_dk=theta), phi, ptot, scheduler
+    loglik = None
+    if compute_loglik:
+        loglik = em.map_log_likelihood(
+            batch, theta, phi, ptot, cfg, vocab_size=W
+        )
+    return LocalState(mu=mu_out, theta_dk=theta), phi, ptot, scheduler, loglik
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +223,14 @@ def foem_minibatch(
     2. one full blocked-IEM sweep (initialises residuals)
     3. scheduled sparse sweeps until the training-perplexity delta < tol
        (checked every ``ppl_check_every`` sweeps) or ``max_sweeps``.
+
+    Every sweep — warm-up, dense and scheduled — routes through the unified
+    ``kernels.ops.sweep`` dispatch when column-serial (``sweep_impl ==
+    "fused"``); on check iterations that sweep also emits the stop rule's
+    log-likelihood (in-kernel per-column partials on the kernel path), so
+    the while-loop needs no standalone (D, L, K) perplexity pass.  Coarse
+    block counts or ``sweep_impl == "scan"`` keep the legacy blocked scans
+    and the separate ``em.training_perplexity`` check.
     """
     D, L = batch.word_ids.shape
     K = cfg.K
@@ -202,21 +243,29 @@ def foem_minibatch(
     ptot = phi_k_in + d_k
     local = LocalState(mu=mu0, theta_dk=theta0)
 
+    ntok = jnp.maximum(batch.counts.sum(), 1.0)
+    use_fused = cfg.sweep_impl == "fused" and cfg.resolve_blocks(L) == L
+    use_sched = cfg.active_topics > 0
+
     # ---- warm-up full sweeps (paper Fig. 4's unscheduled first iteration);
     # the last sweep initialises the residual matrices ----
     warm = max(1, cfg.warmup_sweeps)
-    use_fused = cfg.sweep_impl == "fused" and cfg.resolve_blocks(L) == L
     if use_fused:
-        # fused Gauss-Seidel sweep: residuals are emitted by the sweep
-        # itself, so the init costs one scatter instead of a re-measurement
-        res = None
-        for _ in range(warm):
-            local, phi, ptot, res = em.gs_sweep_with_residuals(
-                batch, local, phi, ptot, cfg, vocab_size=W
+        # fused Gauss-Seidel sweep: residuals come out of the sweep itself
+        # (init costs one scatter, no re-measurement) and the last warm-up
+        # sweep also emits the stop rule's baseline log-likelihood
+        r = None
+        for i in range(warm):
+            r = em.gs_sweep_with_residuals(
+                batch, local, phi, ptot, cfg, vocab_size=W,
+                compute_loglik=(i == warm - 1),
             )
+            local = LocalState(mu=r.mu, theta_dk=r.theta)
+            phi, ptot = r.phi_wk, r.phi_k
         scheduler = sched_lib.residuals_from_sweep(
-            res, batch.word_ids, phi.shape[0]
+            r.residual, batch.word_ids, phi.shape[0]
         )
+        ppl0 = jnp.exp(-r.loglik / ntok)
     else:
         for _ in range(warm):
             prev_mu = local.mu
@@ -228,28 +277,35 @@ def foem_minibatch(
         scheduler = sched_lib.full_sweep_residuals(
             local.mu, prev_mu, batch.counts, batch.word_ids, phi.shape[0]
         )
+        ppl0 = em.training_perplexity(
+            batch, local.theta_dk, phi, ptot, cfg, vocab_size=W
+        )
 
-    ppl0 = em.training_perplexity(
-        batch, local.theta_dk, phi, ptot, cfg, vocab_size=W
-    )
-
-    use_sched = cfg.active_topics > 0
-
-    def sweep_once(local, phi, ptot, scheduler):
+    def sweep_once(local, phi, ptot, scheduler, compute_loglik):
+        """One inner sweep via the unified dispatch: (..., loglik-or-None)."""
         if use_sched:
             return scheduled_iem_sweep(
-                batch, local, phi, ptot, scheduler, cfg, vocab_size=W
+                batch, local, phi, ptot, scheduler, cfg, vocab_size=W,
+                compute_loglik=compute_loglik,
             )
         if use_fused:
             # working-copy form: skip the delta round trip entirely
-            new_local, phi, ptot, _ = em.gs_sweep_with_residuals(
-                batch, local, phi, ptot, cfg, vocab_size=W
+            r = em.gs_sweep_with_residuals(
+                batch, local, phi, ptot, cfg, vocab_size=W,
+                compute_loglik=compute_loglik,
             )
-            return new_local, phi, ptot, scheduler
+            return (
+                LocalState(mu=r.mu, theta_dk=r.theta), r.phi_wk, r.phi_k,
+                scheduler, r.loglik,
+            )
         new_local, dwk, dk = em.blocked_iem_sweep(
             batch, local, phi, ptot, cfg, vocab_size=W
         )
-        return new_local, phi + dwk, ptot + dk, scheduler
+        return new_local, phi + dwk, ptot + dk, scheduler, None
+
+    # The fused dispatch provides the stop-rule loglik from inside the
+    # sweep; only the legacy scan paths still pay a standalone pass.
+    in_sweep_ppl = use_fused
 
     def cond(state):
         t, done, *_ = state
@@ -257,15 +313,34 @@ def foem_minibatch(
 
     def step(state):
         t, done, local, phi, ptot, scheduler, last_ppl = state
-        local, phi, ptot, scheduler = sweep_once(local, phi, ptot, scheduler)
         check = (t + 1) % cfg.ppl_check_every == 0
-        ppl = jax.lax.cond(
-            check,
-            lambda: em.training_perplexity(
-                batch, local.theta_dk, phi, ptot, cfg, vocab_size=W
-            ),
-            lambda: last_ppl,
-        )
+        if in_sweep_ppl:
+            def checked(local, phi, ptot, scheduler):
+                local, phi, ptot, scheduler, ll = sweep_once(
+                    local, phi, ptot, scheduler, True
+                )
+                return local, phi, ptot, scheduler, jnp.exp(-ll / ntok)
+
+            def unchecked(local, phi, ptot, scheduler):
+                local, phi, ptot, scheduler, _ = sweep_once(
+                    local, phi, ptot, scheduler, False
+                )
+                return local, phi, ptot, scheduler, last_ppl
+
+            local, phi, ptot, scheduler, ppl = jax.lax.cond(
+                check, checked, unchecked, local, phi, ptot, scheduler
+            )
+        else:
+            local, phi, ptot, scheduler, _ = sweep_once(
+                local, phi, ptot, scheduler, False
+            )
+            ppl = jax.lax.cond(
+                check,
+                lambda: em.training_perplexity(
+                    batch, local.theta_dk, phi, ptot, cfg, vocab_size=W
+                ),
+                lambda: last_ppl,
+            )
         done = check & (
             jnp.abs(last_ppl - ppl) < cfg.ppl_rel_tol * jnp.abs(ppl)
         )

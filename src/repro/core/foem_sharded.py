@@ -38,6 +38,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import em
 from repro.core import scheduling as sched_lib
+from repro.kernels import ops as kops
 from repro.core.types import (
     GlobalStats,
     LDAConfig,
@@ -69,88 +70,30 @@ def _local_training_ppl(batch, theta, phi, ptot, cfg, tp_axis, dp_axes):
 
 def _scheduled_sweep_local(batch, local, phi, ptot, scheduler, cfg,
                            tp_axis: str):
-    """One scheduled sweep on the shard's topic slice (all indices local)."""
+    """One scheduled sweep on the shard's topic slice (all indices local).
+
+    Routed through the unified ``kernels.ops.sweep`` dispatch (the same
+    delta-compacted column-serial path as the single-host FOEM), with the
+    eq. 38 mass/denominator reductions hooked to psum over the model axis —
+    the union of the shard-local top-(A/mp) sets is the size-A active set,
+    and every gather/scatter index stays shard-local."""
     A_loc = max(1, cfg.active_topics // cfg.topk_shards)
-    D, L = batch.word_ids.shape
-    K_loc = phi.shape[1]
-    Wrows = phi.shape[0]
 
     word_topics = sched_lib.select_active_topics(scheduler, A_loc)  # local ids
-    token_topics = jnp.take(word_topics, batch.word_ids, axis=0)
     token_active = batch.counts > 0
 
-    B = cfg.resolve_blocks(L)
-    pad = (-L) % B
-
-    def _pad(x, fill=0):
-        if not pad:
-            return x
-        widths = [(0, 0)] * x.ndim
-        widths[1] = (0, pad)
-        return jnp.pad(x, widths, constant_values=fill)
-
-    wid, cnt, mu, ttop, tact = (
-        _pad(batch.word_ids), _pad(batch.counts), _pad(local.mu),
-        _pad(token_topics), _pad(token_active, fill=False),
+    r = kops.sweep(
+        batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot,
+        alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
+        wb=cfg.W * cfg.beta_m1,
+        word_topics=word_topics, token_active=token_active,
+        unroll=cfg.sweep_unroll, use_pallas=False,
+        renorm_psum=lambda x: lax.psum(x, tp_axis),
     )
-    Lp = L + pad
-    blk = Lp // B
-
-    def blkview(x):
-        return x.reshape((D, B, blk) + x.shape[2:]).transpose(
-            (1, 0, 2) + tuple(range(3, x.ndim + 1))
-        )
-
-    w_b, c_b, mu_b, tt_b, ta_b = map(blkview, (wid, cnt, mu, ttop, tact))
-    drows = jnp.arange(D)[:, None, None]
-
-    def body(carry, xs):
-        theta, phi, ptot = carry
-        wid_b, cnt_b, mu_old, top_b, act_b = xs
-        mu_prev_a = jnp.take_along_axis(mu_old, top_b, axis=-1)
-        contrib_old = cnt_b[..., None] * mu_prev_a
-        theta_a = theta[drows, top_b]
-        phi_a = phi[wid_b[..., None], top_b]
-        ptot_a = ptot[top_b]
-        th = jnp.maximum(theta_a - contrib_old, 0.0)
-        ph = jnp.maximum(phi_a - contrib_old, 0.0)
-        pt = ptot_a - contrib_old
-        num = (th + cfg.alpha_m1) * (ph + cfg.beta_m1) / (
-            pt + cfg.W * cfg.beta_m1
-        )
-        # eq. 38 over the UNION active set: psum mass/denominator over shards
-        prev_mass = lax.psum(mu_prev_a.sum(-1, keepdims=True), tp_axis)
-        new_sum = lax.psum(num.sum(-1, keepdims=True), tp_axis)
-        mu_new_a = num / jnp.maximum(new_sum, 1e-30) * prev_mass
-        mu_new_a = jnp.where(act_b[..., None], mu_new_a, mu_prev_a)
-        delta = cnt_b[..., None] * (mu_new_a - mu_prev_a)
-
-        theta = theta.at[jnp.broadcast_to(drows, top_b.shape), top_b].add(delta)
-        phi = phi.at[
-            jnp.broadcast_to(wid_b[..., None], top_b.shape), top_b
-        ].add(delta)
-        ptot = ptot.at[top_b.reshape(-1)].add(delta.reshape(-1))
-        mu_out = jnp.put_along_axis(mu_old, top_b, mu_new_a, axis=-1,
-                                    inplace=False)
-        return (theta, phi, ptot), (mu_out, jnp.abs(delta))
-
-    (theta, phi, ptot), (mu_out_b, absd_b) = lax.scan(
-        body, (local.theta_dk, phi, ptot), (w_b, c_b, mu_b, tt_b, ta_b),
-        unroll=max(1, min(cfg.sweep_unroll, B)),
+    scheduler = sched_lib.scheduler_update_from_sweep(
+        scheduler, r.residual, batch.word_ids, word_topics
     )
-
-    def unblk(x):
-        return x.transpose((1, 0, 2) + tuple(range(3, x.ndim))).reshape(
-            (D, Lp) + x.shape[3:]
-        )[:, :L]
-
-    mu_out = unblk(mu_out_b)
-    abs_delta = unblk(absd_b)
-    r_new, touched = sched_lib.scatter_residuals(
-        abs_delta, batch.word_ids, token_topics, Wrows, K_loc
-    )
-    scheduler = sched_lib.update_residuals(scheduler, r_new, touched)
-    return LocalState(mu=mu_out, theta_dk=theta), phi, ptot, scheduler
+    return LocalState(mu=r.mu, theta_dk=r.theta), r.phi_wk, r.phi_k, scheduler
 
 
 def _foem_local(key, batch: MinibatchData, phi_in, ptot_in, cfg: LDAConfig,
@@ -171,27 +114,33 @@ def _foem_local(key, batch: MinibatchData, phi_in, ptot_in, cfg: LDAConfig,
     ptot = ptot_in + lax.psum(d_k, dp_axes)
     local = LocalState(mu=mu0, theta_dk=theta0)
 
-    # ---- warm-up full sweeps (psum'd normaliser; local otherwise) ----
-    prev_mu = local.mu
+    # ---- warm-up full sweeps: the unified column-serial Gauss-Seidel
+    # dispatch with the E-step normaliser psum'd over the topic shards;
+    # folds stay shard-local per column, and each sweep's data-shard Δφ̂ is
+    # folded once at sweep cadence (bounded staleness, as in the inner
+    # loop's dp_fold="sweep").  The last sweep's emitted residuals seed the
+    # scheduler — no re-measurement pass. ----
+    residual = None
     for _ in range(max(1, cfg.warmup_sweeps)):
-        prev_mu = local.mu
-        phi_rows = jnp.take(phi, batch.word_ids, axis=0)
-        contrib = batch.counts[..., None] * local.mu
-        mu = em.estep(
-            local.theta_dk[:, None, :], phi_rows, ptot, cfg,
-            exclude=contrib, tp_axis=tp_axis,
+        phi_before = phi
+        r = kops.sweep(
+            batch.word_ids, batch.counts, local.mu, local.theta_dk,
+            phi, ptot,
+            alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
+            wb=cfg.W * cfg.beta_m1,
+            unroll=cfg.sweep_unroll, use_pallas=False,
+            norm_psum=lambda x: lax.psum(x, tp_axis),
         )
-        theta = em.fold_theta(mu, batch.counts)
-        # replace this shard-of-data's contribution; fold across data shards
-        # (delta-compacted: one scatter over Δμ instead of two full folds)
-        d_wk, d_k = em.fold_phi_delta(
-            mu, local.mu, batch.counts, batch.word_ids, phi.shape[0]
-        )
-        phi = phi + lax.psum(d_wk, dp_axes)
-        ptot = ptot + lax.psum(d_k, dp_axes)
-        local = LocalState(mu=mu, theta_dk=theta)
-    scheduler = sched_lib.full_sweep_residuals(
-        local.mu, prev_mu, batch.counts, batch.word_ids, phi.shape[0]
+        local = LocalState(mu=r.mu, theta_dk=r.theta)
+        residual = r.residual
+        # rebase on the pre-sweep φ̂ and apply EVERY data shard's delta
+        # (own included) via one psum — equivalent to keeping the locally
+        # folded r.phi_wk and adding only the peers' deltas
+        d = lax.psum(r.phi_wk - phi_before, dp_axes)
+        phi = phi_before + d
+        ptot = ptot + d.sum(0)
+    scheduler = sched_lib.residuals_from_sweep(
+        residual, batch.word_ids, phi.shape[0]
     )
     warm = max(1, cfg.warmup_sweeps)
 

@@ -122,6 +122,40 @@ def scatter_residuals(
     return summed, touched
 
 
+def scheduler_update_from_sweep(
+    sched: SchedulerState,
+    residual: jax.Array,     # (D, L, K) counts·|Δμ| emitted by the fused sweep
+    word_ids: jax.Array,     # (D, L)
+    word_topics: jax.Array,  # (W_s, A) the active topic ids per word
+) -> SchedulerState:
+    """Replace-touched residual refresh from a fused scheduled sweep.
+
+    The single-launch scheduled sweep emits the eq. 36 replacement values
+    full-K (zeros off each token's active set), so the refresh is ONE
+    segment-sum over the vocab axis — equal to ``scatter_residuals`` +
+    ``update_residuals`` on the compact (D, L, A) values, since entries
+    outside a token's active set contribute exactly zero.  The touched mask
+    (an active entry whose fresh residual is 0 must *replace* the old
+    estimate, not keep it) is per word — the batch's words, each with its
+    active set — so it needs no per-token scatter at all: one W_s·A mask
+    build and a presence vector.
+    """
+    D, L, K = residual.shape
+    num_words = sched.r_wk.shape[0]
+    r_meas = jax.ops.segment_sum(
+        residual.reshape(D * L, K), word_ids.reshape(D * L),
+        num_segments=num_words,
+    )
+    present = jnp.zeros((num_words,), jnp.bool_).at[
+        word_ids.reshape(-1)
+    ].set(True)
+    active = jnp.put_along_axis(
+        jnp.zeros((num_words, K), jnp.bool_), word_topics, True, axis=-1,
+        inplace=False,
+    )
+    return update_residuals(sched, r_meas, active & present[:, None])
+
+
 def residuals_from_sweep(
     residual: jax.Array,    # (D, L, K) counts·|Δμ| emitted by the fused sweep
     word_ids: jax.Array,    # (D, L)

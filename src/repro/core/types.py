@@ -148,6 +148,26 @@ class SchedulerState(NamedTuple):
     r_w: jax.Array   # (W_s|W,)   residual per vocab word,          eq. 37
 
 
+class SweepResult(NamedTuple):
+    """Everything one column-serial Gauss-Seidel sweep produces.
+
+    The unified contract of ``kernels.ops.sweep`` — dense (full-K) and
+    scheduled (active-set, eq. 38) sweeps, kernel and portable paths alike,
+    all return this.  ``phi_wk``/``phi_k`` are the updated *working copies*
+    (callers needing minibatch deltas subtract the inputs); ``residual`` is
+    the per-token counts·|Δμ| (eq. 36) measured inside the sweep, full-K
+    with zeros on untouched topics; ``loglik`` is the MAP data
+    log-likelihood of the post-sweep statistics (the eq. 3 data term the
+    training-perplexity stop rule needs), or None when not requested."""
+
+    mu: jax.Array                  # (D_s, L, K) updated responsibilities
+    theta: jax.Array               # (D_s, K)    updated θ̂
+    phi_wk: jax.Array              # (W_s, K)    updated working φ̂
+    phi_k: jax.Array               # (K,)        updated working φ̂(k)
+    residual: jax.Array            # (D_s, L, K) counts·|Δμ|
+    loglik: Optional[jax.Array]    # () or None — in-sweep stop-rule loglik
+
+
 def uniform_responsibilities(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
     """Random-normalized init of μ (paper: 'start from random initializations')."""
     g = jax.random.uniform(key, shape, dtype=dtype, minval=0.5, maxval=1.5)

@@ -19,9 +19,20 @@ launch:
   * the word ids are a scalar-prefetch operand (``PrefetchScalarGridSpec``)
     so the kernel can issue the per-document dynamic row gather/scatter on
     φ̂ without materialising one-hot matrices;
+  * the per-column φ̂-row gather is *double-buffered*: column l+1's D rows
+    are issued as async copies right after column l's scatter (the earliest
+    consistent point) and waited only where column l+1 first needs them —
+    the copies fly while the exclusion/θ̂-side arithmetic runs, taking the
+    serial gather off the critical path (``double_buffer=False`` keeps the
+    synchronous gather for bitwise comparison);
   * the per-column residual counts·|Δμ| (paper eq. 36) is emitted as a
     second (D, L, K) output, which makes the post-warm-up
-    ``scheduling.full_sweep_residuals`` re-measurement free.
+    ``scheduling.full_sweep_residuals`` re-measurement free;
+  * with ``emit_loglik=True`` the grid is extended by L stop-rule steps
+    that re-walk the columns against the *final* carried θ̂/φ̂/φ̂(k) and
+    emit per-column partial sums of the eq. 3 data log-likelihood — the
+    training-perplexity stop rule without a separate (D, L, K)
+    gather+einsum pass (the stats never leave VMEM).
 
 Per column the kernel touches O(D·K) values of φ̂ (the D gathered rows)
 instead of the O(W_s·K) full-matrix scatter of the scan formulation — the
@@ -29,13 +40,13 @@ sweep becomes arithmetic-bound, not launch/HBM-bound.
 
 VMEM budget: 2·(W_s + D)·K·4 B for the carried φ̂/θ̂ pairs plus the small
 per-column blocks; W_s ≤ ~8k at K = 128 fits comfortably.  The dispatch
-layer (``ops.gs_sweep``) falls back to the delta-compacted portable path
+layer (``ops.sweep``) falls back to the delta-compacted portable path
 when the working set is larger or the backend is not TPU.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,88 +73,164 @@ def fits_vmem(num_rows: int, num_docs: int, num_topics: int,
     return carried + per_column <= budget
 
 
-def _gs_sweep_kernel(
-    # scalar prefetch
-    wid_ref,                   # (D, L) int32 — word id per (doc, column)
-    wb_ref,                    # (1,) f32 — W·(β−1); traced (W is the live
-                               # vocab in the streaming trainer), so it is
-                               # a scalar operand, not a jit-static
-    # inputs
-    counts_ref,                # (D, 1)      — this column's counts
-    mu_in_ref,                 # (1, D, K)   — this column's μ (column-major)
-    theta_in_ref,              # (D, K)
-    phi_in_ref,                # (W_s, K)
-    ptot_in_ref,               # (1, K)
-    # outputs
-    theta_ref,                 # (D, K)   carried; aliased with theta_in
-    phi_ref,                   # (W_s, K) carried; aliased with phi_in
-    ptot_ref,                  # (1, K)   carried; aliased with ptot_in
-    mu_ref,                    # (1, D, K) this column's new μ
-    res_ref,                   # (1, D, K) counts·|Δμ| (eq. 36 residual)
-    # scratch
-    rows_ref,                  # (D, K) VMEM — gathered φ̂ rows
-    *,
-    alpha_m1: float,
-    beta_m1: float,
-    k_actual: int,
-):
-    l = pl.program_id(0)
-    D, K = theta_ref.shape
-    wb = wb_ref[0]
+def loglik_partial(cnt, theta, ptot, rows, wb, *, alpha_m1: float,
+                   beta_m1: float, k_actual: int):
+    """One column's eq. 3 data-loglik partial against the carried stats.
 
-    # First column: bring the carried stats into the output blocks (they are
-    # aliased with the inputs in HBM but the VMEM out block starts undefined).
-    @pl.when(l == 0)
-    def _():
-        theta_ref[...] = theta_in_ref[...]
-        phi_ref[...] = phi_in_ref[...]
-        ptot_ref[...] = ptot_in_ref[...]
-
-    cnt = counts_ref[...]                       # (D, 1)
-    mu_old = mu_in_ref[0]                       # (D, K)
-    theta = theta_ref[...]
-    ptot = ptot_ref[...]                        # (1, K)
-
-    # ---- gather: φ̂ rows for this column's D word ids (dynamic, serial) ----
-    def gather(d, _):
-        w = wid_ref[d, l]
-        rows_ref[pl.ds(d, 1), :] = phi_ref[pl.ds(w, 1), :]
-        return 0
-    jax.lax.fori_loop(0, D, gather, 0)
-    phi_rows = rows_ref[...]
-
-    # ---- fused E-step: eq. 13 exclusion + responsibility + normalise ----
-    ex = cnt * mu_old
-    th = jnp.maximum(theta - ex, 0.0)
-    ph = jnp.maximum(phi_rows - ex, 0.0)
-    pt = ptot - ex
-    num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+    The stop-rule arithmetic shared by the dense and scheduled sweep
+    kernels' loglik phases: eq. 9/10 normalisation, padded topic lanes
+    masked out, padded documents inert via their zero counts.  Mirrors
+    ``em.map_log_likelihood`` / ``training_perplexity`` term for term.
+    """
+    D, K = theta.shape
+    th_den = theta.sum(-1, keepdims=True) + k_actual * alpha_m1
+    th_n = (theta + alpha_m1) / jnp.maximum(th_den, 1e-30)
+    ph_n = (rows + beta_m1) / jnp.maximum(ptot + wb, 1e-30)
+    prod = th_n * ph_n
     if k_actual != K:
-        # padded topic lanes carry zero stats; keep them out of the renorm
         lane = jax.lax.broadcasted_iota(jnp.int32, (D, K), 1)
-        num = jnp.where(lane < k_actual, num, 0.0)
-    denom = jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
-    mu_new = num / denom
-    delta = cnt * mu_new - ex                   # (D, K)
+        prod = jnp.where(lane < k_actual, prod, 0.0)
+    lik = jnp.maximum(prod.sum(-1, keepdims=True), 1e-30)
+    return (cnt * jnp.log(lik)).sum()
 
-    # ---- Gauss-Seidel fold: θ̂/φ̂/φ̂(k) updated before the next column ----
-    theta_ref[...] = theta + delta
-    ptot_ref[...] = ptot + delta.sum(0, keepdims=True)
 
-    def scatter(d, _):
-        w = wid_ref[d, l]
-        row = jax.lax.dynamic_slice(delta, (d, 0), (1, K))
-        phi_ref[pl.ds(w, 1), :] = phi_ref[pl.ds(w, 1), :] + row
-        return 0
-    jax.lax.fori_loop(0, D, scatter, 0)
+def _make_gs_kernel(*, alpha_m1: float, beta_m1: float, k_actual: int,
+                    num_cols: int, emit_loglik: bool, double_buffer: bool):
+    """Build the kernel body for a static (loglik, buffering) configuration.
 
-    mu_ref[0] = mu_new
-    res_ref[0] = cnt * jnp.abs(mu_new - mu_old)
+    Ref order: scalar prefetch (wid, wb), inputs (counts, μ column, θ̂, φ̂,
+    φ̂(k)), outputs (θ̂, φ̂, φ̂(k) carried; μ, residual columns; loglik
+    partials when emitted), scratch (rows buffer; DMA semaphore when
+    double-buffered).
+    """
+
+    def kernel(wid_ref, wb_ref, counts_ref, mu_in_ref, theta_in_ref,
+               phi_in_ref, ptot_in_ref, *rest):
+        n_out = 6 if emit_loglik else 5
+        theta_ref, phi_ref, ptot_ref, mu_ref, res_ref = rest[:5]
+        ll_ref = rest[5] if emit_loglik else None
+        scratch = rest[n_out:]
+        rows_ref = scratch[0]
+        sem = scratch[1] if double_buffer else None
+
+        l = pl.program_id(0)
+        D, K = theta_ref.shape
+        wb = wb_ref[0]
+
+        def gather_sync(col):
+            def go(d, _):
+                w = wid_ref[d, col]
+                rows_ref[pl.ds(d, 1), :] = phi_ref[pl.ds(w, 1), :]
+                return 0
+            jax.lax.fori_loop(0, D, go, 0)
+
+        def prefetch(col, start):
+            # The start/wait pair reconstruct identical copy descriptors;
+            # one semaphore tracks all D row copies of a column.
+            def go(d, _):
+                w = wid_ref[d, col]
+                cp = pltpu.make_async_copy(
+                    phi_ref.at[pl.ds(w, 1), :],
+                    rows_ref.at[pl.ds(d, 1), :],
+                    sem,
+                )
+                if start:
+                    cp.start()
+                else:
+                    cp.wait()
+                return 0
+            jax.lax.fori_loop(0, D, go, 0)
+
+        # First column: bring the carried stats into the output blocks (they
+        # are aliased with the inputs in HBM but the VMEM out block starts
+        # undefined), then stage column 0's φ̂ rows.
+        @pl.when(l == 0)
+        def _():
+            theta_ref[...] = theta_in_ref[...]
+            phi_ref[...] = phi_in_ref[...]
+            ptot_ref[...] = ptot_in_ref[...]
+            if double_buffer:
+                prefetch(0, start=True)
+
+        def sweep_col():
+            cnt = counts_ref[...]                   # (D, 1)
+            mu_old = mu_in_ref[0]                   # (D, K)
+            theta = theta_ref[...]
+            ptot = ptot_ref[...]                    # (1, K)
+
+            # ---- θ̂-side exclusion arithmetic (no φ̂ rows needed yet; the
+            # column's row copies issued by the previous step fly here) ----
+            ex = cnt * mu_old
+            th = jnp.maximum(theta - ex, 0.0)
+            pt = ptot - ex
+
+            if double_buffer:
+                prefetch(l, start=False)            # first use: wait here
+            else:
+                gather_sync(l)
+            phi_rows = rows_ref[...]
+
+            # ---- fused E-step: eq. 13 exclusion + responsibility + norm ----
+            ph = jnp.maximum(phi_rows - ex, 0.0)
+            num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+            if k_actual != K:
+                # padded topic lanes carry zero stats; keep them out
+                lane = jax.lax.broadcasted_iota(jnp.int32, (D, K), 1)
+                num = jnp.where(lane < k_actual, num, 0.0)
+            denom = jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
+            mu_new = num / denom
+            delta = cnt * mu_new - ex               # (D, K)
+
+            # ---- Gauss-Seidel fold: θ̂/φ̂/φ̂(k) updated before next col ----
+            theta_ref[...] = theta + delta
+            ptot_ref[...] = ptot + delta.sum(0, keepdims=True)
+
+            def scatter(d, _):
+                w = wid_ref[d, l]
+                row = jax.lax.dynamic_slice(delta, (d, 0), (1, K))
+                phi_ref[pl.ds(w, 1), :] = phi_ref[pl.ds(w, 1), :] + row
+                return 0
+            jax.lax.fori_loop(0, D, scatter, 0)
+
+            if double_buffer:
+                # earliest consistent point: the scatter above is what the
+                # next column's rows must reflect
+                @pl.when(l + 1 < num_cols)
+                def _():
+                    prefetch(l + 1, start=True)
+
+            mu_ref[0] = mu_new
+            res_ref[0] = cnt * jnp.abs(mu_new - mu_old)
+            if emit_loglik:
+                ll_ref[0, 0] = 0.0          # overwritten by the ppl phase
+
+        def ppl_col():
+            # Stop-rule phase: per-column eq. 3 data-loglik partials against
+            # the FINAL carried stats (phase runs after the last fold).
+            gather_sync(l - num_cols)
+            ll_ref[0, 0] = loglik_partial(
+                counts_ref[...], theta_ref[...], ptot_ref[...], rows_ref[...],
+                wb, alpha_m1=alpha_m1, beta_m1=beta_m1, k_actual=k_actual,
+            )
+
+        if emit_loglik:
+            @pl.when(l < num_cols)
+            def _():
+                sweep_col()
+
+            @pl.when(l >= num_cols)
+            def _():
+                ppl_col()
+        else:
+            sweep_col()
+
+    return kernel
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("alpha_m1", "beta_m1", "lane_align", "interpret"),
+    static_argnames=("alpha_m1", "beta_m1", "lane_align", "emit_loglik",
+                     "double_buffer", "interpret"),
 )
 def gs_sweep_pallas(
     word_ids: jax.Array,       # (D, L) int32 — rows into phi_wk
@@ -157,17 +244,23 @@ def gs_sweep_pallas(
     beta_m1: float,
     wb: jax.Array | float,     # W·(β−1), with the *global* W; may be traced
     lane_align: int = 1,       # pad K to this multiple (128 for compiled TPU)
+    emit_loglik: bool = False,
+    double_buffer: bool = True,
     interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array,
+           Optional[jax.Array]]:
     """One fused column-serial Gauss-Seidel sweep in a single launch.
 
     Returns ``(mu_new (D,L,K), residual (D,L,K), theta (D,K),
-    phi_wk (W_s,K), phi_k (K,))`` — the same stats the scan formulation
-    produces, plus the eq. 36 residuals measured for free.
+    phi_wk (W_s,K), phi_k (K,), loglik)`` — the same stats the scan
+    formulation produces, plus the eq. 36 residuals measured for free and,
+    when ``emit_loglik``, the post-sweep eq. 3 data log-likelihood summed
+    from in-kernel per-column partials (None otherwise).
 
     Documents are padded to the 8-sublane boundary with zero-count slots
     (zero counts ⇒ zero Δ, so padding is exact); ``lane_align`` pads the
-    topic axis, with padded lanes masked out of the renormalisation.
+    topic axis, with padded lanes masked out of the renormalisation and
+    the loglik.
     """
     D, L = word_ids.shape
     K = mu.shape[-1]
@@ -186,40 +279,62 @@ def gs_sweep_pallas(
 
     mu_cols = mu.transpose(1, 0, 2)             # (L, Dp, Kp) column-major
 
-    kernel = functools.partial(
-        _gs_sweep_kernel,
-        alpha_m1=alpha_m1, beta_m1=beta_m1, k_actual=K,
+    kernel = _make_gs_kernel(
+        alpha_m1=alpha_m1, beta_m1=beta_m1, k_actual=K, num_cols=L,
+        emit_loglik=emit_loglik, double_buffer=double_buffer,
     )
     wb_arr = jnp.reshape(jnp.asarray(wb, mu.dtype), (1,))
+
+    # The stop-rule phase revisits the columns with the carried stats final:
+    # per-column operands re-walk via l % L while the μ/residual blocks stay
+    # pinned on the last column (no re-flush of already-written output).
+    grid_len = 2 * L if emit_loglik else L
+
+    def col_of(l):
+        return jax.lax.rem(l, L) if emit_loglik else l
+
+    def pin_of(l):
+        return jnp.minimum(l, L - 1) if emit_loglik else l
+
+    out_specs = [
+        pl.BlockSpec((Dp, Kp), lambda l, wid, wb: (0, 0)),
+        pl.BlockSpec((Wrows, Kp), lambda l, wid, wb: (0, 0)),
+        pl.BlockSpec((1, Kp), lambda l, wid, wb: (0, 0)),
+        pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (pin_of(l), 0, 0)),
+        pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (pin_of(l), 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Dp, Kp), theta.dtype),
+        jax.ShapeDtypeStruct((Wrows, Kp), phi_wk.dtype),
+        jax.ShapeDtypeStruct((1, Kp), phi_k.dtype),
+        jax.ShapeDtypeStruct((L, Dp, Kp), mu.dtype),
+        jax.ShapeDtypeStruct((L, Dp, Kp), mu.dtype),
+    ]
+    if emit_loglik:
+        out_specs.append(pl.BlockSpec((1, 1), lambda l, wid, wb: (col_of(l), 0)))
+        out_shape.append(jax.ShapeDtypeStruct((L, 1), mu.dtype))
+
+    scratch_shapes = [pltpu.VMEM((Dp, Kp), mu.dtype)]
+    if double_buffer:
+        scratch_shapes.append(pltpu.SemaphoreType.DMA)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(L,),
+        grid=(grid_len,),
         in_specs=[
-            pl.BlockSpec((Dp, 1), lambda l, wid, wb: (0, l)),
-            pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (l, 0, 0)),
+            pl.BlockSpec((Dp, 1), lambda l, wid, wb: (0, col_of(l))),
+            pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (pin_of(l), 0, 0)),
             pl.BlockSpec((Dp, Kp), lambda l, wid, wb: (0, 0)),
             pl.BlockSpec((Wrows, Kp), lambda l, wid, wb: (0, 0)),
             pl.BlockSpec((1, Kp), lambda l, wid, wb: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((Dp, Kp), lambda l, wid, wb: (0, 0)),
-            pl.BlockSpec((Wrows, Kp), lambda l, wid, wb: (0, 0)),
-            pl.BlockSpec((1, Kp), lambda l, wid, wb: (0, 0)),
-            pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (l, 0, 0)),
-            pl.BlockSpec((1, Dp, Kp), lambda l, wid, wb: (l, 0, 0)),
-        ],
-        scratch_shapes=[pltpu.VMEM((Dp, Kp), mu.dtype)],
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
     )
-    theta_out, phi_out, ptot_out, mu_out, res_out = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((Dp, Kp), theta.dtype),
-            jax.ShapeDtypeStruct((Wrows, Kp), phi_wk.dtype),
-            jax.ShapeDtypeStruct((1, Kp), phi_k.dtype),
-            jax.ShapeDtypeStruct((L, Dp, Kp), mu.dtype),
-            jax.ShapeDtypeStruct((L, Dp, Kp), mu.dtype),
-        ],
+        out_shape=out_shape,
         # flat operands: wid(0) wb(1) counts(2) mu(3) theta(4) phi(5) ptot(6)
         input_output_aliases={4: 0, 5: 1, 6: 2},
         compiler_params=pltpu.TPUCompilerParams(
@@ -228,8 +343,12 @@ def gs_sweep_pallas(
         interpret=interpret,
     )(word_ids, wb_arr, counts, mu_cols, theta, phi_wk, phi_k[None, :])
 
+    theta_out, phi_out, ptot_out, mu_out, res_out = outs[:5]
+    loglik = outs[5].sum() if emit_loglik else None
+
     mu_new = mu_out.transpose(1, 0, 2)[:D, :, :K]
     res = res_out.transpose(1, 0, 2)[:D, :, :K]
     return (
         mu_new, res, theta_out[:D, :K], phi_out[:, :K], ptot_out[0, :K],
+        loglik,
     )

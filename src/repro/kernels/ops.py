@@ -4,18 +4,29 @@ On TPU backends the Pallas kernels are compiled natively; elsewhere the
 caller chooses between ``interpret=True`` (kernel-body semantics, used by the
 correctness tests) and the pure-jnp reference (fast on CPU, used by the
 models and the dry-run, whose lowering must stay backend-portable).
+
+The column-serial Gauss-Seidel sweeps — dense (full-K IEM) and scheduled
+(active-set, §3.1) — share ONE entry point, ``sweep(...) -> SweepResult``:
+the single-launch Pallas kernels (``gs_sweep_pallas`` /
+``scheduled_sweep_pallas``) on TPU when the carried working set fits VMEM,
+and the delta-compacted portable scans elsewhere.  Every caller
+(``em.blocked_iem_sweep``, ``foem`` warm-up and scheduled sweeps,
+``foem_sharded``'s shard-local sweeps, the streaming trainer through
+``foem_minibatch``) routes through it.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import SweepResult
 from repro.kernels import ref
 from repro.kernels.foem_estep import fused_estep_pallas
 from repro.kernels.gs_sweep import fits_vmem, gs_sweep_pallas
+from repro.kernels.scheduled_sweep import sched_fits_vmem, scheduled_sweep_pallas
 from repro.kernels.topk_estep import topk_estep_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 
@@ -76,6 +87,26 @@ def topk_estep(
     )
 
 
+# ---------------------------------------------------------------------------
+# Column-serial Gauss-Seidel sweeps — unified dispatch
+# ---------------------------------------------------------------------------
+
+def _map_loglik(
+    word_ids, counts, theta, phi_wk, phi_k, *, alpha_m1, beta_m1, wb,
+):
+    """Eq. 3 data log-likelihood of the given stats (mirrors
+    ``em.map_log_likelihood`` without the config plumbing — the portable
+    sweeps' post-hoc stop-rule value; the kernels emit the same quantity
+    from per-column partials)."""
+    K = theta.shape[-1]
+    th_den = theta.sum(-1, keepdims=True) + K * alpha_m1
+    theta_n = (theta + alpha_m1) / jnp.maximum(th_den, 1e-30)
+    phi_n = (phi_wk + beta_m1) / jnp.maximum(phi_k + wb, 1e-30)[None, :]
+    rows = jnp.take(phi_n, word_ids, axis=0)               # (D, L, K)
+    lik = jnp.maximum(jnp.einsum("dlk,dk->dl", rows, theta_n), 1e-30)
+    return (counts * jnp.log(lik)).sum()
+
+
 def _gs_sweep_portable(
     word_ids: jax.Array,       # (D, L) int32
     counts: jax.Array,         # (D, L)
@@ -90,6 +121,7 @@ def _gs_sweep_portable(
     unroll: int = 8,
     use_pallas: bool = False,
     interpret: bool = False,
+    norm_psum: Optional[Callable[[jax.Array], jax.Array]] = None,
 ):
     """Delta-compacted column-serial Gauss-Seidel sweep — portable jnp path.
 
@@ -98,6 +130,11 @@ def _gs_sweep_portable(
     (``.at[wid].add``), columns are chunked into unrolled scan tiles, and
     the E-step arithmetic routes through ``fused_estep`` (the Pallas
     kernel's jnp oracle on CPU, the kernel itself on TPU).
+
+    ``norm_psum`` hooks the E-step normaliser (shard_map over a topic-
+    sharded φ̂: the denominator is a psum over the model axis — see
+    ``foem_sharded``); when set the arithmetic is inlined, since a
+    collective cannot cross a kernel boundary.
     """
     L = word_ids.shape[1]
 
@@ -106,11 +143,20 @@ def _gs_sweep_portable(
         wid, cnt, mu_old = xs                       # (D,) (D,) (D, K)
         ex = cnt[:, None] * mu_old
         rows = jnp.take(phi, wid, axis=0)           # gather D rows only
-        mu_new, res = fused_estep(
-            theta, rows, ptot, ex, mu_old, cnt,
-            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
-            use_pallas=use_pallas, interpret=interpret,
-        )
+        if norm_psum is None:
+            mu_new, res = fused_estep(
+                theta, rows, ptot, ex, mu_old, cnt,
+                alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+                use_pallas=use_pallas, interpret=interpret,
+            )
+        else:
+            th = jnp.maximum(theta - ex, 0.0)
+            ph = jnp.maximum(rows - ex, 0.0)
+            pt = ptot[None, :] - ex
+            num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+            denom = norm_psum(num.sum(-1, keepdims=True))
+            mu_new = num / jnp.maximum(denom, 1e-30)
+            res = cnt[:, None] * jnp.abs(mu_new - mu_old)
         delta = cnt[:, None] * mu_new - ex
         carry = (
             theta + delta,
@@ -131,6 +177,191 @@ def _gs_sweep_portable(
     )
 
 
+def _sched_sweep_portable(
+    word_ids: jax.Array,       # (D, L) int32
+    counts: jax.Array,         # (D, L)
+    mu: jax.Array,             # (D, L, K)
+    theta: jax.Array,          # (D, K)
+    phi_wk: jax.Array,         # (W_s, K)
+    phi_k: jax.Array,          # (K,)
+    word_topics: jax.Array,    # (W_s, A) int32
+    token_active: jax.Array,   # (D, L) bool
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: float,
+    unroll: int = 8,
+    renorm_psum: Optional[Callable[[jax.Array], jax.Array]] = None,
+):
+    """Delta-compacted scheduled sweep — the portable oracle mirroring
+    ``_gs_sweep_portable`` (and the kernel's arithmetic exactly).
+
+    The active set is expanded ONCE per sweep into a (W_s, K) *word* lane
+    mask (active sets are per word, so one W_s·A-update scatter covers
+    every token); each column gathers its D mask rows next to its D φ̂
+    rows, runs the masked full-K E-step — eq. 13 with exclusion confined
+    to the active lanes, eq. 38 renorm to the active set's previous mass,
+    λ_w folded into the mask — and folds with *dense* adds plus a single
+    D-row φ̂ scatter.  This deliberately trades O(D·K) elementwise work
+    for the scan formulation's three 2-D scatters per column: on CPU an
+    XLA scatter costs ~65 ns *per scalar update* regardless of operand
+    size, so the per-column D·A-update scatters dominated the sweep;
+    masked-dense arithmetic is vector work.
+
+    ``renorm_psum`` hooks the eq. 38 mass/denominator reductions for the
+    topic-sharded shard_map path (union active set across shards).
+    """
+    D, L = word_ids.shape
+    word_masks = jnp.put_along_axis(
+        jnp.zeros_like(phi_wk), word_topics, 1.0, axis=-1, inplace=False
+    )                                                       # (W_s, K)
+
+    def col(carry, xs):
+        theta, phi, ptot = carry
+        wid, cnt, mu_old, act = xs          # (D,) (D,) (D,K) (D,)
+        mask = jnp.take(word_masks, wid, axis=0) * act[:, None]
+        ex = cnt[:, None] * mu_old * mask
+        rows = jnp.take(phi, wid, axis=0)           # gather D rows only
+        th = jnp.maximum(theta - ex, 0.0)
+        ph = jnp.maximum(rows - ex, 0.0)
+        pt = ptot[None, :] - ex
+        num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb) * mask
+        prev_mass = (mu_old * mask).sum(-1, keepdims=True)
+        new_sum = num.sum(-1, keepdims=True)
+        if renorm_psum is not None:
+            # eq. 38 over the UNION active set (topic-sharded shard_map)
+            prev_mass = renorm_psum(prev_mass)
+            new_sum = renorm_psum(new_sum)
+        mu_new = mask * (num / jnp.maximum(new_sum, 1e-30) * prev_mass) + (
+            1.0 - mask
+        ) * mu_old
+        delta = cnt[:, None] * (mu_new - mu_old)    # zero off the active set
+        carry = (
+            theta + delta,
+            phi.at[wid].add(delta),                 # scatter D rows only
+            ptot + delta.sum(0),
+        )
+        return carry, (mu_new, jnp.abs(delta))
+
+    (theta, phi, ptot), (mu_cols, res_cols) = jax.lax.scan(
+        col,
+        (theta, phi_wk, phi_k),
+        (word_ids.T, counts.T, mu.transpose(1, 0, 2),
+         token_active.T.astype(mu.dtype)),
+        unroll=max(1, min(unroll, L)),
+    )
+    return (
+        mu_cols.transpose(1, 0, 2), res_cols.transpose(1, 0, 2),
+        theta, phi, ptot,
+    )
+
+
+def sweep(
+    word_ids: jax.Array,       # (D, L) int32 — rows into phi_wk
+    counts: jax.Array,         # (D, L)
+    mu: jax.Array,             # (D, L, K)
+    theta: jax.Array,          # (D, K)
+    phi_wk: jax.Array,         # (W_s, K)
+    phi_k: jax.Array,          # (K,)
+    *,
+    alpha_m1: float,
+    beta_m1: float,
+    wb: jax.Array | float,
+    word_topics: Optional[jax.Array] = None,   # (W_s, A): scheduled sweep
+    token_active: Optional[jax.Array] = None,  # (D, L) λ_w mask (scheduled)
+    compute_loglik: bool = False,
+    unroll: int = 8,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    norm_psum: Optional[Callable] = None,      # dense E-step normaliser hook
+    renorm_psum: Optional[Callable] = None,    # eq. 38 mass hook (scheduled)
+) -> SweepResult:
+    """One column-serial Gauss-Seidel sweep — THE sweep entry point.
+
+    * ``word_topics is None`` → dense full-K IEM sweep (paper Fig. 2 at
+      B = L); otherwise the §3.1 scheduled sparse sweep on the per-word
+      active sets with eq. 38 renormalisation and the ``token_active``
+      λ_w word mask.
+    * ``compute_loglik`` additionally returns the post-sweep eq. 3 data
+      log-likelihood (the training-perplexity stop rule): emitted from
+      in-kernel per-column partials on the kernel path, one jnp pass on
+      the portable path.
+    * Dispatch: the single-launch Pallas kernel on TPU whenever the
+      carried (W_s + D, K) working set fits VMEM; otherwise the
+      delta-compacted portable scan (whose dense E-step still routes
+      through the fused kernel on TPU).  ``interpret=True`` forces the
+      kernel body on CPU (tests); ``use_pallas=False`` forces the pure-jnp
+      oracle.  The psum hooks (shard_map) imply the portable path.
+    """
+    D, L = word_ids.shape
+    K = mu.shape[-1]
+    scheduled = word_topics is not None
+    if scheduled and token_active is None:
+        token_active = counts > 0
+    hooked = norm_psum is not None or renorm_psum is not None
+
+    auto = use_pallas is None
+    if use_pallas is False:
+        interpret = False       # explicit False wins: pure-jnp oracle
+    elif auto:
+        fits = (sched_fits_vmem if scheduled else fits_vmem)(
+            phi_wk.shape[0], D, K
+        )
+        use_pallas = on_tpu() and fits and not hooked
+    if hooked and (use_pallas or interpret):
+        # refuse rather than silently downgrade: a collective cannot cross
+        # a kernel boundary, and a parity test passing a hook would
+        # otherwise compare the oracle to itself
+        raise ValueError(
+            "norm_psum/renorm_psum require the portable path; drop the "
+            "hook or the explicit use_pallas/interpret request"
+        )
+
+    if (use_pallas or interpret) and not hooked:
+        lane_align = 128 if (use_pallas and not interpret) else 1
+        if scheduled:
+            mu_new, res, theta_o, phi_o, ptot_o, ll = scheduled_sweep_pallas(
+                word_ids, counts, mu, theta, phi_wk, phi_k,
+                word_topics, token_active,
+                alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+                lane_align=lane_align, emit_loglik=compute_loglik,
+                interpret=interpret,
+            )
+        else:
+            mu_new, res, theta_o, phi_o, ptot_o, ll = gs_sweep_pallas(
+                word_ids, counts, mu, theta, phi_wk, phi_k,
+                alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+                lane_align=lane_align, emit_loglik=compute_loglik,
+                interpret=interpret,
+            )
+        return SweepResult(mu_new, theta_o, phi_o, ptot_o, res, ll)
+
+    if scheduled:
+        mu_new, res, theta_o, phi_o, ptot_o = _sched_sweep_portable(
+            word_ids, counts, mu, theta, phi_wk, phi_k,
+            word_topics, token_active,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, unroll=unroll,
+            renorm_psum=renorm_psum,
+        )
+    else:
+        # an explicit use_pallas=False means NO kernels at all (pure-jnp
+        # oracle for tests); only the auto path lets the inner E-step use
+        # the fused kernel
+        mu_new, res, theta_o, phi_o, ptot_o = _gs_sweep_portable(
+            word_ids, counts, mu, theta, phi_wk, phi_k,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, unroll=unroll,
+            use_pallas=on_tpu() if auto else False,
+            norm_psum=norm_psum,
+        )
+    ll = None
+    if compute_loglik:
+        ll = _map_loglik(
+            word_ids, counts, theta_o, phi_o, ptot_o,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+        )
+    return SweepResult(mu_new, theta_o, phi_o, ptot_o, res, ll)
+
+
 def gs_sweep(
     word_ids: jax.Array,       # (D, L) int32 — rows into phi_wk
     counts: jax.Array,         # (D, L)
@@ -146,37 +377,16 @@ def gs_sweep(
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Fused column-serial Gauss-Seidel IEM sweep: one launch per sweep.
+    """Legacy tuple form of the dense sweep (see ``sweep``).
 
-    Returns ``(mu_new, residual, theta, phi_wk, phi_k)`` where ``residual``
-    is the per-token counts·|Δμ| (paper eq. 36), emitted for free.
-
-    Dispatch: the single-launch Pallas kernel on TPU whenever the carried
-    (W_s + D, K) working set fits VMEM; otherwise the delta-compacted
-    portable scan (which still routes its E-step through the fused kernel
-    on TPU).  ``interpret=True`` forces the kernel body on CPU (tests).
+    Returns ``(mu_new, residual, theta, phi_wk, phi_k)``.
     """
-    D, L = word_ids.shape
-    K = mu.shape[-1]
-    auto = use_pallas is None
-    if use_pallas is False:
-        interpret = False       # explicit False wins: pure-jnp oracle
-    elif auto:
-        use_pallas = on_tpu() and fits_vmem(phi_wk.shape[0], D, K)
-    if use_pallas or interpret:
-        return gs_sweep_pallas(
-            word_ids, counts, mu, theta, phi_wk, phi_k,
-            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
-            lane_align=128 if (use_pallas and not interpret) else 1,
-            interpret=interpret,
-        )
-    # an explicit use_pallas=False means NO kernels at all (pure-jnp oracle
-    # for tests); only the auto path lets the inner E-step use the kernel
-    return _gs_sweep_portable(
+    r = sweep(
         word_ids, counts, mu, theta, phi_wk, phi_k,
-        alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, unroll=unroll,
-        use_pallas=on_tpu() if auto else False,
+        alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+        unroll=unroll, use_pallas=use_pallas, interpret=interpret,
     )
+    return r.mu, r.residual, r.theta, r.phi_wk, r.phi_k
 
 
 def attention(

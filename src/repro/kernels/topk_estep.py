@@ -66,9 +66,21 @@ def topk_estep_pallas(
 ) -> Tuple[jax.Array, jax.Array]:
     T, A = theta_a.shape
     BT = min(block_tokens, T)
-    if T % BT:
-        raise ValueError(f"token count {T} not divisible by block {BT}")
-    grid = (T // BT,)
+    pad = (-T) % BT
+    if pad:
+        # Ragged token counts: pad with zero-stat/zero-count rows.  Padded
+        # rows have mu_prev = 0 and theta = 0, so the kernel's previous-mass
+        # pad trick zeroes their numerator and active = 0 keeps mu at
+        # mu_prev = 0 — the rows are inert and sliced off below.
+        pad_rows = ((0, pad), (0, 0))
+        theta_a = jnp.pad(theta_a, pad_rows)
+        phi_a = jnp.pad(phi_a, pad_rows)
+        ptot_a = jnp.pad(ptot_a, pad_rows)
+        mu_prev_a = jnp.pad(mu_prev_a, pad_rows)
+        counts = jnp.pad(counts, ((0, pad),))
+        active = jnp.pad(active, ((0, pad),))
+    Tp = T + pad
+    grid = (Tp // BT,)
     tile = pl.BlockSpec((BT, A), lambda i: (i, 0))
     col = pl.BlockSpec((BT, 1), lambda i: (i, 0))
     scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
@@ -81,8 +93,8 @@ def topk_estep_pallas(
         in_specs=[tile, tile, tile, tile, col, col, scal],
         out_specs=[tile, tile],
         out_shape=[
-            jax.ShapeDtypeStruct((T, A), theta_a.dtype),
-            jax.ShapeDtypeStruct((T, A), theta_a.dtype),
+            jax.ShapeDtypeStruct((Tp, A), theta_a.dtype),
+            jax.ShapeDtypeStruct((Tp, A), theta_a.dtype),
         ],
         interpret=interpret,
     )(
@@ -90,4 +102,4 @@ def topk_estep_pallas(
         counts[:, None], active.astype(theta_a.dtype)[:, None],
         jnp.reshape(jnp.asarray(wb, theta_a.dtype), (1, 1)),
     )
-    return mu, delta
+    return mu[:T], delta[:T]

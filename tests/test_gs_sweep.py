@@ -265,30 +265,13 @@ def test_traced_vocab_size_reaches_kernels():
 
     @jax.jit
     def run(live_w):
-        _, phi_o, _, _ = em.gs_sweep_with_residuals(
+        return em.gs_sweep_with_residuals(
             batch, local, phi, ptot, cfg, vocab_size=live_w, interpret=True
-        )
-        return phi_o
+        ).phi_wk
 
     traced = run(jnp.int32(W))
     eager = em.gs_sweep_with_residuals(
         batch, local, phi, ptot, cfg, interpret=True
-    )[1]
+    ).phi_wk
     np.testing.assert_allclose(np.asarray(traced), np.asarray(eager),
                                atol=1e-6)
-
-
-def test_fold_phi_delta_matches_two_folds():
-    D, L, K, W = 7, 9, 4, 50
-    rng = np.random.default_rng(9)
-    wid = jnp.asarray(rng.integers(0, W, (D, L)).astype(np.int32))
-    cnt = jnp.asarray(rng.integers(0, 4, (D, L)).astype(np.float32))
-    mu_a = jnp.asarray(rng.dirichlet(np.ones(K), (D, L)).astype(np.float32))
-    mu_b = jnp.asarray(rng.dirichlet(np.ones(K), (D, L)).astype(np.float32))
-    d_wk, d_k = em.fold_phi_delta(mu_a, mu_b, cnt, wid, W)
-    a_wk, a_k = em.fold_phi(mu_a, cnt, wid, W)
-    b_wk, b_k = em.fold_phi(mu_b, cnt, wid, W)
-    np.testing.assert_allclose(np.asarray(d_wk), np.asarray(a_wk - b_wk),
-                               atol=1e-5)
-    np.testing.assert_allclose(np.asarray(d_k), np.asarray(a_k - b_k),
-                               atol=1e-5)

@@ -129,6 +129,51 @@ def test_fused_estep_padding_bitwise_invisible():
     np.testing.assert_array_equal(np.asarray(res_a), np.asarray(res_b)[:T])
 
 
+@pytest.mark.parametrize("T,blk", [(33, 16), (7, 8), (100, 32)])
+def test_topk_estep_kernel_pads_ragged_token_count(T, blk):
+    """T % BT != 0 must pad-and-slice inside the wrapper, not raise —
+    the same contract ``fused_estep_pallas`` already honours."""
+    A = 8
+    rng = np.random.default_rng(T)
+    th = jnp.asarray(rng.gamma(2., 1., (T, A)).astype(np.float32)) + 1
+    ph = jnp.asarray(rng.gamma(2., 1., (T, A)).astype(np.float32)) + 1
+    pt = jnp.asarray(rng.gamma(5., 1., (T, A)).astype(np.float32)) + 50
+    mu = jnp.asarray((rng.dirichlet(np.ones(A), T) * 0.6).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(1, 4, T).astype(np.float32))
+    act = jnp.asarray(rng.random(T) > 0.4)
+    o_mu, o_d = topk_estep_pallas(th, ph, pt, mu, cnt, act, alpha_m1=.01,
+                                  beta_m1=.01, wb=50., block_tokens=blk,
+                                  interpret=True)
+    assert o_mu.shape == (T, A) and o_d.shape == (T, A)
+    r_mu, r_d = ref.topk_estep_ref(th, ph, pt, mu, cnt, act, .01, .01, 50.)
+    np.testing.assert_allclose(np.asarray(o_mu), np.asarray(r_mu), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o_d), np.asarray(r_d), atol=1e-6)
+
+
+def test_topk_estep_padding_bitwise_invisible():
+    """Wrapper padding ≡ caller padding: same kernel, same bits."""
+    T, Tp, A, blk = 21, 32, 8, 16
+    rng = np.random.default_rng(9)
+    th = rng.gamma(2., 1., (Tp, A)).astype(np.float32) + 1
+    ph = rng.gamma(2., 1., (Tp, A)).astype(np.float32) + 1
+    pt = rng.gamma(5., 1., (Tp, A)).astype(np.float32) + 50
+    mu = (rng.dirichlet(np.ones(A), Tp) * 0.6).astype(np.float32)
+    cnt = rng.integers(1, 4, Tp).astype(np.float32)
+    act = rng.random(Tp) > 0.4
+    # manual padding rows mirror the wrapper's: zero stats, inactive
+    th[T:], ph[T:], pt[T:], mu[T:], cnt[T:], act[T:] = 0, 0, 0, 0, 0, False
+    kw = dict(alpha_m1=.01, beta_m1=.01, wb=50., block_tokens=blk,
+              interpret=True)
+    cut = lambda x, n: jnp.asarray(x[:n])
+    mu_a, d_a = topk_estep_pallas(cut(th, T), cut(ph, T), cut(pt, T),
+                                  cut(mu, T), cut(cnt, T),
+                                  jnp.asarray(act[:T]), **kw)
+    mu_b, d_b = topk_estep_pallas(*map(jnp.asarray, (th, ph, pt, mu, cnt)),
+                                  jnp.asarray(act), **kw)
+    np.testing.assert_array_equal(np.asarray(mu_a), np.asarray(mu_b)[:T])
+    np.testing.assert_array_equal(np.asarray(d_a), np.asarray(d_b)[:T])
+
+
 def test_estep_kernels_accept_traced_wb():
     """wb = W·(β−1) arrives as a tracer from the streaming trainer's
     traced live-vocab argument; both E-step kernels must treat it as an

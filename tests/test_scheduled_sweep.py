@@ -1,0 +1,326 @@
+"""Fused scheduled sweep + unified sweep dispatch: interpret-mode parity
+against the jnp oracles, in-sweep stop-rule log-likelihood, scheduler
+refresh equivalence, and fused-vs-scan FOEM end-to-end with scheduling on.
+
+The contract: ``kernels.ops.sweep`` with ``word_topics`` computes exactly
+the §3.1 scheduled sparse sweep that ``foem.scheduled_iem_sweep``'s legacy
+blocked scan (B = L) computes — eq. 13 on the active set, eq. 38 partial
+renormalisation, λ_w word masking, eq. 36 replacement residuals — in ONE
+launch on the kernel path, and its emitted log-likelihood equals
+``em.training_perplexity`` on the post-sweep statistics.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import em, foem
+from repro.core import scheduling as sched_lib
+from repro.core.types import LDAConfig, LocalState, MinibatchData, SweepResult
+from repro.kernels import ops as kops
+from repro.kernels.gs_sweep import gs_sweep_pallas
+from repro.kernels.scheduled_sweep import scheduled_sweep_pallas
+
+
+def _state(D, L, K, W, seed=0, zero_counts=False):
+    rng = np.random.default_rng(seed)
+    wid = rng.integers(0, W, (D, L)).astype(np.int32)
+    lo = 0 if zero_counts else 1
+    cnt = rng.integers(lo, 5, (D, L)).astype(np.float32)
+    mu = rng.dirichlet(np.ones(K), (D, L)).astype(np.float32)
+    batch = MinibatchData(jnp.asarray(wid), jnp.asarray(cnt))
+    mu = jnp.asarray(mu)
+    theta = em.fold_theta(mu, batch.counts)
+    phi, ptot = em.fold_phi(mu, batch.counts, batch.word_ids, W)
+    return batch, LocalState(mu=mu, theta_dk=theta), phi, ptot
+
+
+def _selection(batch, local, cfg, W, seed=0):
+    """A realistic post-warm-up selection: residual-ranked active sets."""
+    rng = np.random.default_rng(seed)
+    r_wk = jnp.asarray(rng.gamma(1.0, 1.0, (W, cfg.K)).astype(np.float32))
+    sched = sched_lib.SchedulerState(r_wk=r_wk, r_w=r_wk.sum(-1))
+    word_topics = sched_lib.select_active_topics(sched, cfg.active_topics)
+    token_active = jnp.asarray(rng.random(batch.word_ids.shape) > 0.3) & (
+        batch.counts > 0
+    )
+    return sched, word_topics, token_active
+
+
+def _sweep_kwargs(cfg, W):
+    return dict(alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
+                wb=W * cfg.beta_m1)
+
+
+# ---------------------------------------------------------------------------
+# Kernel (interpret mode) vs the portable delta-compacted oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("D,L,K,W,A", [(5, 6, 7, 64, 3), (8, 4, 16, 96, 5),
+                                       (12, 9, 6, 128, 6)])
+def test_scheduled_sweep_kernel_matches_portable(D, L, K, W, A):
+    """Interpret-mode kernel ≡ portable oracle — μ, θ̂, φ̂, φ̂(k) and the
+    eq. 36 residuals, including padded documents (D % 8 != 0)."""
+    cfg = LDAConfig(num_topics=K, vocab_size=W, active_topics=A)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=D)
+    _, word_topics, token_active = _selection(batch, local, cfg, W, seed=D)
+    args = (batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot)
+    kw = dict(_sweep_kwargs(cfg, W), word_topics=word_topics,
+              token_active=token_active, compute_loglik=True)
+    a = kops.sweep(*args, **kw, use_pallas=False)
+    b = kops.sweep(*args, **kw, interpret=True)
+    assert isinstance(a, SweepResult) and isinstance(b, SweepResult)
+    for name in ("mu", "theta", "phi_wk", "phi_k", "residual"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            rtol=2e-5, atol=1e-5, err_msg=name,
+        )
+    np.testing.assert_allclose(float(a.loglik), float(b.loglik), rtol=1e-5)
+
+
+def test_scheduled_sweep_matches_legacy_scan_oracle():
+    """Fused dispatch ≡ the legacy blocked scan (``sweep_impl="scan"``,
+    B = L) through the full ``scheduled_iem_sweep`` contract, scheduler
+    refresh included."""
+    D, L, K, W, A = 8, 6, 10, 80, 4
+    cfg = LDAConfig(num_topics=K, vocab_size=W, active_topics=A)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=3)
+    scheduler = sched_lib.full_sweep_residuals(
+        local.mu, jnp.zeros_like(local.mu), batch.counts, batch.word_ids, W
+    )
+    out_f = foem.scheduled_iem_sweep(
+        batch, local, phi, ptot, scheduler, cfg, compute_loglik=True
+    )
+    out_s = foem.scheduled_iem_sweep(
+        batch, local, phi, ptot, scheduler,
+        dataclasses.replace(cfg, sweep_impl="scan"), compute_loglik=True
+    )
+    l_f, phi_f, ptot_f, sch_f, ll_f = out_f
+    l_s, phi_s, ptot_s, sch_s, ll_s = out_s
+    np.testing.assert_allclose(np.asarray(l_f.mu), np.asarray(l_s.mu),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(l_f.theta_dk),
+                               np.asarray(l_s.theta_dk), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(phi_f), np.asarray(phi_s),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ptot_f), np.asarray(ptot_s),
+                               rtol=1e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sch_f.r_wk), np.asarray(sch_s.r_wk),
+                               atol=2e-5)
+    np.testing.assert_allclose(float(ll_f), float(ll_s), rtol=1e-5)
+
+
+def test_scheduled_sweep_inactive_entries_untouched():
+    """Off-active-set μ entries and λ_w-skipped tokens keep μ_old and carry
+    zero residual (priority-queue semantics need exact zeros)."""
+    D, L, K, W, A = 8, 5, 9, 48, 3
+    cfg = LDAConfig(num_topics=K, vocab_size=W, active_topics=A)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=7, zero_counts=True)
+    _, word_topics, token_active = _selection(batch, local, cfg, W, seed=7)
+    r = kops.sweep(
+        batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot,
+        **_sweep_kwargs(cfg, W), word_topics=word_topics,
+        token_active=token_active, interpret=True,
+    )
+    token_topics = np.asarray(jnp.take(word_topics, batch.word_ids, axis=0))
+    on_active = np.zeros((D, L, K), bool)
+    np.put_along_axis(on_active, token_topics, True, axis=-1)
+    inactive_tok = ~np.asarray(token_active)
+    mu, res = np.asarray(r.mu), np.asarray(r.residual)
+    mu_old = np.asarray(local.mu)
+    np.testing.assert_array_equal(mu[~on_active], mu_old[~on_active])
+    np.testing.assert_array_equal(mu[inactive_tok], mu_old[inactive_tok])
+    assert np.all(res[~on_active] == 0.0)
+    assert np.all(res[inactive_tok] == 0.0)
+    zero_cnt = np.asarray(batch.counts) == 0
+    assert np.all(res[zero_cnt] == 0.0)
+
+
+def test_scheduled_sweep_lane_padding_masked():
+    """K padded to the lane boundary (compiled-TPU layout) must not leak
+    mass: padded lanes can never be in an active set."""
+    D, L, K, W, A = 8, 5, 7, 64, 3
+    cfg = LDAConfig(num_topics=K, vocab_size=W, active_topics=A)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=5)
+    _, word_topics, token_active = _selection(batch, local, cfg, W, seed=5)
+    args = (batch.word_ids, batch.counts, local.mu, local.theta_dk, phi,
+            ptot, word_topics, token_active)
+    ref = scheduled_sweep_pallas(*args, **_sweep_kwargs(cfg, W),
+                                 interpret=True)
+    padded = scheduled_sweep_pallas(*args, **_sweep_kwargs(cfg, W),
+                                    lane_align=8, emit_loglik=True,
+                                    interpret=True)
+    for name, x, y in zip(("mu", "res", "theta", "phi", "ptot"), ref, padded):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6,
+                                   err_msg=name)
+    ll_ref = kops._map_loglik(
+        batch.word_ids, batch.counts, ref[2], ref[3], ref[4],
+        **_sweep_kwargs(cfg, W),
+    )
+    np.testing.assert_allclose(float(padded[5]), float(ll_ref), rtol=1e-5)
+
+
+def test_scheduler_update_from_sweep_equivalence():
+    """One segment-sum over the emitted full-K residual ≡ the compact
+    ``scatter_residuals`` + ``update_residuals`` refresh."""
+    D, L, K, W, A = 6, 7, 8, 40, 3
+    cfg = LDAConfig(num_topics=K, vocab_size=W, active_topics=A)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=11)
+    scheduler, word_topics, token_active = _selection(
+        batch, local, cfg, W, seed=11
+    )
+    r = kops.sweep(
+        batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot,
+        **_sweep_kwargs(cfg, W), word_topics=word_topics,
+        token_active=token_active, use_pallas=False,
+    )
+    token_topics = jnp.take(word_topics, batch.word_ids, axis=0)
+    got = sched_lib.scheduler_update_from_sweep(
+        scheduler, r.residual, batch.word_ids, word_topics
+    )
+    abs_delta = jnp.take_along_axis(r.residual, token_topics, axis=-1)
+    r_new, touched = sched_lib.scatter_residuals(
+        abs_delta, batch.word_ids, token_topics, W, K
+    )
+    want = sched_lib.update_residuals(scheduler, r_new, touched)
+    np.testing.assert_allclose(np.asarray(got.r_wk), np.asarray(want.r_wk),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.r_w), np.asarray(want.r_w),
+                               atol=1e-5)
+
+
+def test_sched_portable_renorm_hook_identity():
+    """The eq. 38 psum hook (shard_map plumbing) with an identity reduction
+    must reproduce the hook-free path bitwise."""
+    D, L, K, W, A = 6, 5, 8, 48, 3
+    cfg = LDAConfig(num_topics=K, vocab_size=W, active_topics=A)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=2)
+    _, word_topics, token_active = _selection(batch, local, cfg, W, seed=2)
+    args = (batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot)
+    kw = dict(_sweep_kwargs(cfg, W), word_topics=word_topics,
+              token_active=token_active, use_pallas=False)
+    plain = kops.sweep(*args, **kw)
+    hooked = kops.sweep(*args, **kw, renorm_psum=lambda x: x)
+    for name in ("mu", "theta", "phi_wk", "phi_k", "residual"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(plain, name)), np.asarray(getattr(hooked, name)),
+            err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# In-sweep stop rule: emitted loglik ≡ em.training_perplexity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduled", [False, True])
+@pytest.mark.parametrize("interpret", [False, True])
+def test_in_sweep_loglik_matches_training_perplexity(scheduled, interpret):
+    """Both sweep kernels' emitted per-column loglik partials sum to the
+    standalone ``em.training_perplexity`` value on the post-sweep stats."""
+    D, L, K, W, A = 9, 7, 8, 72, 3
+    cfg = LDAConfig(num_topics=K, vocab_size=W,
+                    active_topics=A if scheduled else 0)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=13)
+    kw = dict(_sweep_kwargs(cfg, W), compute_loglik=True)
+    if scheduled:
+        _, word_topics, token_active = _selection(batch, local, cfg, W, 13)
+        kw.update(word_topics=word_topics, token_active=token_active)
+    how = dict(interpret=True) if interpret else dict(use_pallas=False)
+    r = kops.sweep(batch.word_ids, batch.counts, local.mu, local.theta_dk,
+                   phi, ptot, **kw, **how)
+    ppl_sweep = float(jnp.exp(-r.loglik / batch.counts.sum()))
+    ppl_ref = float(em.training_perplexity(
+        batch, r.theta, r.phi_wk, r.phi_k, cfg
+    ))
+    np.testing.assert_allclose(ppl_sweep, ppl_ref, rtol=1e-5)
+
+
+def test_gs_sweep_emit_loglik_preserves_sweep_outputs():
+    """The stop-rule grid extension must not perturb the sweep outputs —
+    bitwise identical to the plain launch."""
+    D, L, K, W = 8, 6, 5, 48
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=17)
+    args = (batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot)
+    plain = gs_sweep_pallas(*args, **_sweep_kwargs(cfg, W), interpret=True)
+    withll = gs_sweep_pallas(*args, **_sweep_kwargs(cfg, W),
+                             emit_loglik=True, interpret=True)
+    for name, x, y in zip(("mu", "res", "theta", "phi", "ptot"), plain,
+                          withll):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+    assert plain[5] is None and withll[5] is not None
+
+
+def test_gs_sweep_double_buffer_bitwise():
+    """The double-buffered (async prefetch) gather must be bitwise equal to
+    the synchronous gather — the prefetched rows reflect every prior
+    column's scatter."""
+    D, L, K, W = 11, 8, 6, 64     # D % 8 != 0: exercises padded docs too
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    batch, local, phi, ptot = _state(D, L, K, W, seed=19)
+    args = (batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot)
+    sync = gs_sweep_pallas(*args, **_sweep_kwargs(cfg, W),
+                           double_buffer=False, interpret=True)
+    buf = gs_sweep_pallas(*args, **_sweep_kwargs(cfg, W),
+                          double_buffer=True, interpret=True)
+    for name, x, y in zip(("mu", "res", "theta", "phi", "ptot"), sync, buf):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# FOEM end-to-end with scheduling on: fused vs scan inner loop
+# ---------------------------------------------------------------------------
+
+def test_foem_minibatch_scheduled_fused_matches_scan():
+    """The whole inner loop — warm-up, residual init, scheduled sweeps AND
+    the in-sweep stop rule — agrees between the fused dispatch and the
+    legacy scan implementation with active_topics > 0."""
+    D, L, K, W = 8, 10, 6, 80
+    cfg = LDAConfig(num_topics=K, vocab_size=W, max_sweeps=7,
+                    active_topics=3, ppl_check_every=2,
+                    active_words_frac=0.8)
+    batch, *_ = _state(D, L, K, W, seed=23)
+    key = jax.random.PRNGKey(1)
+    zeros_wk = jnp.zeros((W, K), jnp.float32)
+    zeros_k = jnp.zeros((K,), jnp.float32)
+    r_fused = foem.foem_minibatch(key, batch, zeros_wk, zeros_k, cfg)
+    r_scan = foem.foem_minibatch(
+        key, batch, zeros_wk, zeros_k,
+        dataclasses.replace(cfg, sweep_impl="scan"),
+    )
+    assert int(r_fused.diag.sweeps_run) == int(r_scan.diag.sweeps_run)
+    np.testing.assert_allclose(np.asarray(r_fused.phi_wk),
+                               np.asarray(r_scan.phi_wk), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(r_fused.scheduler.r_wk),
+                               np.asarray(r_scan.scheduler.r_wk), atol=3e-4)
+    np.testing.assert_allclose(float(r_fused.diag.final_train_ppl),
+                               float(r_scan.diag.final_train_ppl), rtol=1e-4)
+
+
+def test_foem_minibatch_scheduled_jit_single_launch_contract():
+    """The fused scheduled path must stay jit-compilable inside the stop
+    rule's lax.cond/while_loop (traced live vocab included) and converge."""
+    D, L, K, W = 8, 6, 5, 40
+    cfg = LDAConfig(num_topics=K, vocab_size=W, max_sweeps=10,
+                    active_topics=2, ppl_check_every=3)
+    batch, *_ = _state(D, L, K, W, seed=29)
+    zeros_wk = jnp.zeros((W, K), jnp.float32)
+    zeros_k = jnp.zeros((K,), jnp.float32)
+
+    @jax.jit
+    def run(live_w):
+        res = foem.foem_minibatch(
+            jax.random.PRNGKey(0), batch, zeros_wk, zeros_k, cfg,
+            vocab_size=live_w,
+        )
+        return res.diag.sweeps_run, res.diag.final_train_ppl, res.phi_k
+
+    sweeps, ppl, phi_k = run(jnp.int32(W))
+    assert int(sweeps) >= max(1, cfg.warmup_sweeps)
+    assert np.isfinite(float(ppl))
+    np.testing.assert_allclose(float(phi_k.sum()),
+                               float(batch.counts.sum()), rtol=1e-3)
