@@ -10,7 +10,13 @@ portable path:
     topics, before (the PR 2 blocked scan: per-column (D, A) gathers +
     ``topk_estep`` + three 2-D scatters) and after (the single-launch
     dispatch: word-level lane masks, masked full-K E-step, D-row folds,
-    one-segment-sum scheduler refresh).
+    one-segment-sum scheduler refresh);
+  * ``sharded``    — the topic-sharded sweep on a 4-way model axis
+    (CPU multi-device simulation, run in a subprocess so the fake-device
+    flag can't leak): the two-phase engine (probe → ONE psum → fold →
+    exact-renorm psum; ``kernels/sharded_sweep.py``) vs the legacy
+    per-column psum hooks, pinned against the single-shard fused sweep on
+    the same cell.
 
 Emits machine-readable ``BENCH_sweep.json`` so future PRs have a pinned
 baseline trajectory.  ``--quick`` shrinks the cell for CI smoke runs.
@@ -20,7 +26,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -30,7 +39,7 @@ import numpy as np
 from benchmarks.common import csv_row
 from repro.core import em, foem
 from repro.core import scheduling as sched_lib
-from repro.core.types import LDAConfig, LocalState, MinibatchData
+from repro.core.types import LDAConfig, LocalState, MinibatchData, SweepPlan
 
 
 def _timeit(fn, reps: int) -> float:
@@ -97,12 +106,105 @@ def bench_scheduled(batch, local, phi, ptot, cfg, reps, active_topics):
     return before, after
 
 
+MP = 4              # model-axis width of the sharded suite's simulated mesh
+_SHARDED_MARK = "SHARDED_JSON:"
+
+
+def bench_sharded_inner(batch, local, phi, ptot, cfg, reps, active_topics):
+    """Topic-sharded sweeps on a live (model=MP) mesh — run under
+    ``--xla_force_host_platform_device_count`` (the ``sharded-exec``
+    subprocess).  Times the scheduled sweep per ``cfg.sharded_impl``."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel.compat import make_mesh, shard_map
+    from repro.kernels import ops as kops
+
+    W, K = phi.shape
+    mesh = make_mesh((MP,), ("model",))
+    rng = np.random.default_rng(1)
+    r_wk = jnp.asarray(rng.gamma(1.0, 1.0, (W, K)).astype(np.float32))
+    A_loc = max(1, active_topics // MP)
+
+    def sweep_fn(two_phase):
+        def body(mu, theta, phi, ptot, r_loc):
+            sched = sched_lib.SchedulerState(r_wk=r_loc, r_w=r_loc.sum(-1))
+            wt = sched_lib.select_active_topics(sched, A_loc)
+            r = kops.sweep(
+                batch.word_ids, batch.counts, mu, theta, phi, ptot,
+                alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
+                wb=W * cfg.beta_m1, word_topics=wt,
+                token_active=batch.counts > 0, unroll=cfg.sweep_unroll,
+                plan=SweepPlan(axis_name="model", two_phase=two_phase),
+            )
+            return r.theta, r.phi_wk, r.phi_k
+
+        f = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, None, "model"), P(None, "model"),
+                      P(None, "model"), P("model"), P(None, "model")),
+            out_specs=(P(None, "model"), P(None, "model"), P("model")),
+        ))
+        sh = lambda spec: NamedSharding(mesh, spec)
+        args = (
+            jax.device_put(local.mu, sh(P(None, None, "model"))),
+            jax.device_put(local.theta_dk, sh(P(None, "model"))),
+            jax.device_put(phi, sh(P(None, "model"))),
+            jax.device_put(ptot, sh(P("model"))),
+            jax.device_put(r_wk, sh(P(None, "model"))),
+        )
+        return lambda: f(*args)
+
+    two_phase = _timeit(sweep_fn(True), reps)
+    hooks = _timeit(sweep_fn(False), reps)
+    return {
+        "model_shards": MP,
+        "active_topics": active_topics,
+        "two_phase_s": two_phase,
+        "hooks_s": hooks,
+        "two_phase_vs_hooks_speedup": hooks / max(two_phase, 1e-12),
+    }
+
+
+def _bench_sharded_subprocess(quick: bool) -> dict:
+    """Re-exec this module with the fake-device flag set (it must be set
+    before jax initialises, so the parent process can't host the mesh) and
+    collect the child's JSON payload."""
+    cmd = [sys.executable, os.path.abspath(__file__), "--suite",
+           "sharded-exec"]
+    if quick:
+        cmd.append("--quick")
+    env = {
+        **os.environ,
+        "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                      f" --xla_force_host_platform_device_count={MP}").strip(),
+        "JAX_PLATFORMS": "cpu",
+        "PYTHONPATH": os.pathsep.join(
+            p for p in (
+                os.path.join(os.path.dirname(__file__), "..", "src"),
+                os.path.join(os.path.dirname(__file__), ".."),
+                os.environ.get("PYTHONPATH", ""),
+            ) if p
+        ),
+    }
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=1800,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench subprocess failed:\n{r.stdout}\n{r.stderr}"
+        )
+    for line in r.stdout.splitlines():
+        if line.startswith(_SHARDED_MARK):
+            return json.loads(line[len(_SHARDED_MARK):])
+    raise RuntimeError(f"no payload marker in sharded bench:\n{r.stdout}")
+
+
 def main(rows=None, argv=None):
     rows = rows if rows is not None else []
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small smoke cell (CI)")
-    ap.add_argument("--suite", choices=("all", "full", "scheduled"),
+    ap.add_argument("--suite",
+                    choices=("all", "full", "scheduled", "sharded",
+                             "sharded-exec"),
                     default="all", help="which sweep variant(s) to time")
     ap.add_argument("--out", default=None,
                     help="output path; quick/partial runs default to "
@@ -124,6 +226,14 @@ def main(rows=None, argv=None):
     cfg = LDAConfig(num_topics=K, vocab_size=W)
     batch, local, phi, ptot = _make_state(D, L, K, W)
     cell = f"D{D}_L{L}_K{K}_W{W}"
+
+    if args.suite == "sharded-exec":
+        # child process of the "sharded" suite: the fake-device mesh exists
+        # here only; report the payload on stdout and write no files
+        payload = bench_sharded_inner(batch, local, phi, ptot, cfg, reps, A)
+        print(_SHARDED_MARK + json.dumps(payload), flush=True)
+        return rows
+
     payload = {
         "cell": {"D_s": D, "L": L, "K": K, "W": W, "B": L, "A": A,
                  "reps": reps},
@@ -163,6 +273,28 @@ def main(rows=None, argv=None):
         }
         report.append(f"scheduled {s_speedup:.2f}x")
 
+    if args.suite in ("all", "sharded"):
+        sh = _bench_sharded_subprocess(args.quick)
+        # pin against the single-shard fused scheduled sweep on this cell
+        if "scheduled_sweep" in payload:
+            base = payload["scheduled_sweep"]["after_fused_s"]
+        else:
+            _, base = bench_scheduled(batch, local, phi, ptot, cfg, reps, A)
+        sh["single_shard_fused_s"] = base
+        sh["two_phase_vs_single_shard"] = base / max(sh["two_phase_s"], 1e-12)
+        vs_hooks = sh["two_phase_vs_hooks_speedup"]
+        rows.append(csv_row(
+            f"sweep_sharded_hooks_{cell}_A{A}_mp{MP}",
+            sh["hooks_s"] * 1e6, "impl=hooks;speedup=1.00",
+        ))
+        rows.append(csv_row(
+            f"sweep_sharded_two_phase_{cell}_A{A}_mp{MP}",
+            sh["two_phase_s"] * 1e6,
+            f"impl=two_phase;vs_hooks={vs_hooks:.2f}",
+        ))
+        payload["sharded_sweep"] = sh
+        report.append(f"sharded two-phase {vs_hooks:.2f}x vs hooks")
+
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {args.out} ({', '.join(report)})", flush=True)
     return rows
@@ -171,6 +303,11 @@ def main(rows=None, argv=None):
 def main_scheduled(rows=None, argv=None):
     """run.py entry for the scheduled-sweep-only suite."""
     return main(rows, argv=(argv or []) + ["--suite", "scheduled"])
+
+
+def main_sharded(rows=None, argv=None):
+    """run.py entry for the topic-sharded two-phase suite."""
+    return main(rows, argv=(argv or []) + ["--suite", "sharded"])
 
 
 if __name__ == "__main__":

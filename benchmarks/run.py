@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows for:
              (bench_sweep → BENCH_sweep.json)
   * scheduled  the §3.1 scheduled sparse sweep alone: PR 2 blocked scan vs
              the single-launch fused dispatch (bench_sweep --suite scheduled)
+  * sharded  the topic-sharded sweep on a simulated 4-way model axis:
+             two-phase engine vs per-column psum hooks, pinned against the
+             single-shard fused sweep (bench_sweep --suite sharded)
 
 ``python -m benchmarks.run [--only fig7,table5,sweep,scheduled,...] [--quick]``
 (``--quick`` currently applies to the sweep suites' smoke cell.)
@@ -42,6 +45,7 @@ SUITES = {
     "table3": bench_complexity.main,
     "sweep": bench_sweep.main,
     "scheduled": bench_sweep.main_scheduled,
+    "sharded": bench_sweep.main_sharded,
 }
 
 
@@ -51,10 +55,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode for suites that support it")
     args = ap.parse_args()
-    # "scheduled" is a focused subset of "sweep" (same cell, scheduled
-    # variant only) — opt-in via --only so default runs don't time it twice
+    # "scheduled"/"sharded" are focused subsets of "sweep" (same cell, one
+    # variant each) — opt-in via --only so default runs don't time them twice
     picks = args.only.split(",") if args.only else [
-        n for n in SUITES if n != "scheduled"
+        n for n in SUITES if n not in ("scheduled", "sharded")
     ]
     print("name,us_per_call,derived")
     failures = []

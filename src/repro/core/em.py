@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import (
-    GlobalStats, LDAConfig, LocalState, MinibatchData, SweepResult,
+    GlobalStats, LDAConfig, LocalState, MinibatchData, SweepPlan, SweepResult,
 )
 from repro.kernels import ops as kops
 
@@ -236,6 +236,7 @@ def gs_sweep_with_residuals(
     as_delta: bool = False,
     compute_loglik: bool = False,
     interpret: bool = False,
+    plan: Optional[SweepPlan] = None,
 ) -> SweepResult:
     """One fused column-serial Gauss-Seidel sweep, emitting eq. 36 residuals.
 
@@ -247,7 +248,9 @@ def gs_sweep_with_residuals(
     scatter instead of a full re-measurement pass
     (``scheduling.residuals_from_sweep``); ``compute_loglik`` additionally
     fills ``SweepResult.loglik`` with the post-sweep eq. 3 data term — the
-    in-sweep training-perplexity stop rule.
+    in-sweep training-perplexity stop rule.  ``plan`` forwards the
+    execution plan (``foem_sharded`` passes its topic-axis two-phase plan;
+    the stats/μ are then shard-local slices, see ``SweepResult``).
     """
     W = vocab_size if vocab_size is not None else cfg.W
     r = kops.sweep(
@@ -255,7 +258,7 @@ def gs_sweep_with_residuals(
         phi_wk, phi_k,
         alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1, wb=W * cfg.beta_m1,
         compute_loglik=compute_loglik, unroll=cfg.sweep_unroll,
-        interpret=interpret,
+        interpret=interpret, plan=plan,
     )
     if as_delta:
         r = r._replace(phi_wk=r.phi_wk - phi_wk, phi_k=r.phi_k - phi_k)

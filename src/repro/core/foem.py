@@ -30,6 +30,7 @@ from repro.core.types import (
     LocalState,
     MinibatchData,
     SchedulerState,
+    SweepPlan,
     uniform_responsibilities,
 )
 
@@ -62,6 +63,7 @@ def scheduled_iem_sweep(
     *,
     vocab_size: Optional[int] = None,
     compute_loglik: bool = False,
+    plan: Optional[SweepPlan] = None,
 ) -> Tuple[LocalState, jax.Array, jax.Array, SchedulerState,
            Optional[jax.Array]]:
     """One dynamic-scheduling sweep: update only active (word, topic) entries.
@@ -76,6 +78,12 @@ def scheduled_iem_sweep(
     by the sweep itself.  A coarse block count keeps the legacy blocked
     scan over ``kops.topk_estep``.
 
+    Under a sharded ``plan`` (``foem_sharded``: topic lanes K/mp per
+    shard, ``cfg.topk_shards == mp``) the selection runs on the shard's
+    *local* residual slice — top-(A/mp) local ids, whose union across
+    shards is the balanced size-A active set — and the sweep always takes
+    the unified dispatch (the legacy blocked scan has no sharded form).
+
     Returns ``(local, phi, ptot, scheduler, loglik-or-None)``.
     """
     A = cfg.active_topics
@@ -84,21 +92,41 @@ def scheduled_iem_sweep(
     K = cfg.K
     W = vocab_size if vocab_size is not None else cfg.W
     Wrows = phi_wk.shape[0]
+    sharded = plan is not None and plan.axis_name is not None
 
     # ---- selection (the lax.top_k partial sort; paper's insertion sort) ----
-    word_topics = sched_lib.select_active_topics(
-        scheduler, A, cfg.topk_shards
-    )                                                              # (Wv, A)
-    word_thresh = sched_lib.select_active_words_threshold(
-        scheduler, cfg.active_words_frac
-    )
+    if sharded:
+        # scheduler.r_wk is the (W_s, K/mp) local slice: a plain local
+        # top-(A/mp) IS the shard's group of the grouped selection
+        word_topics = sched_lib.select_active_topics(
+            scheduler, max(1, A // max(1, cfg.topk_shards))
+        )                                                          # (Wv, A/mp)
+    else:
+        word_topics = sched_lib.select_active_topics(
+            scheduler, A, cfg.topk_shards
+        )                                                          # (Wv, A)
+    if sharded and cfg.active_words_frac < 1.0:
+        # the λ_w word ranking needs the GLOBAL eq. 37 residual: a
+        # shard-local threshold would freeze a word on one shard and not
+        # another, making the cross-shard normaliser masks inconsistent.
+        # One (W_s,)-psum; every shard then derives the identical mask.
+        r_w = jax.lax.psum(scheduler.r_w, plan.axis_name)
+        word_thresh = sched_lib.select_active_words_threshold(
+            sched_lib.SchedulerState(r_wk=scheduler.r_wk, r_w=r_w),
+            cfg.active_words_frac,
+        )
+    else:
+        r_w = scheduler.r_w
+        word_thresh = sched_lib.select_active_words_threshold(
+            scheduler, cfg.active_words_frac
+        )
     token_active = (
-        jnp.take(scheduler.r_w, batch.word_ids, axis=0) >= word_thresh
+        jnp.take(r_w, batch.word_ids, axis=0) >= word_thresh
     ) & (batch.counts > 0)                                         # (D, L)
 
     # ---- blocked Gauss-Seidel over token columns (0 = column-serial) ----
     B = cfg.resolve_blocks(L)
-    if B == L and cfg.sweep_impl == "fused":
+    if sharded or (B == L and cfg.sweep_impl == "fused"):
         r = kops.sweep(
             batch.word_ids, batch.counts, local.mu, local.theta_dk,
             phi_wk, phi_k,
@@ -106,6 +134,7 @@ def scheduled_iem_sweep(
             wb=W * cfg.beta_m1,
             word_topics=word_topics, token_active=token_active,
             compute_loglik=compute_loglik, unroll=cfg.sweep_unroll,
+            plan=plan,
         )
         scheduler = sched_lib.scheduler_update_from_sweep(
             scheduler, r.residual, batch.word_ids, word_topics

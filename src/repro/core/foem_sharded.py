@@ -16,15 +16,34 @@ This module restructures the step so every index stays shard-local
     shard* — the union across shards is a balanced size-A active set
     (priority-queue semantics preserved; see scheduling.select_active_topics);
   * cross-shard communication is only (a) the E-step normaliser and the
-    eq. 38 renorm mass — psums of (D, L)-sized tensors, (b) the global
-    training-perplexity scalar for the stop rule, and (c) one per-sweep psum
-    of the φ̂ delta over the *data* axis (documents), folded between sweeps —
+    eq. 38 renorm mass — (D, L)-sized psums, (b) the pre-log stop-rule
+    partials (one psum per check sweep), and (c) one per-sweep psum of the
+    φ̂ delta over the *data* axis (documents), folded between sweeps —
     Gauss–Seidel within a shard, Jacobi across data shards: a bounded-
     staleness fold justified exactly like eq. 19 (any valid sufficient-
     statistics fold improves the bound).
 
+Every sweep — warm-up and scheduled — routes through the unified
+``kernels.ops.sweep`` dispatch under a ``SweepPlan`` naming the model axis
+(``cfg.sharded_impl``):
+
+  * ``"two_phase"`` (default): the compiled two-phase launch structure
+    (``kernels/sharded_sweep.py``) — a shard-local probe launch emits the
+    (D, L) normaliser partials, ONE psum reduces them, a shard-local
+    Gauss-Seidel fold launch carries θ̂/φ̂_shard/φ̂(k) in VMEM across the
+    whole column grid (exactly like the single-host fused sweeps), and an
+    exact renormalisation psum closes the sweep.  Two (D, L) reductions
+    per sweep; on TPU the two launches are compiled Pallas kernels — no
+    portable fallback on the fused path.
+  * ``"hooks"``: the legacy per-column psum hooks on the portable scan —
+    L tiny reductions per sweep; kept as the reference semantics.
+
+The stop rule needs no standalone perplexity pass in either mode: check
+sweeps emit the eq. 3 partials from inside the sweep (pre-log, psum'd over
+``model`` by the dispatch) and only the data-axis reduction happens here.
+
 Collective volume drops from O(sweeps · blocks · |φ̂|) to
-O(sweeps · |φ̂_shard_delta| + sweeps · blocks · D·L) — ~40× on stream_1k.
+O(sweeps · |φ̂_shard_delta| + sweeps · D·L) — ~40× on stream_1k.
 """
 from __future__ import annotations
 
@@ -36,21 +55,27 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import em
+from repro.core import em, foem
 from repro.core import scheduling as sched_lib
 from repro.kernels import ops as kops
+from repro.parallel import compat
 from repro.core.types import (
     GlobalStats,
     LDAConfig,
     LocalState,
     MinibatchData,
     SchedulerState,
+    SweepPlan,
     uniform_responsibilities,
 )
 
 
 def _local_training_ppl(batch, theta, phi, ptot, cfg, tp_axis, dp_axes):
-    """Global eq.-21-style training perplexity from shard-local pieces."""
+    """Global eq.-21-style training perplexity from shard-local pieces.
+
+    The standalone (D, L, K/mp) pass — the stop rule no longer uses it
+    (check sweeps emit the loglik from inside the sweep); kept as the
+    reference value for tests and diagnostics."""
     theta_n_num = theta + cfg.alpha_m1
     theta_den = lax.psum(theta.sum(-1, keepdims=True), tp_axis) + (
         cfg.K * cfg.alpha_m1
@@ -68,39 +93,16 @@ def _local_training_ppl(batch, theta, phi, ptot, cfg, tp_axis, dp_axes):
     return jnp.exp(-ll / jnp.maximum(ntok, 1.0))
 
 
-def _scheduled_sweep_local(batch, local, phi, ptot, scheduler, cfg,
-                           tp_axis: str):
-    """One scheduled sweep on the shard's topic slice (all indices local).
-
-    Routed through the unified ``kernels.ops.sweep`` dispatch (the same
-    delta-compacted column-serial path as the single-host FOEM), with the
-    eq. 38 mass/denominator reductions hooked to psum over the model axis —
-    the union of the shard-local top-(A/mp) sets is the size-A active set,
-    and every gather/scatter index stays shard-local."""
-    A_loc = max(1, cfg.active_topics // cfg.topk_shards)
-
-    word_topics = sched_lib.select_active_topics(scheduler, A_loc)  # local ids
-    token_active = batch.counts > 0
-
-    r = kops.sweep(
-        batch.word_ids, batch.counts, local.mu, local.theta_dk, phi, ptot,
-        alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
-        wb=cfg.W * cfg.beta_m1,
-        word_topics=word_topics, token_active=token_active,
-        unroll=cfg.sweep_unroll, use_pallas=False,
-        renorm_psum=lambda x: lax.psum(x, tp_axis),
-    )
-    scheduler = sched_lib.scheduler_update_from_sweep(
-        scheduler, r.residual, batch.word_ids, word_topics
-    )
-    return LocalState(mu=r.mu, theta_dk=r.theta), r.phi_wk, r.phi_k, scheduler
-
-
 def _foem_local(key, batch: MinibatchData, phi_in, ptot_in, cfg: LDAConfig,
-                tp_axis: str, dp_axes):
+                tp_axis: str, dp_axes, impl: str):
     """Per-shard FOEM inner loop; returns the shard's updated φ̂ slice."""
     D, L = batch.word_ids.shape
     K_loc = phi_in.shape[1]
+    plan = SweepPlan(
+        axis_name=tp_axis,
+        two_phase=(cfg.sharded_impl == "two_phase"),
+        impl=impl,
+    )
 
     # fold a per-shard slice of the (uniform) init responsibilities
     key = jax.random.fold_in(key, lax.axis_index(tp_axis))
@@ -114,62 +116,79 @@ def _foem_local(key, batch: MinibatchData, phi_in, ptot_in, cfg: LDAConfig,
     ptot = ptot_in + lax.psum(d_k, dp_axes)
     local = LocalState(mu=mu0, theta_dk=theta0)
 
-    # ---- warm-up full sweeps: the unified column-serial Gauss-Seidel
-    # dispatch with the E-step normaliser psum'd over the topic shards;
-    # folds stay shard-local per column, and each sweep's data-shard Δφ̂ is
-    # folded once at sweep cadence (bounded staleness, as in the inner
-    # loop's dp_fold="sweep").  The last sweep's emitted residuals seed the
-    # scheduler — no re-measurement pass. ----
-    residual = None
-    for _ in range(max(1, cfg.warmup_sweeps)):
+    ntok = jnp.maximum(lax.psum(batch.counts.sum(), dp_axes), 1.0)
+
+    def dp_fold(phi, ptot, phi_before):
+        """Apply every data shard's Δφ̂ (own included) via one psum —
+        equivalent to keeping the locally folded φ̂ and adding only the
+        peers' deltas (bounded staleness across the data axis)."""
+        d = lax.psum(phi - phi_before, dp_axes) - (phi - phi_before)
+        phi = phi + d
+        return phi, ptot + d.sum(0)
+
+    # ---- warm-up full sweeps: the unified dispatch under the sharded
+    # plan (dense two-phase or hook path); folds stay shard-local per
+    # column, each sweep's data-shard Δφ̂ is folded at sweep cadence, the
+    # last sweep's emitted residuals seed the scheduler (no re-measurement
+    # pass) and its in-sweep loglik seeds the stop rule's baseline. ----
+    residual, ll = None, None
+    warm = max(1, cfg.warmup_sweeps)
+    for i in range(warm):
         phi_before = phi
-        r = kops.sweep(
-            batch.word_ids, batch.counts, local.mu, local.theta_dk,
-            phi, ptot,
-            alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
-            wb=cfg.W * cfg.beta_m1,
-            unroll=cfg.sweep_unroll, use_pallas=False,
-            norm_psum=lambda x: lax.psum(x, tp_axis),
+        r = em.gs_sweep_with_residuals(
+            batch, local, phi, ptot, cfg,
+            compute_loglik=(i == warm - 1), plan=plan,
         )
         local = LocalState(mu=r.mu, theta_dk=r.theta)
-        residual = r.residual
-        # rebase on the pre-sweep φ̂ and apply EVERY data shard's delta
-        # (own included) via one psum — equivalent to keeping the locally
-        # folded r.phi_wk and adding only the peers' deltas
-        d = lax.psum(r.phi_wk - phi_before, dp_axes)
-        phi = phi_before + d
-        ptot = ptot + d.sum(0)
+        residual, ll = r.residual, r.loglik
+        phi, ptot = dp_fold(r.phi_wk, r.phi_k, phi_before)
     scheduler = sched_lib.residuals_from_sweep(
         residual, batch.word_ids, phi.shape[0]
     )
-    warm = max(1, cfg.warmup_sweeps)
-
-    ppl0 = _local_training_ppl(batch, local.theta_dk, phi, ptot, cfg,
-                               tp_axis, dp_axes)
+    ppl0 = jnp.exp(-lax.psum(ll, dp_axes) / ntok)
 
     def cond(state):
         t, done, *_ = state
         return (t < cfg.max_sweeps) & jnp.logical_not(done)
 
+    def sweep_once(local, phi, ptot, scheduler, compute_loglik):
+        """One scheduled sweep on the shard's topic slice — the same
+        ``foem.scheduled_iem_sweep`` the single-host inner loop uses, under
+        the sharded plan (shard-local top-(A/mp) selection, cross-shard
+        normalisers resolved by the dispatch)."""
+        return foem.scheduled_iem_sweep(
+            batch, local, phi, ptot, scheduler, cfg,
+            compute_loglik=compute_loglik, plan=plan,
+        )
+
     def step(state):
         t, done, local, phi, ptot, scheduler, last_ppl = state
         phi_before = phi
-        local, phi, ptot, scheduler = _scheduled_sweep_local(
-            batch, local, phi, ptot, scheduler, cfg, tp_axis
+        check = (t + 1) % cfg.ppl_check_every == 0
+
+        # the in-sweep stop rule: check sweeps take the loglik-emitting
+        # variant (one extra (D, L) psum inside the dispatch), others skip it
+        def checked(local, phi, ptot, scheduler):
+            local, phi, ptot, scheduler, ll = sweep_once(
+                local, phi, ptot, scheduler, True
+            )
+            return local, phi, ptot, scheduler, jnp.exp(
+                -lax.psum(ll, dp_axes) / ntok
+            )
+
+        def unchecked(local, phi, ptot, scheduler):
+            local, phi, ptot, scheduler, _ = sweep_once(
+                local, phi, ptot, scheduler, False
+            )
+            return local, phi, ptot, scheduler, last_ppl
+
+        local, phi, ptot, scheduler, ppl = lax.cond(
+            check, checked, unchecked, local, phi, ptot, scheduler
         )
         if cfg.dp_fold == "sweep":
             # per-sweep data-axis fold of the φ̂ delta (bounded staleness:
             # other data shards' deltas arrive at sweep, not block, cadence)
-            d = lax.psum(phi - phi_before, dp_axes) - (phi - phi_before)
-            phi = phi + d
-            ptot = ptot + d.sum(0)
-        check = (t + 1) % cfg.ppl_check_every == 0
-        ppl = lax.cond(
-            check,
-            lambda: _local_training_ppl(batch, local.theta_dk, phi, ptot,
-                                        cfg, tp_axis, dp_axes),
-            lambda: last_ppl,
-        )
+            phi, ptot = dp_fold(phi, ptot, phi_before)
         done = check & (jnp.abs(last_ppl - ppl) < cfg.ppl_rel_tol
                         * jnp.abs(ppl))
         return (t + 1, done, local, phi, ptot, scheduler, ppl)
@@ -181,9 +200,7 @@ def _foem_local(key, batch: MinibatchData, phi_in, ptot_in, cfg: LDAConfig,
     )
     if cfg.dp_fold == "minibatch":
         # single end-of-minibatch fold of every data shard's Δφ̂
-        d = lax.psum(phi - phi_warm, dp_axes) - (phi - phi_warm)
-        phi = phi + d
-        ptot = ptot + d.sum(0)
+        phi, ptot = dp_fold(phi, ptot, phi_warm)
     return phi, ptot, ppl
 
 
@@ -196,10 +213,14 @@ def foem_step_sharded(
     *,
     dp_axis: str = "data",
     tp_axis: str = "model",
+    impl: str = "auto",
 ):
     """shard_map FOEM step: φ̂ K-sharded over ``model``, docs over ``data``.
 
     ``cfg.topk_shards`` must equal the model-axis size (local top-k).
+    ``impl`` forwards to the ``SweepPlan`` ("auto": compiled two-phase
+    Pallas launches on TPU, the portable two-phase mirror elsewhere;
+    "interpret" runs the kernel bodies on CPU — tests).
     Returns (new_stats, final train ppl).
     """
     mp = mesh.shape[tp_axis]
@@ -211,11 +232,11 @@ def foem_step_sharded(
     def wrapped(key, wid, cnt, phi_wk, phi_k, step):
         b = MinibatchData(word_ids=wid, counts=cnt)
         phi, ptot, ppl = _foem_local(
-            key, b, phi_wk, phi_k, cfg, tp_axis, dp_all
+            key, b, phi_wk, phi_k, cfg, tp_axis, dp_all, impl
         )
         return phi, ptot, step + 1, ppl
 
-    phi_wk, phi_k, step, ppl = jax.shard_map(
+    phi_wk, phi_k, step, ppl = compat.shard_map(
         wrapped,
         mesh=mesh,
         in_specs=(
@@ -223,6 +244,6 @@ def foem_step_sharded(
             P(None, tp_axis), P(tp_axis), P(),
         ),
         out_specs=(P(None, tp_axis), P(tp_axis), P(), P()),
-        check_vma=False,
+        check=False,
     )(key, batch.word_ids, batch.counts, stats.phi_wk, stats.phi_k, stats.step)
     return GlobalStats(phi_wk=phi_wk, phi_k=phi_k, step=step), ppl

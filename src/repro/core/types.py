@@ -61,6 +61,12 @@ class LDAConfig:
                                # scheduling.select_active_topics; §Perf lever)
     dp_fold: str = "sweep"     # sharded FOEM: fold Δφ̂ over data per "sweep"
                                # or once per "minibatch" (bounded staleness)
+    # --- topic-sharded sweep engine (foem_sharded) ---
+    # "two_phase": the compiled probe→psum→fold→correct launch structure
+    # (kernels/sharded_sweep.py; one (D, L) reduction pair per sweep).
+    # "hooks": the legacy per-column psum hooks on the portable scan (L
+    # reductions per sweep; kept as the reference semantics).
+    sharded_impl: str = "two_phase"
     # --- stepwise learning-rate (SEM §2.2, eq. 18) ---
     tau0: float = 1.0
     kappa: float = 0.9
@@ -78,6 +84,8 @@ class LDAConfig:
             raise ValueError(f"unknown rho_mode {self.rho_mode!r}")
         if self.sweep_impl not in ("fused", "scan"):
             raise ValueError(f"unknown sweep_impl {self.sweep_impl!r}")
+        if self.sharded_impl not in ("two_phase", "hooks"):
+            raise ValueError(f"unknown sharded_impl {self.sharded_impl!r}")
         if self.sweep_unroll < 1:
             raise ValueError("sweep_unroll must be >= 1")
 
@@ -148,6 +156,46 @@ class SchedulerState(NamedTuple):
     r_w: jax.Array   # (W_s|W,)   residual per vocab word,          eq. 37
 
 
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Execution plan for ``kernels.ops.sweep`` — where and how a sweep runs.
+
+    The plan is the dispatch-layer contract every sweep caller shares
+    (``em.blocked_iem_sweep``, ``foem`` warm-up/scheduled sweeps,
+    ``foem_sharded``): it names the mesh axis the sweep's cross-shard
+    reductions run over and picks the launch structure, so algorithm code
+    never talks to kernels or collectives directly.
+
+    * ``axis_name is None`` (default) — single-shard execution: the fused
+      single-launch kernel on TPU when the working set fits VMEM, the
+      delta-compacted portable scan elsewhere.  Exactly ``ops.sweep``'s
+      pre-plan behaviour.
+    * ``axis_name = <model axis>`` — the sweep runs *inside* ``shard_map``
+      with the topic axis sharded over ``axis_name``; ``ops.sweep`` issues
+      the cross-shard normaliser reductions itself (``lax.psum`` over the
+      axis).  With ``two_phase=True`` it uses the probe → reduce → fold →
+      correct launch structure (``kernels/sharded_sweep.py``: two
+      shard-local launches and two (D, L) psums per sweep); with
+      ``two_phase=False`` it falls back to the legacy per-column psum
+      hooks on the portable scan (L psums per sweep — the reference
+      semantics, also what the ``norm_psum``/``renorm_psum`` kwargs
+      expose directly).
+
+    ``impl`` overrides backend selection uniformly across all paths:
+    ``"auto"`` (TPU kernel / portable elsewhere), ``"pallas"`` (force the
+    compiled kernel), ``"interpret"`` (kernel bodies on CPU — tests),
+    ``"portable"`` (pure-jnp reference, never a kernel).
+    """
+
+    axis_name: Optional[str] = None
+    two_phase: bool = True
+    impl: str = "auto"          # auto | pallas | interpret | portable
+
+    def __post_init__(self):
+        if self.impl not in ("auto", "pallas", "interpret", "portable"):
+            raise ValueError(f"unknown SweepPlan.impl {self.impl!r}")
+
+
 class SweepResult(NamedTuple):
     """Everything one column-serial Gauss-Seidel sweep produces.
 
@@ -158,7 +206,15 @@ class SweepResult(NamedTuple):
     the per-token counts·|Δμ| (eq. 36) measured inside the sweep, full-K
     with zeros on untouched topics; ``loglik`` is the MAP data
     log-likelihood of the post-sweep statistics (the eq. 3 data term the
-    training-perplexity stop rule needs), or None when not requested."""
+    training-perplexity stop rule needs), or None when not requested.
+
+    Under a sharded ``SweepPlan`` (``axis_name`` set, inside ``shard_map``)
+    every array field is the calling shard's *local* slice — topic lanes
+    K/mp wide — with the cross-shard normalisation already resolved:
+    ``mu`` rows sum to one over the GLOBAL topic axis (the phase D exact
+    renorm), the stats are the exact fold of that ``mu``, and ``loglik``
+    is already psum'd over the model axis (it still needs the caller's
+    data-axis reduction for a global stop rule)."""
 
     mu: jax.Array                  # (D_s, L, K) updated responsibilities
     theta: jax.Array               # (D_s, K)    updated θ̂

@@ -2,6 +2,9 @@
 
 * ``foem_estep``      — fused dense E-step tile (the paper's hot loop)
 * ``topk_estep``      — dynamic-scheduling sparse E-step (eq. 38)
+* ``gs_sweep``        — fused dense column-serial Gauss-Seidel sweep
+* ``scheduled_sweep`` — fused §3.1 scheduled sparse sweep
+* ``sharded_sweep``   — two-phase (probe/fold) topic-sharded sweep pair
 * ``flash_attention`` — blockwise online-softmax attention (GQA + SWA) for
                         the assigned LM architectures
 

@@ -21,12 +21,18 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from repro.core.types import SweepResult
+from repro.core.types import SweepPlan, SweepResult
 from repro.kernels import ref
 from repro.kernels.foem_estep import fused_estep_pallas
 from repro.kernels.gs_sweep import fits_vmem, gs_sweep_pallas
 from repro.kernels.scheduled_sweep import sched_fits_vmem, scheduled_sweep_pallas
+from repro.kernels.sharded_sweep import (
+    sharded_fits_vmem,
+    sharded_fold_pallas,
+    sharded_probe_pallas,
+)
 from repro.kernels.topk_estep import topk_estep_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 
@@ -256,6 +262,223 @@ def _sched_sweep_portable(
     )
 
 
+# ---------------------------------------------------------------------------
+# Two-phase sharded sweep (probe → reduce → fold → correct)
+# ---------------------------------------------------------------------------
+
+def _word_lane_masks(phi_wk, word_topics):
+    """(W_s, A) active-topic ids → (W_s, K) {0,1} lane masks (one build per
+    sweep; per-token masks are row gathers of this)."""
+    return jnp.put_along_axis(
+        jnp.zeros_like(phi_wk), word_topics, 1.0, axis=-1, inplace=False
+    )
+
+
+def _probe_portable(
+    word_ids, counts, mu, theta, phi_wk, phi_k, word_masks, token_active,
+    *, alpha_m1, beta_m1, wb,
+):
+    """Phase A, pure-jnp: partial normalisers against the sweep-start stats.
+
+    Jacobi — no fold, so the whole (D, L) batch vectorizes in one pass.
+    Mirrors ``sharded_sweep._make_probe_kernel`` term for term.
+    """
+    rows = jnp.take(phi_wk, word_ids, axis=0)              # (D, L, K)
+    if word_masks is not None:
+        mask = jnp.take(word_masks, word_ids, axis=0) * (
+            token_active.astype(mu.dtype)[..., None]
+        )
+        ex = counts[..., None] * mu * mask
+    else:
+        mask = None
+        ex = counts[..., None] * mu
+    th = jnp.maximum(theta[:, None, :] - ex, 0.0)
+    ph = jnp.maximum(rows - ex, 0.0)
+    pt = phi_k[None, None, :] - ex
+    num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+    if mask is not None:
+        num = num * mask
+        return num.sum(-1), (mu * mask).sum(-1)
+    return num.sum(-1), None
+
+
+def _fold_portable(
+    word_ids, counts, mu, theta, phi_wk, phi_k, remainder, prev_mass,
+    word_masks, token_active, *, alpha_m1, beta_m1, wb, unroll,
+):
+    """Phase C, pure-jnp: the column-serial GS fold consuming the reduced
+    normalisers — the delta-compacted scan with the shard's own numerator
+    sum live and the cross-shard remainder injected per column.  Mirrors
+    ``sharded_sweep._make_fold_kernel`` term for term.
+    """
+    scheduled = word_masks is not None
+    L = word_ids.shape[1]
+
+    def col(carry, xs):
+        theta, phi, ptot = carry
+        if scheduled:
+            wid, cnt, mu_old, rem, pm, act = xs
+            mask = jnp.take(word_masks, wid, axis=0) * act[:, None]
+            ex = cnt[:, None] * mu_old * mask
+        else:
+            wid, cnt, mu_old, rem = xs
+            ex = cnt[:, None] * mu_old
+        rows = jnp.take(phi, wid, axis=0)           # gather D rows only
+        th = jnp.maximum(theta - ex, 0.0)
+        ph = jnp.maximum(rows - ex, 0.0)
+        pt = ptot[None, :] - ex
+        num = (th + alpha_m1) * (ph + beta_m1) / (pt + wb)
+        if scheduled:
+            num = num * mask
+        denom = jnp.maximum(
+            rem[:, None] + num.sum(-1, keepdims=True), 1e-30
+        )
+        if scheduled:
+            mu_new = mask * (num / denom * pm[:, None]) + (1.0 - mask) * mu_old
+            delta = cnt[:, None] * (mu_new - mu_old)
+            res = jnp.abs(delta)
+            live = (mu_new * mask).sum(-1)
+        else:
+            mu_new = num / denom
+            delta = cnt[:, None] * mu_new - ex
+            res = cnt[:, None] * jnp.abs(mu_new - mu_old)
+            live = mu_new.sum(-1)
+        carry = (
+            theta + delta,
+            phi.at[wid].add(delta),                 # scatter D rows only
+            ptot + delta.sum(0),
+        )
+        return carry, (mu_new, res, live)
+
+    xs = [word_ids.T, counts.T, mu.transpose(1, 0, 2), remainder.T]
+    if scheduled:
+        xs += [prev_mass.T, token_active.T.astype(mu.dtype)]
+    (theta, phi, ptot), (mu_cols, res_cols, live_cols) = jax.lax.scan(
+        col, (theta, phi_wk, phi_k), tuple(xs),
+        unroll=max(1, min(unroll, L)),
+    )
+    return (
+        mu_cols.transpose(1, 0, 2), res_cols.transpose(1, 0, 2),
+        theta, phi, ptot, live_cols.T,
+    )
+
+
+def _loglik_partials(word_ids, theta, phi_wk, phi_k, *, alpha_m1, beta_m1,
+                     wb):
+    """Per-token PRE-LOG eq. 3 partials over the shard's topic lanes:
+    u = Σ_k (θ̂+α)(φ̂_w+β)/(φ̂(k)+wb) — (D, L).  After a model-axis psum
+    and division by the global θ̂ normaliser this is the token likelihood
+    (``_map_loglik`` factorises exactly this way)."""
+    rows = jnp.take(phi_wk, word_ids, axis=0)              # (D, L, K)
+    ph_n = (rows + beta_m1) / jnp.maximum(phi_k + wb, 1e-30)[None, None, :]
+    return ((theta[:, None, :] + alpha_m1) * ph_n).sum(-1)
+
+
+def _assemble_sharded_loglik(counts, u_glob, th_den):
+    """Finish the stop-rule value from psum'd pieces: log AFTER the
+    cross-shard reduction, counts-weighted sum over the shard's tokens."""
+    lik = jnp.maximum(u_glob / th_den[:, None], 1e-30)
+    return (counts * jnp.log(lik)).sum()
+
+
+def _sweep_two_phase(
+    word_ids, counts, mu, theta, phi_wk, phi_k, word_topics, token_active,
+    *, alpha_m1, beta_m1, wb, axis_name, compute_loglik, how, unroll,
+) -> SweepResult:
+    """The two-phase sharded sweep engine (see ``kernels/sharded_sweep.py``).
+
+      A. shard-local probe launch → partial normalisers (D, L) per shard
+      B. ONE ``lax.psum`` of the stacked partials over ``axis_name``
+      C. shard-local Gauss-Seidel fold launch consuming the reduced
+         normalisers (own contribution live, peers' one-phase stale),
+         θ̂/φ̂/φ̂(k) VMEM-carried across the column grid
+      D. one more (D, L) psum of the live masses + a vectorized exact
+         renormalisation folded into the stats — global normalisation and
+         total-mass conservation hold to fp round-off
+
+    ``how`` ∈ {"pallas", "interpret", "portable"} picks compiled kernels,
+    interpret-mode kernel bodies (CPU tests) or the pure-jnp mirror; all
+    three share this orchestration, so kernel-vs-portable parity is a
+    same-collective comparison.
+    """
+    scheduled = word_topics is not None
+    kernels = how in ("pallas", "interpret")
+    interpret = how == "interpret"
+    K = mu.shape[-1]
+    D, L = word_ids.shape
+    psum = functools.partial(lax.psum, axis_name=axis_name)
+    word_masks = _word_lane_masks(phi_wk, word_topics) if scheduled else None
+
+    # ---- phase A: probe (Jacobi, sweep-start stats) ----
+    if kernels:
+        s, pm = sharded_probe_pallas(
+            word_ids, counts, mu, theta, phi_wk, phi_k,
+            word_topics, token_active,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, interpret=interpret,
+        )
+    else:
+        s, pm = _probe_portable(
+            word_ids, counts, mu, theta, phi_wk, phi_k, word_masks,
+            token_active, alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+        )
+
+    # ---- phase B: one fused reduction of the K-normaliser partials ----
+    if scheduled:
+        s_glob, pm_glob = psum((s, pm))
+    else:
+        s_glob, pm_glob = psum(s), None
+    remainder = s_glob - s          # peers' share; own share stays live
+
+    # ---- phase C: shard-local Gauss-Seidel fold ----
+    if kernels:
+        mu_new, res, theta_o, phi_o, ptot_o, live, u = sharded_fold_pallas(
+            word_ids, counts, mu, theta, phi_wk, phi_k, remainder, pm_glob,
+            word_topics, token_active,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+            emit_loglik=compute_loglik, interpret=interpret,
+        )
+    else:
+        mu_new, res, theta_o, phi_o, ptot_o, live = _fold_portable(
+            word_ids, counts, mu, theta, phi_wk, phi_k, remainder, pm_glob,
+            word_masks, token_active,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb, unroll=unroll,
+        )
+        u = None
+        if compute_loglik:
+            u = _loglik_partials(
+                word_ids, theta_o, phi_o, ptot_o,
+                alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+            )
+
+    # ---- phase D: exact renorm + stop-rule assembly (one psum) ----
+    if compute_loglik:
+        th_den = theta_o.sum(-1) + K * alpha_m1    # psum → global Σθ̂ + Kα
+        live_glob, u_glob, th_den = psum((live, u, th_den))
+        ll = _assemble_sharded_loglik(counts, u_glob, th_den)
+    else:
+        live_glob = psum(live)
+        ll = None
+
+    if scheduled:
+        # rescale the active-lane mass to eq. 38's exact global target
+        scale = pm_glob / jnp.maximum(live_glob, 1e-30)    # (D, L)
+        mask = jnp.take(word_masks, word_ids, axis=0) * (
+            token_active.astype(mu.dtype)[..., None]
+        )
+        mu_corr = mu_new + mask * mu_new * (scale[..., None] - 1.0)
+    else:
+        scale = 1.0 / jnp.maximum(live_glob, 1e-30)
+        mu_corr = mu_new * scale[..., None]
+    delta = counts[..., None] * (mu_corr - mu_new)
+    theta_o = theta_o + delta.sum(1)
+    d_flat = delta.reshape(D * L, K)
+    phi_o = phi_o + jax.ops.segment_sum(
+        d_flat, word_ids.reshape(D * L), num_segments=phi_wk.shape[0]
+    )
+    ptot_o = ptot_o + d_flat.sum(0)
+    return SweepResult(mu_corr, theta_o, phi_o, ptot_o, res, ll)
+
+
 def sweep(
     word_ids: jax.Array,       # (D, L) int32 — rows into phi_wk
     counts: jax.Array,         # (D, L)
@@ -275,29 +498,111 @@ def sweep(
     interpret: bool = False,
     norm_psum: Optional[Callable] = None,      # dense E-step normaliser hook
     renorm_psum: Optional[Callable] = None,    # eq. 38 mass hook (scheduled)
+    plan: Optional[SweepPlan] = None,          # execution plan (mesh axis etc.)
 ) -> SweepResult:
     """One column-serial Gauss-Seidel sweep — THE sweep entry point.
+
+    Every sweep in the library (``em.blocked_iem_sweep``, ``foem`` warm-up
+    and scheduled sweeps, ``foem_sharded``'s shard-local sweeps, the
+    streaming trainer through ``foem_minibatch``) routes through this
+    function; it owns kernel dispatch AND — under a sharded plan — the
+    cross-shard collectives, so algorithm code never touches either.
 
     * ``word_topics is None`` → dense full-K IEM sweep (paper Fig. 2 at
       B = L); otherwise the §3.1 scheduled sparse sweep on the per-word
       active sets with eq. 38 renormalisation and the ``token_active``
-      λ_w word mask.
+      λ_w word mask (default ``counts > 0``).
     * ``compute_loglik`` additionally returns the post-sweep eq. 3 data
       log-likelihood (the training-perplexity stop rule): emitted from
-      in-kernel per-column partials on the kernel path, one jnp pass on
-      the portable path.
+      in-kernel per-column partials on the kernel paths, one jnp pass on
+      the portable paths.  Under a sharded plan the emitted partials are
+      pre-log per-token values and ``sweep`` finishes them with one psum
+      (log strictly after the cross-shard reduction).
+    * ``plan`` (``core.types.SweepPlan``) selects the execution plan.
+      With ``plan.axis_name`` set the call must be inside ``shard_map``
+      with the topic axis sharded over that mesh axis; ``sweep`` then runs
+      the two-phase engine (probe launch → one psum of the (D, L)
+      normaliser partials → shard-local VMEM-carried fold launch → exact
+      renorm psum; ``kernels/sharded_sweep.py``) or, with
+      ``plan.two_phase=False``, the legacy per-column psum hooks on the
+      portable scan.  Without a plan (or ``axis_name=None``) the plan's
+      ``impl`` maps onto ``use_pallas``/``interpret`` below.
     * Dispatch: the single-launch Pallas kernel on TPU whenever the
       carried (W_s + D, K) working set fits VMEM; otherwise the
       delta-compacted portable scan (whose dense E-step still routes
       through the fused kernel on TPU).  ``interpret=True`` forces the
       kernel body on CPU (tests); ``use_pallas=False`` forces the pure-jnp
-      oracle.  The psum hooks (shard_map) imply the portable path.
+      oracle.
+    * ``norm_psum`` / ``renorm_psum`` are the raw reduction hooks the
+      sharded plan's legacy mode is built on, kept public for tests and
+      custom meshes: ``norm_psum`` reduces the dense E-step normaliser
+      (eq. 11/13 denominator), ``renorm_psum`` the scheduled sweep's
+      eq. 38 mass/denominator pair, each a callable mapping a shard-local
+      ``(D, 1)`` column to its cross-shard sum.  Hooks imply the portable
+      path — a collective cannot cross a Pallas kernel boundary — and are
+      mutually exclusive with a sharded ``plan``.
     """
     D, L = word_ids.shape
     K = mu.shape[-1]
     scheduled = word_topics is not None
     if scheduled and token_active is None:
         token_active = counts > 0
+
+    if plan is not None and plan.axis_name is not None:
+        if norm_psum is not None or renorm_psum is not None:
+            raise ValueError(
+                "pass EITHER a sharded SweepPlan OR raw psum hooks, not both"
+            )
+        how = plan.impl
+        if how == "auto":
+            # hooks mode is portable-only, so auto resolves to a kernel
+            # path only for the two-phase engine
+            fits = sharded_fits_vmem(phi_wk.shape[0], D, K, scheduled)
+            how = "pallas" if (
+                plan.two_phase and on_tpu() and fits
+            ) else "portable"
+        if plan.two_phase:
+            return _sweep_two_phase(
+                word_ids, counts, mu, theta, phi_wk, phi_k,
+                word_topics, token_active,
+                alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+                axis_name=plan.axis_name, compute_loglik=compute_loglik,
+                how=how, unroll=unroll,
+            )
+        if how in ("pallas", "interpret"):
+            raise ValueError(
+                "two_phase=False (per-column psum hooks) requires the "
+                "portable path; a collective cannot cross a kernel boundary"
+            )
+        hook = lambda x: lax.psum(x, plan.axis_name)
+        r = sweep(
+            word_ids, counts, mu, theta, phi_wk, phi_k,
+            alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+            word_topics=word_topics, token_active=token_active,
+            unroll=unroll, use_pallas=False,
+            norm_psum=None if scheduled else hook,
+            renorm_psum=hook if scheduled else None,
+        )
+        if compute_loglik:
+            u = _loglik_partials(
+                word_ids, r.theta, r.phi_wk, r.phi_k,
+                alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+            )
+            u_glob, th_den = lax.psum(
+                (u, r.theta.sum(-1) + K * alpha_m1), plan.axis_name
+            )
+            r = r._replace(
+                loglik=_assemble_sharded_loglik(counts, u_glob, th_den)
+            )
+        return r
+    if plan is not None:
+        if plan.impl == "pallas":
+            use_pallas = True
+        elif plan.impl == "interpret":
+            interpret = True
+        elif plan.impl == "portable":
+            use_pallas = False
+
     hooked = norm_psum is not None or renorm_psum is not None
 
     auto = use_pallas is None

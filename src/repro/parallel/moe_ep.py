@@ -23,6 +23,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.layers import mlp_apply
+from repro.parallel import compat
 
 
 def _ep_local(
@@ -140,10 +141,10 @@ def moe_apply_ep(
         _ep_local, k=experts_per_token, num_experts=E, ep_size=ep_size,
         capacity=capacity, axis_name=axis_name,
     )
-    return jax.shard_map(
+    return compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(pspec, P(dp_spec, axis_name, None)),
         out_specs=P(dp_spec, axis_name, None),
-        check_vma=False,
+        check=False,
     )(p, x)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel import compat
+
 
 def pipeline_forward(
     stage_fn: Callable[[Any, jax.Array], jax.Array],
@@ -43,10 +45,10 @@ def pipeline_forward(
 
     mb_shape = x_microbatches.shape[1:]
     # pvary: register buffers are device-varying over the stage axis
-    buf = jax.lax.pvary(
+    buf = compat.pvary(
         jnp.zeros(mb_shape, x_microbatches.dtype), axis_name
     )
-    outs = jax.lax.pvary(
+    outs = compat.pvary(
         jnp.zeros((M,) + mb_shape, x_microbatches.dtype), axis_name
     )
 
@@ -85,7 +87,7 @@ def make_pipelined_apply(
     """Wrap a per-stage block fn into a full-model pipelined forward."""
 
     @functools.partial(
-        jax.shard_map,
+        compat.shard_map,
         mesh=mesh,
         in_specs=(P(axis_name), P(None)),   # params stage-sharded, x replicated
         out_specs=P(None),

@@ -17,6 +17,7 @@ def _run(body: str) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.parallel.compat import make_mesh, shard_map
         """
     ) + textwrap.dedent(body)
     r = subprocess.run(
@@ -33,8 +34,7 @@ def test_ep_moe_matches_tp_moe():
     _run("""
     from repro.models import moe as moe_lib
     from repro.parallel.moe_ep import moe_apply_ep
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     D, F, E, k = 16, 32, 8, 2
     p = moe_lib.moe_init(jax.random.PRNGKey(0), D, F, E, 1, 32, jnp.float32)
@@ -54,8 +54,7 @@ def test_ep_moe_matches_tp_moe():
 def test_pipeline_forward_matches_sequential():
     _run("""
     from repro.parallel.pipeline import make_pipelined_apply
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("stage",))
     rng = np.random.default_rng(0)
     S, D = 4, 16                      # 4 stages
     Ws = jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32)) * 0.3
@@ -80,8 +79,7 @@ def test_pipeline_forward_matches_sequential():
 def test_compressed_psum_close_to_exact():
     _run("""
     from repro.parallel.compression import compressed_psum, ef_init
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
 
@@ -89,7 +87,7 @@ def test_compressed_psum_close_to_exact():
         out, _ = compressed_psum(xs, "data", ef_init(xs))
         return out
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+    out = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
                                 out_specs=P("data")))(x)
     exact = np.asarray(x).sum(0)
     got = np.asarray(out)[0]
@@ -104,8 +102,7 @@ def test_collective_helpers_semantics():
     _run("""
     from repro.parallel.collectives import (
         chunked_psum, psum_scatter_then_gather, ring_all_gather)
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8, 16, 32)).astype(np.float32))
 
@@ -117,10 +114,10 @@ def test_collective_helpers_semantics():
         g = ring_all_gather(xs[:1], "data", 8)      # (8, 1, 32), global order
         return a, b, c, g
 
-    a, b, c, g = jax.jit(jax.shard_map(
+    a, b, c, g = jax.jit(shard_map(
         body, mesh=mesh, in_specs=P("data"),
         out_specs=(P(), P(), P(), P()),
-        check_vma=False,
+        check=False,
     ))(x)
     np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5,
                                atol=1e-5)
@@ -138,10 +135,8 @@ def test_elastic_reshard_across_meshes():
     import tempfile
     from repro.checkpoint import save_checkpoint, restore_checkpoint
     from repro.checkpoint.elastic import reshard
-    mesh_a = jax.make_mesh((8, 1), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = make_mesh((8, 1), ("data", "model"))
+    mesh_b = make_mesh((2, 4), ("data", "model"))
     tree = {"w": jnp.arange(64.0).reshape(8, 8),
             "b": jnp.arange(8.0)}
     spec = {"w": P("data", "model"), "b": P(None)}
@@ -166,8 +161,7 @@ def test_foem_sharded_stream_quality_and_mass():
     from repro.core.foem_sharded import foem_step_sharded
     from repro.data import synthetic_lda_corpus
     from repro.sparse import MinibatchStream
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     corpus, _ = synthetic_lda_corpus(128, 300, 8, mean_doc_len=50, seed=3)
     base = LDAConfig(num_topics=16, vocab_size=300, max_sweeps=20,
                      iem_blocks=2, active_topics=8, topk_shards=4,
@@ -208,8 +202,7 @@ def test_lda_pjit_vocab_sharded_step():
     _run("""
     from repro.core import GlobalStats, LDAConfig, MinibatchData, foem
     from repro.parallel.sharding import lda_pspecs
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = LDAConfig(num_topics=8, vocab_size=64, max_sweeps=6,
                     iem_blocks=2, active_topics=4)
     rng = np.random.default_rng(0)

@@ -2,18 +2,19 @@
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LM_SHAPES
 from repro.configs.registry import ARCHS, get_shape
 from repro.models import build
 from repro.parallel import sharding as rules
+from repro.parallel.compat import abstract_mesh
 
 
 def _mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("name", sorted(ARCHS))
