@@ -1,0 +1,189 @@
+"""Serving benchmark — the fused frozen-φ inference engine vs the legacy
+dense fixed-point path.
+
+Measures, at the reference cell D=256, L=64, K=128, W_s=8192 on this
+backend, one held-out request batch (fit θ̂ on the 80% split + eq. 21
+held-out perplexity on the 20% split):
+
+  * ``before``     — the pre-kernel path: materialise the dense (D, L, K)
+    gathered φ rows, scan a FIXED 50 Jacobi sweeps, then run a second
+    standalone (D, L, K) gather+einsum pass for eq. 21;
+  * ``fixed``      — ``ops.infer`` with ``rel_tol=0`` (same 50 sweeps, but
+    the eq. 21 partials come from inside the launch — isolates the
+    no-standalone-pass saving);
+  * ``converged``  — ``ops.infer`` with the §2.4 relative stop rule
+    (``rel_tol=0.005`` checked every 5 sweeps — the training stop rule's
+    tolerance at ``benchmarks.common.lda_config``'s check cadence) — the
+    serving configuration; the pinned headline speedup is
+    before/converged;
+  * ``scheduled``  — ``converged`` plus the top-A-by-φ-mass active-set fit
+    (``serving_active_topics``, A=16).  On the CPU portable path the
+    masked-dense mirror costs MORE per sweep than the dense fit (same
+    trade the scheduled training sweep documents); the variant is pinned
+    for the TPU lane-mask kernel it dispatches to there.
+
+The request batch is drawn from a synthetic LDA corpus and served against
+its (scaled) true topics — a trained-model workload, where the fixed
+point actually converges, rather than noise-vs-noise.  Each variant also
+reports its eq. 21 perplexity so the speedup is readable as iso-quality
+(stopping earlier slightly *lowers* held-out perplexity here — fewer
+sweeps overfit θ̂ to the 80% split less).
+
+Emits machine-readable ``BENCH_serve.json`` so future PRs have a pinned
+baseline.  ``--quick`` shrinks the cell for CI smoke runs.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import em
+from repro.core.perplexity import infer_heldout, split_heldout_counts
+from repro.core.types import LDAConfig, MinibatchData, uniform_responsibilities
+
+
+def _timeit(fn, reps: int) -> float:
+    """Min wall seconds per call (least-noise estimator), compile excluded."""
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times))
+
+
+def _make_request(D, L, K, W, seed=0):
+    """A held-out request batch + a trained-like φ̂ (the corpus's true
+    topics as sufficient statistics)."""
+    from repro.data import synthetic_lda_corpus
+    from repro.sparse.docword import bucketize
+
+    corpus, true_phi = synthetic_lda_corpus(D, W, K, mean_doc_len=80,
+                                            seed=seed)
+    w, c = bucketize(corpus, list(range(D)), bucket_len=L)
+    rng = np.random.default_rng(seed)
+    est_np, ev_np = split_heldout_counts(c, rng)
+    phi_wk = jnp.asarray((true_phi * 1e5).astype(np.float32))  # (W, K)
+    phi_k = phi_wk.sum(0)
+    wid = jnp.asarray(w)
+    return (MinibatchData(wid, jnp.asarray(est_np)),
+            MinibatchData(wid, jnp.asarray(ev_np)), phi_wk, phi_k)
+
+
+def _legacy_before(key, est, ev, phi_norm, cfg, sweeps):
+    """The pre-kernel serving path, verbatim: dense gathered rows, fixed
+    sweep scan, standalone eq. 21 evaluation pass.  Operands arrive as
+    jit arguments (not closures) so XLA cannot constant-fold the gathers
+    out of the measurement — same rule for every variant."""
+    est_rows = em.gather_phi_rows(phi_norm, est.word_ids)
+    mu = uniform_responsibilities(key, est_rows.shape, cfg.dtype)
+    theta = em.fold_theta(mu, est.counts)
+
+    def sweep(theta, _):
+        th = em.normalize_theta(theta, cfg)
+        num = th[:, None, :] * est_rows
+        mu = num / jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
+        return em.fold_theta(mu, est.counts), None
+
+    theta, _ = jax.lax.scan(sweep, theta, None, length=sweeps)
+    theta_n = em.normalize_theta(theta, cfg)
+    ev_rows = em.gather_phi_rows(phi_norm, ev.word_ids)
+    lik = jnp.maximum(jnp.einsum("dlk,dk->dl", ev_rows, theta_n), 1e-30)
+    ll = (ev.counts * jnp.log(lik)).sum()
+    return jnp.exp(-ll / jnp.maximum(ev.counts.sum(), 1.0))
+
+
+def main(rows=None, argv=None):
+    rows = rows if rows is not None else []
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small smoke cell (CI)")
+    ap.add_argument("--out", default=None,
+                    help="output path; quick runs default to a separate "
+                         "file so they can't clobber the pinned baseline")
+    args = ap.parse_args(argv if argv is not None else [])
+
+    if args.quick:
+        D, L, K, W, reps, A, sweeps = 32, 16, 32, 512, 3, 8, 20
+    else:
+        D, L, K, W, reps, A, sweeps = 256, 64, 128, 8192, 9, 16, 50
+    A = min(A, K)
+    if args.out is None:
+        args.out = "BENCH_serve_quick.json" if args.quick else (
+            "BENCH_serve.json")
+
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _make_request(D, L, K, W)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    key = jax.random.PRNGKey(0)
+    cell = f"D{D}_L{L}_K{K}_W{W}"
+
+    before_jit = jax.jit(
+        lambda key, est, ev, phi_norm: _legacy_before(
+            key, est, ev, phi_norm, cfg, sweeps
+        )
+    )
+    before_fn = lambda: before_jit(key, est, ev, phi_norm)
+
+    def infer_fn(rel_tol, active, check_every):
+        @functools.partial(jax.jit, static_argnames=("active", "ce"))
+        def run(key, est, ev, phi_norm, active, ce):
+            r = infer_heldout(
+                key, est, ev, phi_norm, cfg, fit_sweeps=sweeps,
+                rel_tol=rel_tol, check_every=ce, active_topics=active,
+            )
+            return r.theta, r.sweeps, r.perplexity(ev.counts.sum())
+        return lambda: run(key, est, ev, phi_norm, active, check_every)
+
+    variants = {
+        # one chunk of `sweeps`: same fit as `before`, eq. 21 in-launch —
+        # isolates the no-standalone-pass saving
+        "fixed": infer_fn(0.0, 0, sweeps),
+        "converged": infer_fn(0.005, 0, 5),
+        "scheduled": infer_fn(0.005, A, 5),
+    }
+
+    before_s = _timeit(before_fn, reps)
+    ppl_before = float(before_fn())
+    payload = {
+        "cell": {"D": D, "L": L, "K": K, "W_s": W, "A": A,
+                 "fit_sweeps": sweeps, "reps": reps},
+        "backend": jax.default_backend(),
+        "quick": bool(args.quick),
+        "before": {"seconds": before_s, "ppl": ppl_before,
+                   "sweeps": sweeps},
+    }
+    rows.append(csv_row(f"serve_before_{cell}", before_s * 1e6,
+                        "impl=dense50+standalone;speedup=1.00"))
+    report = []
+    for name, fn in variants.items():
+        s = _timeit(fn, reps)
+        _, swp, ppl = fn()
+        speedup = before_s / max(s, 1e-12)
+        payload[name] = {
+            "seconds": s, "ppl": float(ppl), "sweeps": int(swp),
+            "speedup_vs_before": speedup,
+        }
+        rows.append(csv_row(
+            f"serve_{name}_{cell}", s * 1e6,
+            f"impl={name};sweeps={int(swp)};speedup={speedup:.2f}",
+        ))
+        report.append(f"{name} {speedup:.2f}x")
+
+    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out} ({', '.join(report)})", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(argv=sys.argv[1:])

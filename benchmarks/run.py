@@ -14,6 +14,10 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   * sharded  the topic-sharded sweep on a simulated 4-way model axis:
              two-phase engine vs per-column psum hooks, pinned against the
              single-shard fused sweep (bench_sweep --suite sharded)
+  * serve    frozen-φ serving + held-out evaluation (§2.4/eq. 21): the
+             fused convergence-stopped ``ops.infer`` path vs the legacy
+             dense 50-sweep + standalone-pass path
+             (bench_serving → BENCH_serve.json)
 
 ``python -m benchmarks.run [--only fig7,table5,sweep,scheduled,...] [--quick]``
 (``--quick`` currently applies to the sweep suites' smoke cell.)
@@ -31,6 +35,7 @@ from benchmarks import (
     bench_convergence,
     bench_minibatch,
     bench_scheduling,
+    bench_serving,
     bench_streaming,
     bench_sweep,
     bench_topics,
@@ -46,6 +51,7 @@ SUITES = {
     "sweep": bench_sweep.main,
     "scheduled": bench_sweep.main_scheduled,
     "sharded": bench_sweep.main_sharded,
+    "serve": bench_serving.main,
 }
 
 

@@ -2,7 +2,12 @@
 disk-backed φ̂ (run examples/train_foem_stream.py first, or this script
 trains a small model itself when the workdir is empty).
 
-    PYTHONPATH=src python examples/serve_topics.py
+Serving routes through the fused frozen-φ inference dispatch
+(``kernels.ops.infer``): convergence-stopped θ-only fixed point, batched
+and bucketized over the request stream (``TopicServer.infer_stream``).
+
+    PYTHONPATH=src python examples/serve_topics.py           # full demo
+    PYTHONPATH=src python examples/serve_topics.py --quick   # CI smoke
 """
 import os
 import sys
@@ -11,21 +16,27 @@ from repro.launch import serve, train
 
 
 def main():
-    workdir = "/tmp/foem_serve_demo"
+    quick = "--quick" in sys.argv[1:]
+    if quick:
+        workdir = "/tmp/foem_serve_smoke"
+        topics, vocab = 16, 400
+        train_args = ["--docs", "200", "--minibatch", "64", "--steps", "3",
+                      "--active-topics", "4", "--log-every", "2"]
+        serve_args = ["--requests", "64", "--batch", "32",
+                      "--active-topics", "4"]
+    else:
+        workdir = "/tmp/foem_serve_demo"
+        topics, vocab = 100, 5000
+        train_args = ["--docs", "1500", "--minibatch", "256", "--steps",
+                      "10", "--active-topics", "8", "--log-every", "5"]
+        serve_args = ["--requests", "512", "--batch", "64"]
+    common = ["--arch", "foem-lda", "--workdir", workdir,
+              "--topics", str(topics), "--vocab", str(vocab)]
     if not os.path.exists(os.path.join(workdir, "store.json")):
         print("[demo] no trained store found — training a small one first")
-        sys.argv = [
-            "train.py", "--arch", "foem-lda", "--workdir", workdir,
-            "--steps", "10", "--topics", "100", "--vocab", "5000",
-            "--docs", "1500", "--minibatch", "256", "--active-topics", "8",
-            "--log-every", "5",
-        ]
+        sys.argv = ["train.py"] + common + train_args
         train.main()
-    sys.argv = [
-        "serve.py", "--arch", "foem-lda", "--workdir", workdir,
-        "--topics", "100", "--vocab", "5000", "--requests", "512",
-        "--batch", "64",
-    ]
+    sys.argv = ["serve.py"] + common + serve_args
     serve.main()
 
 

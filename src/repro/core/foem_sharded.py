@@ -247,3 +247,85 @@ def foem_step_sharded(
         check=False,
     )(key, batch.word_ids, batch.counts, stats.phi_wk, stats.phi_k, stats.step)
     return GlobalStats(phi_wk=phi_wk, phi_k=phi_k, step=step), ppl
+
+
+def heldout_perplexity_sharded(
+    key: jax.Array,
+    est: MinibatchData,        # 80% split
+    ev: MinibatchData,         # 20% split (same docs / word layout)
+    stats: GlobalStats,
+    cfg: LDAConfig,
+    mesh: Mesh,
+    *,
+    tp_axis: str = "model",
+    fit_sweeps: int = 50,
+    rel_tol: Optional[float] = None,
+    check_every: Optional[int] = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Held-out predictive perplexity (§2.4 / eq. 21) under the sharded plan.
+
+    The evaluation companion of ``foem_step_sharded``: documents shard
+    over the data axes, topics over ``tp_axis``, and the frozen-φ fixed
+    point runs through ``kernels.ops.infer`` with a ``SweepPlan`` naming
+    the model axis — the dispatch owns the cross-shard reductions (the
+    per-token μ normaliser per sweep, and the θ̂ normaliser + pre-log
+    eq. 21 likelihood on the chunk-boundary checks; inference is Jacobi,
+    so no two-phase restructuring is needed and the plan always resolves
+    to the portable path).  Each shard normalises its φ̂ (W, K/mp) slice
+    locally (eq. 10's denominator is per topic lane) and, when
+    ``cfg.active_topics`` is set, restricts the fit to its shard-local
+    top-(A/mp) topics by φ mass — the union is a size-A serving active
+    set, mirroring training's shard-local selection.
+
+    Returns the replicated scalar eq. 21 perplexity over the whole
+    held-out minibatch.  ``rel_tol``/``check_every`` default to the
+    config's stop rule; ``impl`` forwards to the plan (portable paths
+    only — a collective cannot cross a Pallas kernel boundary).
+    """
+    mp = mesh.shape[tp_axis]
+    assert cfg.K % mp == 0, (cfg.K, mp)
+    dp_all = tuple(a for a in mesh.axis_names if a != tp_axis)
+    plan = SweepPlan(axis_name=tp_axis, impl=impl)
+    tol = cfg.ppl_rel_tol if rel_tol is None else rel_tol
+    check = cfg.ppl_check_every if check_every is None else check_every
+
+    def wrapped(key, wid, est_c, ev_c, phi_wk, phi_k):
+        K_loc = phi_wk.shape[1]
+        # eq. 10 on the (W, K/mp) slice: the denominator is per topic lane,
+        # so the shared helper applies shard-locally as-is
+        phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+        # per-shard slice of the random θ̂ init (mirrors _foem_local's μ0:
+        # shard-local draws, globally normalised with one psum)
+        k2 = jax.random.fold_in(key, lax.axis_index(tp_axis))
+        g = jax.random.uniform(
+            k2, wid.shape + (K_loc,), minval=0.5, maxval=1.5
+        )
+        theta0 = em.fold_theta(
+            g / lax.psum(g.sum(-1, keepdims=True), tp_axis), est_c
+        )
+        wt = None
+        if cfg.active_topics:
+            a_loc = max(1, cfg.active_topics // mp)
+            wt = jax.lax.top_k(phi_norm, a_loc)[1].astype(jnp.int32)
+        res = kops.infer(
+            wid, est_c, theta0, phi_norm, alpha_m1=cfg.alpha_m1,
+            ev_counts=ev_c, word_topics=wt, max_sweeps=fit_sweeps,
+            check_every=check, rel_tol=tol, plan=plan,
+        )
+        # ev_loglik is already psum'd over the model axis by the dispatch;
+        # only the data-axis reduction happens here
+        ll = lax.psum(res.ev_loglik, dp_all)
+        ntok = lax.psum(ev_c.sum(), dp_all)
+        return jnp.exp(-ll / jnp.maximum(ntok, 1.0))
+
+    return compat.shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=(
+            P(), P(dp_all, None), P(dp_all, None), P(dp_all, None),
+            P(None, tp_axis), P(tp_axis),
+        ),
+        out_specs=P(),
+        check=False,
+    )(key, est.word_ids, est.counts, ev.counts, stats.phi_wk, stats.phi_k)

@@ -1,22 +1,36 @@
-"""Predictive perplexity — paper §2.4, eq. (21).
+"""Held-out inference & predictive perplexity — paper §2.4, eq. (21).
 
 Protocol (faithful to the paper):
   1. estimate φ̂ on the training stream;
-  2. per held-out document, split word *tokens* 80/20;
-  3. fixing φ̂, fit θ̂ on the 80% part (fixed-φ EM iterations);
-  4. P = exp(− Σ x^{20%} log Σ_k θ_d(k) φ_w(k) / Σ x^{20%}).
+  2. per held-out document, split word *tokens* 80/20 by binomial thinning
+     (``split_heldout_counts``);
+  3. fixing φ̂, fit θ̂ on the 80% part by the frozen-φ fixed-point E-step
+     (eq. 11 with the φ M-step switched off — ``kernels.ops.infer``);
+  4. P = exp(− Σ x^{20%} log Σ_k θ_d(k) φ_w(k) / Σ x^{20%})   (eq. 21).
+
+Steps 3–4 run fused: ``ops.infer`` dispatches the θ-only fixed point
+(``kernels/theta_sweep.py`` on TPU, a jnp mirror elsewhere),
+convergence-stops it on the estimation split's perplexity (the §2.4 stop
+rule applied at test time — no blind 50-sweep budget), and measures the
+eq. 21 log-predictive partials inside the same launch, so held-out
+perplexity costs no standalone (D, L, K) gather+einsum pass.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import em
-from repro.core.types import LDAConfig, MinibatchData, uniform_responsibilities
+from repro.core import scheduling as sched_lib
+from repro.core.types import (
+    InferResult, LDAConfig, MinibatchData, SchedulerState,
+    uniform_responsibilities,
+)
+from repro.kernels import ops as kops
 
 
 def split_heldout_counts(
@@ -25,36 +39,131 @@ def split_heldout_counts(
     """Split integer token counts (D, L) into (estimate, evaluate) parts.
 
     Each of the x_{w,d} tokens lands in the 80% part with prob ``frac``
-    (binomial thinning) — the paper's random token partition.
+    (binomial thinning) — the paper's random token partition (§2.4).  Both
+    parts keep the full (D, L) ``word_ids`` layout, which is what lets
+    ``ops.infer`` score the evaluation split inside the fitting launch.
     """
     est = rng.binomial(counts.astype(np.int64), frac).astype(counts.dtype)
     return est, counts - est
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "fit_sweeps"))
+def serving_active_topics(
+    phi_norm: jax.Array, active_topics: int, topk_shards: int = 0
+) -> jax.Array:
+    """Serving-time (W_s, A) active-topic sets, ranked by φ mass.
+
+    At test time there are no responsibility residuals (eqs. 36/37) to
+    rank by, so the §3.1 active-set machinery is reused with the trained
+    word-topic mass as the priority: per word, the ``active_topics``
+    largest φ_w(k) — the topics that can contribute predictive mass.
+    ``ops.infer`` restricts the θ̂ *fit* to these lanes (the eq. 21
+    evaluation always uses the full support).  ``topk_shards`` selects
+    within contiguous topic groups for the sharded plan, exactly as in
+    training (``scheduling.select_active_topics``).
+    """
+    sched = SchedulerState(r_wk=phi_norm, r_w=phi_norm.sum(-1))
+    return sched_lib.select_active_topics(sched, active_topics, topk_shards)
+
+
+def init_theta(
+    key: jax.Array, batch: MinibatchData, cfg: LDAConfig
+) -> jax.Array:
+    """Random θ̂ init for the frozen-φ fixed point: fold the estimation
+    counts through random-normalised responsibilities (the paper's 'start
+    from random initializations', same init the training inner loop uses).
+    """
+    D, L = batch.word_ids.shape
+    mu0 = uniform_responsibilities(key, (D, L, cfg.K), cfg.dtype)
+    return em.fold_theta(mu0, batch.counts)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "fit_sweeps", "check_every", "active_topics",
+                     "use_pallas", "interpret"),
+)
 def fit_theta_fixed_phi(
     key: jax.Array,
-    batch: MinibatchData,
-    phi_norm_rows: jax.Array,   # (D, L, K) normalized φ gathered at tokens
+    batch: MinibatchData,       # estimation split (word_ids + 80% counts)
+    phi_norm: jax.Array,        # (W_s, K) NORMALISED φ (eq. 10), frozen
     cfg: LDAConfig,
     fit_sweeps: int = 50,
+    *,
+    rel_tol: Optional[float] = None,
+    check_every: Optional[int] = None,
+    active_topics: int = 0,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
 ) -> jax.Array:
-    """Fixed-φ EM for θ̂ on the estimation split. Returns θ̂ (D, K)."""
-    D, L = batch.word_ids.shape
-    mu = uniform_responsibilities(key, (D, L, cfg.K), cfg.dtype)
-    theta = em.fold_theta(mu, batch.counts)
+    """Fixed-φ EM for θ̂ on the estimation split — §2.4 step 3.
 
-    def sweep(theta, _):
-        th = em.normalize_theta(theta, cfg)                       # (D, K)
-        num = th[:, None, :] * phi_norm_rows                      # (D, L, K)
-        mu = num / jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
-        return em.fold_theta(mu, batch.counts), None
+    Fits θ̂ by the frozen-φ fixed point μ ∝ θ_d(k)·φ_w(k) (eq. 11 with φ̂
+    frozen), routed through ``kernels.ops.infer`` — the fused θ-only
+    launch on TPU, the jnp mirror elsewhere.  Convergence-stopped: the
+    loop runs in ``check_every``-sweep chunks (default
+    ``cfg.ppl_check_every``) and stops when the estimation-split
+    perplexity moves less than ``rel_tol`` (default ``cfg.ppl_rel_tol``;
+    pass 0.0 to force exactly ``fit_sweeps`` sweeps — the legacy
+    behaviour).  ``active_topics > 0`` restricts the fit to each word's
+    top-A topics by φ mass (``serving_active_topics``).  Returns θ̂ (D, K)
+    sufficient statistics (eq. 9 normalisation is the caller's).
 
-    theta, _ = jax.lax.scan(sweep, theta, None, length=fit_sweeps)
-    return theta
+    Note the signature takes the (W_s, K) normalised φ matrix, not
+    pre-gathered (D, L, K) rows — the dense gathered-rows tensor no
+    longer exists on this path.
+    """
+    res = infer_heldout(
+        key, batch, None, phi_norm, cfg, fit_sweeps=fit_sweeps,
+        rel_tol=rel_tol, check_every=check_every,
+        active_topics=active_topics, use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    return res.theta
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "fit_sweeps"))
+def infer_heldout(
+    key: jax.Array,
+    est: MinibatchData,             # 80% split
+    ev: Optional[MinibatchData],    # 20% split (same docs / word layout)
+    phi_norm: jax.Array,            # (W_s, K) normalised φ (eq. 10)
+    cfg: LDAConfig,
+    *,
+    fit_sweeps: int = 50,
+    rel_tol: Optional[float] = None,
+    check_every: Optional[int] = None,
+    active_topics: int = 0,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> InferResult:
+    """Full §2.4 inference on a held-out minibatch — the config adapter
+    over ``kernels.ops.infer`` every evaluation consumer shares.
+
+    ``est``/``ev`` must share ``word_ids`` (``split_heldout_counts``
+    guarantees it); ``ev=None`` fits only (serving).  Returns the full
+    ``InferResult`` — θ̂, sweeps run, and the eq. 3/eq. 21 logliks
+    measured in-launch.
+    """
+    res = kops.infer(
+        est.word_ids, est.counts, init_theta(key, est, cfg), phi_norm,
+        alpha_m1=cfg.alpha_m1,
+        ev_counts=None if ev is None else ev.counts,
+        word_topics=(
+            serving_active_topics(phi_norm, active_topics)
+            if active_topics else None
+        ),
+        max_sweeps=fit_sweeps,
+        check_every=cfg.ppl_check_every if check_every is None else check_every,
+        rel_tol=cfg.ppl_rel_tol if rel_tol is None else rel_tol,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    return res
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "fit_sweeps", "check_every", "active_topics",
+                     "use_pallas", "interpret"),
+)
 def predictive_perplexity(
     key: jax.Array,
     est: MinibatchData,        # 80% split
@@ -63,13 +172,28 @@ def predictive_perplexity(
     phi_k: jax.Array,
     cfg: LDAConfig,
     fit_sweeps: int = 50,
+    *,
+    rel_tol: Optional[float] = None,
+    check_every: Optional[int] = None,
+    active_topics: int = 0,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
 ) -> jax.Array:
-    """eq. (21) on the evaluation split."""
+    """eq. (21) on the evaluation split — the paper's headline metric.
+
+    Normalises the sufficient statistics to φ (eq. 10), fits θ̂ on the
+    80% split (``infer_heldout`` → ``ops.infer``, convergence-stopped at
+    ``rel_tol``/``check_every``, defaults from the config's stop rule),
+    and returns exp(−ev_loglik/ntokens) with the eq. 21 numerator taken
+    from the in-launch per-token partials — no standalone (D, L, K)
+    evaluation pass.  ``rel_tol=0.0`` reproduces the legacy fixed-sweep
+    value exactly.
+    """
     phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)               # (W, K)
-    est_rows = em.gather_phi_rows(phi_norm, est.word_ids)
-    theta = fit_theta_fixed_phi(key, est, est_rows, cfg, fit_sweeps)
-    theta_n = em.normalize_theta(theta, cfg)
-    ev_rows = em.gather_phi_rows(phi_norm, ev.word_ids)
-    lik = jnp.maximum(jnp.einsum("dlk,dk->dl", ev_rows, theta_n), 1e-30)
-    ll = (ev.counts * jnp.log(lik)).sum()
-    return jnp.exp(-ll / jnp.maximum(ev.counts.sum(), 1.0))
+    res = infer_heldout(
+        key, est, ev, phi_norm, cfg, fit_sweeps=fit_sweeps,
+        rel_tol=rel_tol, check_every=check_every,
+        active_topics=active_topics, use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    return res.perplexity(ev.counts.sum())

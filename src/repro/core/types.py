@@ -224,6 +224,42 @@ class SweepResult(NamedTuple):
     loglik: Optional[jax.Array]    # () or None — in-sweep stop-rule loglik
 
 
+class InferResult(NamedTuple):
+    """Everything one frozen-φ inference call produces — paper §2.4 / eq. 21.
+
+    The unified contract of ``kernels.ops.infer`` (the test-time sibling of
+    ``ops.sweep -> SweepResult``): fitting θ̂ on a batch of *unseen*
+    documents against a frozen, already-normalised φ (eq. 10), by the
+    limiting fixed-point E-step of Cappé-style online EM — μ ∝ θ_d(k)·φ_w(k)
+    (eq. 11 with φ̂ frozen), θ̂ refolded per sweep — with the eq. 21
+    log-predictive partials measured in the same launch, so held-out
+    perplexity needs no standalone (D, L, K) gather+einsum pass.
+
+    ``theta`` is the *sufficient-statistics* form θ̂ (normalise with
+    ``em.normalize_theta`` / eq. 9 for the mixture).  ``est_loglik`` is the
+    eq. 3 data log-likelihood of the estimation (80%) split under the final
+    θ̂ — the convergence stop rule's measure; ``ev_loglik``/``ev_loglik_doc``
+    are eq. 21's numerator Σ x^{20%} log Σ_k θ_d(k) φ_w(k) on the
+    evaluation split, total and per document (zeros when no evaluation
+    counts were passed).  ``sweeps`` counts the fixed-point sweeps actually
+    run (a multiple of the dispatch's ``check_every``).
+
+    Under a sharded ``SweepPlan`` (inside ``shard_map``, topic axis over
+    ``plan.axis_name``) ``theta`` is the shard's K/mp topic slice while the
+    logliks are already psum'd over the model axis; a data-sharded caller
+    still owns the data-axis reduction."""
+
+    theta: jax.Array           # (D, K) final θ̂ sufficient statistics
+    sweeps: jax.Array          # ()  int32 — fixed-point sweeps run
+    est_loglik: jax.Array      # ()  eq. 3 data loglik, estimation split
+    ev_loglik: jax.Array       # ()  eq. 21 numerator, evaluation split
+    ev_loglik_doc: jax.Array   # (D,) per-document eq. 21 partials
+
+    def perplexity(self, ev_tokens: jax.Array) -> jax.Array:
+        """eq. 21: P = exp(−ev_loglik / Σ x^{20%}) for ``ev_tokens`` tokens."""
+        return jnp.exp(-self.ev_loglik / jnp.maximum(ev_tokens, 1.0))
+
+
 def uniform_responsibilities(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
     """Random-normalized init of μ (paper: 'start from random initializations')."""
     g = jax.random.uniform(key, shape, dtype=dtype, minval=0.5, maxval=1.5)

@@ -13,6 +13,15 @@ and the delta-compacted portable scans elsewhere.  Every caller
 (``em.blocked_iem_sweep``, ``foem`` warm-up and scheduled sweeps,
 ``foem_sharded``'s shard-local sweeps, the streaming trainer through
 ``foem_minibatch``) routes through it.
+
+Test-time (frozen φ̂) inference has its own entry point,
+``infer(...) -> InferResult``: the §2.4 θ-only fixed point as chunked
+single-launch ``theta_sweep_pallas`` calls (dense or active-set
+scheduled), convergence-stopped on the estimation-split perplexity, with
+the eq. 21 held-out log-predictive partials emitted in-kernel.  Every
+serving/evaluation consumer (``perplexity.fit_theta_fixed_phi`` /
+``predictive_perplexity``, ``launch.serve.TopicServer``,
+``foem_sharded.heldout_perplexity_sharded``) routes through it.
 """
 from __future__ import annotations
 
@@ -23,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.types import SweepPlan, SweepResult
+from repro.core.types import InferResult, SweepPlan, SweepResult
 from repro.kernels import ref
 from repro.kernels.foem_estep import fused_estep_pallas
 from repro.kernels.gs_sweep import fits_vmem, gs_sweep_pallas
@@ -33,6 +42,7 @@ from repro.kernels.sharded_sweep import (
     sharded_fold_pallas,
     sharded_probe_pallas,
 )
+from repro.kernels.theta_sweep import theta_fits_vmem, theta_sweep_pallas
 from repro.kernels.topk_estep import topk_estep_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 
@@ -665,6 +675,195 @@ def sweep(
             alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
         )
     return SweepResult(mu_new, theta_o, phi_o, ptot_o, res, ll)
+
+
+# ---------------------------------------------------------------------------
+# Frozen-φ inference (θ-only fixed point) — unified dispatch
+# ---------------------------------------------------------------------------
+
+def _infer_chunk_portable(
+    word_ids, est_counts, ev_counts, theta, phi_norm, word_masks,
+    *, alpha_m1, k_alpha, num_sweeps, axis_name=None,
+):
+    """``num_sweeps`` frozen-φ Jacobi sweeps + the eq. 21 phase — pure jnp.
+
+    The portable mirror of ``theta_sweep_pallas`` (and, at ``rel_tol=0``,
+    of the legacy ``fit_theta_fixed_phi`` 50-sweep scan): gather the φ rows
+    once, scan the fixed point, measure both splits' per-token
+    log-predictive partials against the final θ̂.  ``axis_name`` wraps the
+    two per-token reductions (the μ normaliser and the eq. 21 likelihood)
+    plus the θ̂ normaliser in ``lax.psum`` for the topic-sharded shard_map
+    path — inference is Jacobi, so unlike training sweeps no two-phase
+    launch restructuring is needed.
+    """
+    psum = (
+        (lambda x: lax.psum(x, axis_name)) if axis_name else (lambda x: x)
+    )
+    rows = jnp.take(phi_norm, word_ids, axis=0)            # (D, L, K)
+    if word_masks is not None:
+        rows_fit = rows * jnp.take(word_masks, word_ids, axis=0)
+    else:
+        rows_fit = rows
+
+    def normalize(theta):
+        den = psum(theta.sum(-1, keepdims=True)) + k_alpha
+        return (theta + alpha_m1) / jnp.maximum(den, 1e-30)
+
+    def one(theta, _):
+        num = normalize(theta)[:, None, :] * rows_fit      # (D, L, K)
+        denom = psum(num.sum(-1, keepdims=True))
+        mu = num / jnp.maximum(denom, 1e-30)
+        return jnp.einsum("dlk,dl->dk", mu, est_counts), None
+
+    theta, _ = lax.scan(one, theta, None, length=num_sweeps)
+    lik = psum(jnp.einsum("dlk,dk->dl", rows, normalize(theta)))
+    ll = jnp.log(jnp.maximum(lik, 1e-30))                  # full support
+    return theta, est_counts * ll, ev_counts * ll
+
+
+def infer(
+    word_ids: jax.Array,       # (D, L) int32 — rows into phi_norm
+    est_counts: jax.Array,     # (D, L) estimation (80%) split counts
+    theta0: jax.Array,         # (D, K) initial θ̂ statistics
+    phi_norm: jax.Array,       # (W_s, K) NORMALISED φ (eq. 10), frozen
+    *,
+    alpha_m1: float,
+    ev_counts: Optional[jax.Array] = None,     # (D, L) evaluation (20%) split
+    word_topics: Optional[jax.Array] = None,   # (W_s, A): scheduled fit
+    max_sweeps: int = 50,
+    check_every: int = 10,
+    rel_tol: jax.Array | float = 0.0,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    plan: Optional[SweepPlan] = None,          # execution plan (mesh axis etc.)
+) -> InferResult:
+    """Frozen-φ inference for unseen documents — THE serving entry point.
+
+    The test-time sibling of ``sweep``: every frozen-φ consumer
+    (``perplexity.fit_theta_fixed_phi``, ``predictive_perplexity``,
+    ``launch.serve.TopicServer``, ``foem_sharded.heldout_perplexity_sharded``)
+    routes through this function, which owns kernel dispatch, the
+    convergence stop and — under a sharded plan — the cross-shard
+    collectives.  Paper §2.4: fit θ̂ on the estimation split by the
+    fixed-point E-step with φ̂ frozen (eq. 11 without the φ M-step), then
+    score the evaluation split with eq. 21.
+
+    * The fixed point runs in ``check_every``-sweep chunks inside a
+      ``lax.while_loop``; after each chunk the estimation-split perplexity
+      ``exp(−est_loglik/ntokens)`` is compared to the previous chunk's and
+      the loop stops when the relative change drops below ``rel_tol`` (the
+      training stop rule of §2.4 applied at test time), or after
+      ``max_sweeps`` total.  ``rel_tol=0`` never triggers, reproducing the
+      legacy fixed-``max_sweeps`` behaviour exactly; ``max_sweeps`` must be
+      a multiple of ``check_every``.
+    * ``ev_counts`` is the 20% evaluation split of the same documents
+      (identical ``word_ids`` layout — ``perplexity.split_heldout_counts``'
+      binomial thinning preserves it); its eq. 21 per-token partials are
+      measured inside the same chunk launch, so held-out perplexity costs
+      no standalone (D, L, K) pass.  ``None`` scores nothing (serving).
+    * ``word_topics`` restricts the *fit* to each word's (W_s, A) active
+      topic set — the §3.1 machinery reused at serving time (see
+      ``perplexity.serving_active_topics``); the eq. 21 evaluation always
+      uses the full support.
+    * Dispatch: the single-launch Pallas kernel per chunk on TPU whenever
+      the (W_s + D, K) working set fits VMEM; the pure-jnp mirror
+      elsewhere.  ``interpret=True`` forces the kernel body on CPU
+      (tests); ``use_pallas=False`` forces the oracle.
+    * ``plan`` (``core.types.SweepPlan``) with ``axis_name`` set runs the
+      fixed point *inside* ``shard_map`` with the topic axis sharded over
+      that mesh axis: the per-token normalisers, the θ̂ normaliser and the
+      pre-log eq. 21 likelihood are psum'd over the axis (inference is
+      Jacobi, so one reduction per sweep suffices — no two-phase
+      restructuring).  Sharded plans imply the portable path (a collective
+      cannot cross a Pallas kernel boundary); the returned ``theta`` is
+      the shard's topic slice, the logliks are already globally reduced.
+    """
+    D, L = word_ids.shape
+    K = theta0.shape[-1]
+    check_every = max(1, min(check_every, max_sweeps))
+    if max_sweeps % check_every:
+        raise ValueError(
+            f"max_sweeps ({max_sweeps}) must be a multiple of "
+            f"check_every ({check_every}) — the fixed point runs in "
+            "check_every-sweep chunks"
+        )
+    n_chunks = max_sweeps // check_every
+    ev = jnp.zeros_like(est_counts) if ev_counts is None else ev_counts
+
+    axis_name = None
+    if plan is not None and plan.axis_name is not None:
+        if plan.impl in ("pallas", "interpret"):
+            raise ValueError(
+                "a sharded infer plan requires the portable path; a "
+                "collective cannot cross a Pallas kernel boundary"
+            )
+        axis_name = plan.axis_name
+        k_alpha = (K * lax.psum(1, axis_name)) * alpha_m1   # global K·(α−1)
+        use_pallas, interpret = False, False
+    else:
+        if plan is not None:
+            if plan.impl == "pallas":
+                use_pallas = True
+            elif plan.impl == "interpret":
+                interpret = True
+            elif plan.impl == "portable":
+                use_pallas = False
+        k_alpha = K * alpha_m1
+        if use_pallas is False:
+            interpret = False           # explicit False wins: pure-jnp oracle
+        elif use_pallas is None:
+            use_pallas = on_tpu() and theta_fits_vmem(phi_norm.shape[0], D, K)
+
+    if use_pallas or interpret:
+        lane_align = 128 if (use_pallas and not interpret) else 1
+
+        def chunk(theta):
+            return theta_sweep_pallas(
+                word_ids, est_counts, ev, theta, phi_norm, word_topics,
+                alpha_m1=alpha_m1, num_sweeps=check_every,
+                lane_align=lane_align, interpret=interpret,
+            )
+    else:
+        word_masks = (
+            _word_lane_masks(phi_norm, word_topics)
+            if word_topics is not None else None
+        )
+
+        def chunk(theta):
+            return _infer_chunk_portable(
+                word_ids, est_counts, ev, theta, phi_norm, word_masks,
+                alpha_m1=alpha_m1, k_alpha=k_alpha, num_sweeps=check_every,
+                axis_name=axis_name,
+            )
+
+    ntok_est = jnp.maximum(est_counts.sum(), 1.0)
+    dtype = theta0.dtype
+
+    def cond(state):
+        c, done, *_ = state
+        return (c < n_chunks) & jnp.logical_not(done)
+
+    def body(state):
+        c, done, theta, _, _, last_ppl = state
+        theta, est_ll_tok, ev_ll_tok = chunk(theta)
+        est_ll = est_ll_tok.sum()
+        ppl = jnp.exp(-est_ll / ntok_est)
+        done = jnp.abs(last_ppl - ppl) < rel_tol * ppl
+        return c + 1, done, theta, est_ll, ev_ll_tok, ppl
+
+    c, _, theta, est_ll, ev_ll_tok, _ = lax.while_loop(
+        cond, body,
+        (jnp.int32(0), jnp.bool_(False), theta0,
+         jnp.zeros((), dtype), jnp.zeros((D, L), dtype),
+         jnp.asarray(jnp.inf, dtype)),
+    )
+    return InferResult(
+        theta=theta,
+        sweeps=c * check_every,
+        est_loglik=est_ll,
+        ev_loglik=ev_ll_tok.sum(),
+        ev_loglik_doc=ev_ll_tok.sum(-1),
+    )
 
 
 def gs_sweep(

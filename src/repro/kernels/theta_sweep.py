@@ -1,0 +1,298 @@
+"""Pallas TPU kernel: fused frozen-φ inference (θ-only fixed point) — §2.4.
+
+The paper's test-time protocol "infers the topic distribution from the
+previously unseen documents incrementally with constant memory" (§2.4):
+with the trained φ̂ FROZEN, fit θ̂ per held-out document by the limiting
+fixed-point E-step (Cappé-style online EM's E-step with the M-step
+switched off for φ)
+
+    μ_{w,d}(k) ∝ θ_d(k) · φ_w(k)          (eq. 11, φ̂ frozen)
+    θ̂_d(k)    = Σ_w x^{80%}_{w,d} μ_{w,d}(k)
+
+and score the evaluation split with eq. 21,
+P = exp(−Σ x^{20%} log Σ_k θ_d(k) φ_w(k) / Σ x^{20%}).
+
+The legacy serving path (``perplexity.fit_theta_fixed_phi`` before this
+kernel) materialised the dense (D, L, K) gathered φ rows, scanned a fixed
+50 Jacobi sweeps, and then ran a second standalone (D, L, K) gather+einsum
+pass for the eq. 21 evaluation.  Here the whole fixed point is ONE launch,
+structured like ``gs_sweep_pallas``:
+
+  * the grid is ``num_sweeps·L + L``: ``num_sweeps`` Jacobi sweeps over the
+    token columns followed by L evaluation columns;
+  * θ̂ (D, K) is carried in VMEM across all grid steps with
+    ``input_output_aliases`` donation; a second VMEM accumulator collects
+    the next sweep's fold so the Jacobi semantics (whole sweep against the
+    sweep-start θ̂) are preserved;
+  * φ (W_s, K) enters *already normalised* (eq. 10) and is never written —
+    a constant-index VMEM block, fetched once for the whole launch;
+  * the word ids are scalar-prefetched (``PrefetchScalarGridSpec``) and
+    drive a per-document dynamic row gather — the (D, L, K) gathered-rows
+    tensor is never materialised: live memory is O((W_s + D)·K), constant
+    in the number of fixed-point sweeps (the §2.4 claim);
+  * the trailing L evaluation columns re-walk the tokens against the FINAL
+    θ̂ and emit per-token eq. 21 log-predictive partials for BOTH splits —
+    ``x^{80%}·log lik`` (the convergence stop rule's eq. 3 measure) and
+    ``x^{20%}·log lik`` (held-out perplexity) — so neither needs a
+    standalone (D, L, K) pass;
+  * the scheduled variant additionally scalar-prefetches per-word
+    (W_s, A) active-topic ids — the §3.1 machinery reused at serving time
+    with φ-mass-ranked active sets (see ``perplexity.serving_active_topics``)
+    — and expands them in-kernel to a (D, K) lane mask restricting each
+    token's topic support during the *fit*; the evaluation columns always
+    use the full support, so eq. 21 stays exact.
+
+Convergence is decided OUTSIDE the launch: the dispatch layer
+(``ops.infer``) runs the kernel in ``check_every``-sweep chunks inside a
+``lax.while_loop``, carrying θ̂ between launches and stopping when the
+estimation-split perplexity moves less than ``rel_tol`` (the same relative
+stop rule as training, ``LDAConfig.ppl_rel_tol``).
+
+VMEM budget: θ̂ in/out + the gathered-rows, accumulator and (scheduled)
+mask scratches are (D, K) blocks next to the (W_s, K) φ block; the
+dispatch falls back to the portable jnp mirror when the working set
+exceeds the budget or the backend is not TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gs_sweep import DEFAULT_VMEM_BUDGET
+
+
+def theta_fits_vmem(num_rows: int, num_docs: int, num_topics: int,
+                    budget: int = DEFAULT_VMEM_BUDGET) -> bool:
+    """Can the inference kernel's live VMEM set fit for one launch?
+
+    Counts the carried θ̂ pair (in + aliased out), the read-only φ block,
+    the rows/accumulator/mask scratches and the small per-column blocks,
+    at the padded shapes.
+    """
+    Dp = num_docs + (-num_docs) % 8
+    Kp = num_topics + (-num_topics) % 128      # lane_align=128 when compiled
+    carried = (2 * Dp + num_rows) * Kp * 4
+    scratch = 3 * Dp * Kp * 4                  # rows + accumulator + mask
+    per_column = 2 * 2 * 2 * Dp * 4            # cnt/ev in + ll out, buffered
+    return carried + scratch + per_column <= budget
+
+
+def _make_theta_kernel(*, alpha_m1: float, k_actual: int, num_cols: int,
+                       num_sweeps: int, active_topics: int):
+    """Kernel body for a static (sweeps, A) configuration.
+
+    Ref order: scalar prefetch (wid[, word-topics]), inputs (est counts
+    column, ev counts column, θ̂, φ), outputs (θ̂ carried; est/ev log-
+    predictive columns), scratch (gathered rows, sweep accumulator[, lane
+    mask]).  ``active_topics == 0`` builds the dense variant.
+    """
+    scheduled = active_topics > 0
+
+    def kernel(*refs):
+        if scheduled:
+            (wid_ref, wtop_ref, cnt_ref, ev_ref, theta_in_ref, phi_ref,
+             theta_ref, est_ref, evll_ref, rows_ref, acc_ref, mask_ref) = refs
+        else:
+            (wid_ref, cnt_ref, ev_ref, theta_in_ref, phi_ref,
+             theta_ref, est_ref, evll_ref, rows_ref, acc_ref) = refs
+            wtop_ref = mask_ref = None
+
+        l = pl.program_id(0)
+        D, K = theta_ref.shape
+        col = jax.lax.rem(l, num_cols)
+
+        @pl.when(l == 0)
+        def _():
+            theta_ref[...] = theta_in_ref[...]
+
+        def theta_norm():
+            # eq. 9 against the carried θ̂; padded lanes never reach the
+            # likelihood (φ's padding lanes are zero), so no iota mask
+            theta = theta_ref[...]
+            den = theta.sum(-1, keepdims=True) + k_actual * alpha_m1
+            return (theta + alpha_m1) / jnp.maximum(den, 1e-30)
+
+        def gather(with_mask):
+            # serial per-document row gather off the prefetched word ids;
+            # the scheduled fit also expands the word's (A,) active-topic
+            # ids into a lane mask (same idiom as scheduled_sweep)
+            lane = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+
+            def go(d, _):
+                w = wid_ref[d, col]
+                rows_ref[pl.ds(d, 1), :] = phi_ref[pl.ds(w, 1), :]
+                if with_mask:
+                    m = jnp.zeros((1, K), theta_in_ref.dtype)
+                    for a in range(active_topics):  # static unroll, A ≈ 16
+                        m = jnp.maximum(
+                            m, (lane == wtop_ref[w, a]).astype(m.dtype)
+                        )
+                    mask_ref[pl.ds(d, 1), :] = m
+                return 0
+            jax.lax.fori_loop(0, D, go, 0)
+
+        def sweep_col():
+            cnt = cnt_ref[...]                  # (D, 1)
+            th_n = theta_norm()
+            gather(scheduled)
+            num = th_n * rows_ref[...]
+            if scheduled:
+                num = num * mask_ref[...]       # fit support: active set only
+            denom = jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
+            contrib = cnt * (num / denom)       # x^{80%}·μ for this column
+
+            @pl.when(col == 0)
+            def _():
+                acc_ref[...] = contrib
+
+            @pl.when(col != 0)
+            def _():
+                acc_ref[...] = acc_ref[...] + contrib
+
+            # last column: the fold becomes the next sweep's θ̂ (Jacobi —
+            # the whole sweep ran against the sweep-start statistics)
+            @pl.when(col == num_cols - 1)
+            def _():
+                theta_ref[...] = acc_ref[...]
+
+            est_ref[0] = jnp.zeros((D, 1), theta_in_ref.dtype)
+            evll_ref[0] = jnp.zeros((D, 1), theta_in_ref.dtype)
+
+        def eval_col():
+            # eq. 21 phase against the FINAL θ̂, full topic support (the
+            # scheduled variant restricts only the fit, never the score)
+            gather(False)
+            lik = (theta_norm() * rows_ref[...]).sum(-1, keepdims=True)
+            ll = jnp.log(jnp.maximum(lik, 1e-30))
+            est_ref[0] = cnt_ref[...] * ll      # eq. 3 stop-rule partial
+            evll_ref[0] = ev_ref[...] * ll      # eq. 21 partial
+
+        @pl.when(l < num_sweeps * num_cols)
+        def _():
+            sweep_col()
+
+        @pl.when(l >= num_sweeps * num_cols)
+        def _():
+            eval_col()
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha_m1", "num_sweeps", "lane_align", "interpret"),
+)
+def theta_sweep_pallas(
+    word_ids: jax.Array,       # (D, L) int32 — rows into phi_norm
+    est_counts: jax.Array,     # (D, L) float32 — estimation (80%) split
+    ev_counts: jax.Array,      # (D, L) float32 — evaluation (20%) split
+    theta: jax.Array,          # (D, K) θ̂ sufficient statistics (carried)
+    phi_norm: jax.Array,       # (W_s, K) NORMALISED φ (eq. 10), frozen
+    word_topics: Optional[jax.Array] = None,  # (W_s, A) int32: scheduled fit
+    *,
+    alpha_m1: float,
+    num_sweeps: int,
+    lane_align: int = 1,       # pad K to this multiple (128 for compiled TPU)
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``num_sweeps`` frozen-φ fixed-point sweeps + the eq. 21 phase, fused.
+
+    Returns ``(theta (D, K), est_ll (D, L), ev_ll (D, L))`` — the updated
+    θ̂ statistics and the per-token log-predictive partials
+    ``x·log Σ_k θ_d(k) φ_w(k)`` of the estimation and evaluation splits,
+    both measured against the final θ̂ inside the launch.
+
+    Documents pad to the 8-sublane boundary with zero-count slots (zero
+    counts ⇒ zero θ̂ fold and zero partials, so padding is exact);
+    ``lane_align`` pads the topic axis — φ's padded lanes carry zeros, so
+    they never enter the responsibilities or the likelihood.
+    """
+    if num_sweeps < 1:
+        raise ValueError("num_sweeps must be >= 1")
+    D, L = word_ids.shape
+    K = theta.shape[-1]
+    Wrows = phi_norm.shape[0]
+    scheduled = word_topics is not None
+    A = word_topics.shape[-1] if scheduled else 0
+
+    pad_d = (-D) % 8
+    pad_k = (-K) % lane_align if lane_align > 1 else 0
+    Dp, Kp = D + pad_d, K + pad_k
+    if pad_d or pad_k:
+        word_ids = jnp.pad(word_ids, ((0, pad_d), (0, 0)))
+        est_counts = jnp.pad(est_counts, ((0, pad_d), (0, 0)))
+        ev_counts = jnp.pad(ev_counts, ((0, pad_d), (0, 0)))
+        theta = jnp.pad(theta, ((0, pad_d), (0, pad_k)))
+        phi_norm = jnp.pad(phi_norm, ((0, 0), (0, pad_k)))
+
+    kernel = _make_theta_kernel(
+        alpha_m1=alpha_m1, k_actual=K, num_cols=L, num_sweeps=num_sweeps,
+        active_topics=A,
+    )
+    grid_len = num_sweeps * L + L              # sweeps + eq. 21 columns
+
+    if scheduled:
+        def idx(fn):
+            return lambda l, wid, wt: fn(l)
+    else:
+        def idx(fn):
+            return lambda l, wid: fn(l)
+
+    col_of = lambda l: jax.lax.rem(l, L)
+
+    in_specs = [
+        pl.BlockSpec((Dp, 1), idx(lambda l: (0, col_of(l)))),
+        pl.BlockSpec((Dp, 1), idx(lambda l: (0, col_of(l)))),
+        pl.BlockSpec((Dp, Kp), idx(lambda l: (0, 0))),
+        pl.BlockSpec((Wrows, Kp), idx(lambda l: (0, 0))),
+    ]
+    out_specs = [
+        pl.BlockSpec((Dp, Kp), idx(lambda l: (0, 0))),
+        pl.BlockSpec((1, Dp, 1), idx(lambda l: (col_of(l), 0, 0))),
+        pl.BlockSpec((1, Dp, 1), idx(lambda l: (col_of(l), 0, 0))),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Dp, Kp), theta.dtype),
+        jax.ShapeDtypeStruct((L, Dp, 1), theta.dtype),
+        jax.ShapeDtypeStruct((L, Dp, 1), theta.dtype),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((Dp, Kp), theta.dtype),     # gathered φ rows
+        pltpu.VMEM((Dp, Kp), theta.dtype),     # sweep-fold accumulator
+    ]
+    if scheduled:
+        scratch_shapes.append(pltpu.VMEM((Dp, Kp), theta.dtype))  # lane mask
+
+    operands = [word_ids]
+    if scheduled:
+        operands.append(word_topics)
+    operands += [est_counts, ev_counts, theta, phi_norm]
+    # flat operands: wid(0) [wtop(1)] est ev theta phi — θ̂ donated
+    theta_idx = 4 if scheduled else 3
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2 if scheduled else 1,
+        grid=(grid_len,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
+    )
+    theta_out, est_out, ev_out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases={theta_idx: 0},
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(*operands)
+
+    est_ll = est_out[..., 0].T[:D]             # (D, L) per-token partials
+    ev_ll = ev_out[..., 0].T[:D]
+    return theta_out[:D, :K], est_ll, ev_ll

@@ -1,16 +1,22 @@
 """Serving driver — topic inference for unseen documents (the paper's
 deployment mode) and LM decode on reduced configs.
 
-LDA serving = the E-step with FROZEN φ̂: per request batch, fit θ̂ only
-(fixed-point iterations), return the per-document topic mixture.  This is
-exactly the paper's test-time protocol (§2.4) and runs with the same
-vocab-streamed parameter access as training.
+LDA serving = the E-step with FROZEN φ̂ (§2.4): per request batch, fit θ̂
+only — the θ-only fixed point of eq. 11 with the φ M-step switched off —
+and return the per-document topic mixture (eq. 9).  Requests stream
+against the same disk-backed parameter access as training
+(``ParameterStore``), and the fit routes through the fused inference
+dispatch (``kernels.ops.infer``): convergence-stopped chunks of the
+single-launch θ sweep kernel on TPU, the jnp mirror elsewhere, with the
+eq. 21 log-predictive partials available in the same launch for
+lifelong held-out evaluation.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
-from typing import List
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,39 +24,154 @@ import numpy as np
 
 from repro.configs.registry import ARCHS, LDA_ARCH
 from repro.core import LDAConfig, ParameterStore
-from repro.core.perplexity import fit_theta_fixed_phi
 from repro.core import em
+from repro.core.perplexity import init_theta, serving_active_topics
 from repro.core.types import MinibatchData
 from repro.data import synthetic_lda_corpus
+from repro.kernels import ops as kops
 from repro.models import build
-from repro.sparse.docword import bucketize, localize_vocab
+from repro.sparse.docword import DocWordMatrix, bucketize, localize_vocab
+
+
+def _round_up(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "fit_sweeps", "check_every", "active_topics",
+                     "use_pallas", "interpret"),
+)
+def _infer_local(key, word_ids, counts, ev_counts, rows, phi_k, cfg,
+                 fit_sweeps, check_every, rel_tol, active_topics,
+                 use_pallas, interpret):
+    """One jitted request batch: normalise the streamed (W_s, K) view
+    (eq. 10 with the *global* W smoothing mass), fit θ̂ through
+    ``ops.infer`` and return the eq. 9 mixtures + diagnostics."""
+    phi_norm = em.normalize_phi(rows, phi_k, cfg, vocab_size=cfg.W)
+    res = kops.infer(
+        word_ids, counts, init_theta(key, MinibatchData(word_ids, counts),
+                                     cfg), phi_norm,
+        alpha_m1=cfg.alpha_m1, ev_counts=ev_counts,
+        word_topics=(
+            serving_active_topics(phi_norm, active_topics)
+            if active_topics else None
+        ),
+        max_sweeps=fit_sweeps, check_every=check_every, rel_tol=rel_tol,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    return em.normalize_theta(res.theta, cfg), res.sweeps, res.ev_loglik
 
 
 class TopicServer:
-    """Batched topic-mixture inference against a (possibly disk-backed) φ̂."""
+    """Batched topic-mixture inference against a (possibly disk-backed) φ̂.
+
+    The paper's deployment mode (§2.4): per request batch, stream exactly
+    the W_s touched φ̂ rows from the store, fit θ̂ with φ̂ frozen through
+    the fused dispatch (``ops.infer`` — convergence-stopped instead of a
+    fixed sweep budget), and return the eq. 9 topic mixtures.  Identical
+    requests are deterministic: the fixed-point init key defaults to a
+    fixed key and can be passed explicitly per request (it is never
+    advanced by the server).
+
+    Knobs: ``fit_sweeps`` caps the fixed point, ``rel_tol``/``check_every``
+    are the §2.4 relative stop rule (defaults from the config),
+    ``active_topics > 0`` restricts each word's fit support to its top-A
+    topics by φ mass (the §3.1 machinery at serving time), and
+    ``use_pallas``/``interpret`` force the kernel/oracle dispatch.
+    """
 
     def __init__(self, store: ParameterStore, cfg: LDAConfig,
-                 fit_sweeps: int = 50):
+                 fit_sweeps: int = 50, *,
+                 rel_tol: Optional[float] = None,
+                 check_every: Optional[int] = None,
+                 active_topics: int = 0,
+                 use_pallas: Optional[bool] = None,
+                 interpret: bool = False,
+                 vocab_pad: int = 512):
         self.store = store
         self.cfg = cfg
         self.fit_sweeps = fit_sweeps
-        self.key = jax.random.PRNGKey(0)
-
-    def infer(self, word_ids: np.ndarray, counts: np.ndarray) -> np.ndarray:
-        """(B, L) docs -> (B, K) normalized topic mixtures θ."""
-        uniq, local = localize_vocab(word_ids)
-        rows = self.store.fetch_rows(uniq)                     # streamed φ̂
-        phi_k = jnp.asarray(self.store.phi_k, jnp.float32)
-        # local (W_s, K) view: the smoothing mass must use the global W
-        phi_norm = em.normalize_phi(
-            jnp.asarray(rows), phi_k, self.cfg, vocab_size=self.cfg.W
+        self.rel_tol = cfg.ppl_rel_tol if rel_tol is None else rel_tol
+        self.check_every = (
+            cfg.ppl_check_every if check_every is None else check_every
         )
-        batch = MinibatchData(jnp.asarray(local), jnp.asarray(counts))
-        rows_tok = em.gather_phi_rows(phi_norm, batch.word_ids)
-        self.key, sub = jax.random.split(self.key)
-        theta = fit_theta_fixed_phi(sub, batch, rows_tok, self.cfg,
-                                    self.fit_sweeps)
-        return np.asarray(em.normalize_theta(theta, self.cfg))
+        self.active_topics = active_topics
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.vocab_pad = max(1, vocab_pad)   # W_s bucketing for jit reuse
+        self.last_sweeps = 0                 # fixed-point sweeps of last call
+
+    def _run(self, word_ids: np.ndarray, counts: np.ndarray,
+             ev_counts: Optional[np.ndarray], key: Optional[jax.Array]):
+        if key is None:
+            key = jax.random.PRNGKey(0)      # deterministic by default
+        uniq, local = localize_vocab(word_ids)
+        rows = self.store.fetch_rows(uniq)                 # streamed φ̂
+        # pad the local vocab to a bucket boundary so jit traces are reused
+        # across requests (padded rows are never indexed by `local`)
+        pad = _round_up(len(uniq), self.vocab_pad) - len(uniq)
+        if pad:
+            rows = np.concatenate(
+                [rows, np.zeros((pad, rows.shape[1]), rows.dtype)]
+            )
+        theta, sweeps, ev_ll = _infer_local(
+            key, jnp.asarray(local), jnp.asarray(counts),
+            jnp.asarray(
+                ev_counts if ev_counts is not None
+                else np.zeros_like(counts)
+            ),
+            jnp.asarray(rows), jnp.asarray(self.store.phi_k, jnp.float32),
+            self.cfg, self.fit_sweeps, self.check_every, self.rel_tol,
+            self.active_topics, self.use_pallas, self.interpret,
+        )
+        self.last_sweeps = int(sweeps)
+        return np.asarray(theta), ev_ll
+
+    def infer(self, word_ids: np.ndarray, counts: np.ndarray,
+              key: Optional[jax.Array] = None) -> np.ndarray:
+        """(B, L) docs -> (B, K) normalized topic mixtures θ (eq. 9)."""
+        theta, _ = self._run(word_ids, counts, None, key)
+        return theta
+
+    def evaluate(self, word_ids: np.ndarray, est_counts: np.ndarray,
+                 ev_counts: np.ndarray,
+                 key: Optional[jax.Array] = None
+                 ) -> Tuple[np.ndarray, float]:
+        """Lifelong held-out evaluation: fit θ̂ on ``est_counts``, score
+        ``ev_counts`` with eq. 21 in the same launch.  Returns
+        ``(theta (B, K), predictive perplexity)``."""
+        theta, ev_ll = self._run(word_ids, est_counts, ev_counts, key)
+        ppl = float(np.exp(-float(ev_ll) / max(float(ev_counts.sum()), 1.0)))
+        return theta, ppl
+
+    def infer_stream(
+        self, corpus: DocWordMatrix, doc_ids: Sequence[int],
+        batch_size: int, key: Optional[jax.Array] = None,
+        bucket_multiple: int = 16,
+    ) -> Iterator[Tuple[Sequence[int], np.ndarray]]:
+        """Batched/bucketized streaming inference over a request stream.
+
+        Packs ``doc_ids`` into fixed-size (batch_size, L) buckets
+        (``sparse.docword.bucketize``; L rounds up to ``bucket_multiple``
+        and short tail batches pad with empty documents, so jit traces are
+        reused across the stream), derives a per-batch key from ``key``
+        (``fold_in`` by batch index — the stream is deterministic end to
+        end) and yields ``(chunk_doc_ids, theta (len(chunk), K))``.
+        """
+        base = jax.random.PRNGKey(0) if key is None else key
+        ids = list(doc_ids)
+        for i, lo in enumerate(range(0, len(ids), batch_size)):
+            chunk = ids[lo: lo + batch_size]
+            w, c = bucketize(corpus, chunk, pad_multiple=bucket_multiple)
+            if len(chunk) < batch_size:      # tail: pad with empty docs
+                padding = batch_size - len(chunk)
+                w = np.concatenate([w, np.zeros((padding, w.shape[1]),
+                                                w.dtype)])
+                c = np.concatenate([c, np.zeros((padding, c.shape[1]),
+                                                c.dtype)])
+            theta = self.infer(w, c, key=jax.random.fold_in(base, i))
+            yield chunk, theta[: len(chunk)]
 
 
 def serve_lda(args) -> None:
@@ -62,17 +183,14 @@ def serve_lda(args) -> None:
         raise SystemExit(
             f"no trained φ̂ under {args.workdir}; run launch/train.py first"
         )
-    server = TopicServer(store, cfg)
+    server = TopicServer(store, cfg, active_topics=args.active_topics)
     corpus, _ = synthetic_lda_corpus(args.requests, args.vocab,
                                      args.topics, seed=123)
     ids = list(range(corpus.num_docs))
     t0 = time.time()
-    for lo in range(0, len(ids), args.batch):
-        chunk = ids[lo: lo + args.batch]
-        w, c = bucketize(corpus, chunk)
-        theta = server.infer(w, c)
+    for chunk, theta in server.infer_stream(corpus, ids, args.batch):
         top = np.argsort(-theta, axis=1)[:, :3]
-        if lo == 0:
+        if chunk[0] == ids[0]:
             for d in range(min(4, len(chunk))):
                 mix = ", ".join(
                     f"k{int(k)}:{theta[d, k]:.2f}" for k in top[d]
@@ -80,7 +198,8 @@ def serve_lda(args) -> None:
                 print(f"  doc{chunk[d]:4d} top topics: {mix}")
     dt = time.time() - t0
     print(f"served {len(ids)} docs in {dt:.2f}s "
-          f"({len(ids)/dt:.1f} docs/s, batch={args.batch})")
+          f"({len(ids)/dt:.1f} docs/s, batch={args.batch}, "
+          f"{server.last_sweeps} fixed-point sweeps on the last batch)")
 
 
 def serve_lm(args) -> None:
@@ -130,6 +249,9 @@ def main() -> None:
     ap.add_argument("--topics", type=int, default=100)
     ap.add_argument("--vocab", type=int, default=5000)
     ap.add_argument("--buffer-rows", type=int, default=2048)
+    ap.add_argument("--active-topics", type=int, default=0,
+                    help="restrict each word's fit support to its top-A "
+                         "topics by trained φ mass (0 = dense fit)")
     ap.add_argument("--requests", type=int, default=512)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--gen-tokens", type=int, default=32)

@@ -1,0 +1,397 @@
+"""Frozen-φ inference engine: kernel-vs-oracle parity, padding invariance,
+convergence-stop semantics, in-kernel eq. 21 partials, and the TopicServer
+round-trip against a memmap store.
+
+The contract: ``kernels.ops.infer`` (chunked single-launch θ sweeps /
+portable jnp mirror) computes exactly the §2.4 frozen-φ fixed point the
+legacy 50-sweep scan did, its in-kernel eq. 21 partials equal the
+standalone (D, L, K) evaluation pass it replaced, and serving through
+``TopicServer`` is deterministic per request key.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import em
+from repro.core.perplexity import (
+    infer_heldout, predictive_perplexity, serving_active_topics,
+    split_heldout_counts,
+)
+from repro.core.types import (
+    LDAConfig, MinibatchData, uniform_responsibilities,
+)
+from repro.kernels import ops as kops
+from repro.kernels.theta_sweep import theta_sweep_pallas
+
+
+def _state(D, L, K, W, seed=0):
+    """Trained-ish φ̂ + an 80/20-split held-out minibatch."""
+    rng = np.random.default_rng(seed)
+    wid = jnp.asarray(rng.integers(0, W, (D, L)).astype(np.int32))
+    cnt = rng.integers(1, 6, (D, L)).astype(np.float32)
+    est_np, ev_np = split_heldout_counts(cnt, rng)
+    phi_wk = jnp.asarray(rng.gamma(1.0, 1.0, (W, K)).astype(np.float32))
+    phi_k = phi_wk.sum(0)
+    est = MinibatchData(wid, jnp.asarray(est_np))
+    ev = MinibatchData(wid, jnp.asarray(ev_np))
+    return est, ev, phi_wk, phi_k
+
+
+def _theta0(key, est, cfg):
+    mu0 = uniform_responsibilities(key, est.word_ids.shape + (cfg.K,))
+    return em.fold_theta(mu0, est.counts)
+
+
+def _legacy_fit(key, batch, rows_tok, cfg, sweeps):
+    """The pre-kernel serving path: dense (D, L, K) gathered rows, fixed
+    Jacobi sweep scan — the oracle the dispatch must reproduce."""
+    mu = uniform_responsibilities(key, rows_tok.shape, cfg.dtype)
+    theta = em.fold_theta(mu, batch.counts)
+
+    def sweep(theta, _):
+        th = em.normalize_theta(theta, cfg)
+        num = th[:, None, :] * rows_tok
+        mu = num / jnp.maximum(num.sum(-1, keepdims=True), 1e-30)
+        return em.fold_theta(mu, batch.counts), None
+
+    theta, _ = jax.lax.scan(sweep, theta, None, length=sweeps)
+    return theta
+
+
+def _legacy_predictive(key, est, ev, phi_wk, phi_k, cfg, sweeps):
+    """The pre-kernel eq. 21: a standalone (D, L, K) gather+einsum pass."""
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    est_rows = em.gather_phi_rows(phi_norm, est.word_ids)
+    theta = _legacy_fit(key, est, est_rows, cfg, sweeps)
+    theta_n = em.normalize_theta(theta, cfg)
+    ev_rows = em.gather_phi_rows(phi_norm, ev.word_ids)
+    lik = jnp.maximum(jnp.einsum("dlk,dk->dl", ev_rows, theta_n), 1e-30)
+    ll = (ev.counts * jnp.log(lik)).sum()
+    return jnp.exp(-ll / jnp.maximum(ev.counts.sum(), 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Kernel (interpret mode) vs portable oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("D,L,K,W", [(5, 6, 7, 64), (8, 4, 16, 64),
+                                     (12, 9, 5, 128)])
+@pytest.mark.parametrize("active", [0, 3])
+def test_theta_sweep_kernel_matches_portable(D, L, K, W, active):
+    """Interpret-mode kernel ≡ portable mirror on CPU — dense and
+    scheduled (top-A-by-φ-mass) fits, including D not a multiple of 8.
+    Tolerance is a couple of float32 ulps (different XLA graphs)."""
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=D)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(1), est, cfg)
+    wt = serving_active_topics(phi_norm, active) if active else None
+    kw = dict(alpha_m1=cfg.alpha_m1, ev_counts=ev.counts, word_topics=wt,
+              max_sweeps=12, check_every=4)
+    a = kops.infer(est.word_ids, est.counts, theta0, phi_norm,
+                   use_pallas=False, **kw)
+    b = kops.infer(est.word_ids, est.counts, theta0, phi_norm,
+                   interpret=True, **kw)
+    assert int(a.sweeps) == int(b.sweeps) == 12
+    np.testing.assert_allclose(np.asarray(a.theta), np.asarray(b.theta),
+                               rtol=2e-6, atol=1e-5)
+    np.testing.assert_allclose(float(a.est_loglik), float(b.est_loglik),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(a.ev_loglik), float(b.ev_loglik),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.ev_loglik_doc),
+                               np.asarray(b.ev_loglik_doc),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_theta_sweep_doc_padding_bitwise_invisible():
+    """The wrapper's document padding must be bitwise-invisible: a
+    pre-padded batch (zero-count slots) through the same kernel, sliced,
+    gives identical bits to the auto-padded call."""
+    D, L, K, W = 12, 6, 5, 96
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=4)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(0), est, cfg)
+    auto = theta_sweep_pallas(
+        est.word_ids, est.counts, ev.counts, theta0, phi_norm,
+        alpha_m1=cfg.alpha_m1, num_sweeps=3, interpret=True,
+    )
+    Dp = 16
+    pad = ((0, Dp - D), (0, 0))
+    manual = theta_sweep_pallas(
+        jnp.pad(est.word_ids, pad), jnp.pad(est.counts, pad),
+        jnp.pad(ev.counts, pad), jnp.pad(theta0, pad), phi_norm,
+        alpha_m1=cfg.alpha_m1, num_sweeps=3, interpret=True,
+    )
+    for name, x, y in zip(("theta", "est_ll", "ev_ll"), auto, manual):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y)[:D],
+                                      err_msg=name)
+
+
+def test_theta_sweep_lane_padding_masked():
+    """K padded to the lane boundary (compiled-TPU layout) must not leak
+    mass into the padding lanes — φ's zero padding keeps them out."""
+    D, L, K, W = 8, 6, 7, 80
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=3)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(2), est, cfg)
+    ref = kops.infer(est.word_ids, est.counts, theta0, phi_norm,
+                     alpha_m1=cfg.alpha_m1, ev_counts=ev.counts,
+                     max_sweeps=4, check_every=4, use_pallas=False)
+    padded = theta_sweep_pallas(
+        est.word_ids, est.counts, ev.counts, theta0, phi_norm,
+        alpha_m1=cfg.alpha_m1, num_sweeps=4, lane_align=8, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(ref.theta),
+                               np.asarray(padded[0]), rtol=2e-6, atol=1e-6)
+    np.testing.assert_allclose(float(ref.ev_loglik),
+                               float(np.asarray(padded[2]).sum()), rtol=1e-5)
+
+
+def test_theta_sweep_zero_count_docs_inert():
+    """Empty (all-zero-count) documents must keep θ̂ = 0 and contribute
+    zero log-predictive partials."""
+    D, L, K, W = 6, 5, 4, 32
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=7)
+    est = MinibatchData(est.word_ids, est.counts.at[2].set(0.0))
+    ev = MinibatchData(ev.word_ids, ev.counts.at[2].set(0.0))
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(0), est, cfg)
+    r = kops.infer(est.word_ids, est.counts, theta0, phi_norm,
+                   alpha_m1=cfg.alpha_m1, ev_counts=ev.counts,
+                   max_sweeps=4, check_every=4, interpret=True)
+    assert float(jnp.abs(r.theta[2]).sum()) == 0.0
+    assert float(r.ev_loglik_doc[2]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Convergence stop vs the legacy fixed-sweep scan
+# ---------------------------------------------------------------------------
+
+def test_fixed_sweep_equals_legacy_scan():
+    """rel_tol=0 runs exactly max_sweeps and reproduces the legacy dense
+    (D, L, K) fixed-sweep scan to fp tolerance."""
+    D, L, K, W = 10, 8, 6, 120
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=1)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    key = jax.random.PRNGKey(3)
+    res = infer_heldout(key, est, ev, phi_norm, cfg, fit_sweeps=30,
+                        rel_tol=0.0, check_every=10, use_pallas=False)
+    assert int(res.sweeps) == 30
+    rows = em.gather_phi_rows(phi_norm, est.word_ids)
+    legacy = _legacy_fit(key, est, rows, cfg, 30)
+    np.testing.assert_allclose(np.asarray(res.theta), np.asarray(legacy),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("how", ["portable", "interpret"])
+def test_convergence_stop_early_and_close(how):
+    """A loose rel_tol stops before the budget; the stopped θ̂ gives an
+    eq. 21 perplexity within the stop tolerance of the fully-run one."""
+    D, L, K, W = 16, 10, 8, 160
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=2)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    key = jax.random.PRNGKey(0)
+    kw = dict(interpret=True) if how == "interpret" else dict(
+        use_pallas=False)
+    full = infer_heldout(key, est, ev, phi_norm, cfg, fit_sweeps=60,
+                         rel_tol=0.0, check_every=5, **kw)
+    stopped = infer_heldout(key, est, ev, phi_norm, cfg, fit_sweeps=60,
+                            rel_tol=0.01, check_every=5, **kw)
+    assert int(stopped.sweeps) < int(full.sweeps) == 60
+    ntok = float(ev.counts.sum())
+    p_full = float(full.perplexity(ntok))
+    p_stop = float(stopped.perplexity(ntok))
+    assert abs(p_stop - p_full) < 0.02 * p_full, (p_stop, p_full)
+
+
+def test_max_sweeps_check_every_contract():
+    D, L, K, W = 4, 4, 3, 16
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(0), est, cfg)
+    with pytest.raises(ValueError, match="multiple of"):
+        kops.infer(est.word_ids, est.counts, theta0, phi_norm,
+                   alpha_m1=cfg.alpha_m1, max_sweeps=7, check_every=3,
+                   use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# eq. 21 in-kernel partials ≡ the standalone evaluation pass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("how", ["portable", "interpret"])
+def test_eq21_partials_match_standalone_pass(how):
+    D, L, K, W = 14, 8, 6, 100
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=9)
+    key = jax.random.PRNGKey(5)
+    kw = dict(interpret=True) if how == "interpret" else dict(
+        use_pallas=False)
+    ppl = predictive_perplexity(key, est, ev, phi_wk, phi_k, cfg,
+                                fit_sweeps=20, rel_tol=0.0,
+                                check_every=20, **kw)
+    legacy = _legacy_predictive(key, est, ev, phi_wk, phi_k, cfg, 20)
+    np.testing.assert_allclose(float(ppl), float(legacy), rtol=1e-4)
+    # per-document partials are a partition of the scalar
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    res = infer_heldout(key, est, ev, phi_norm, cfg, fit_sweeps=20,
+                        rel_tol=0.0, check_every=20, **kw)
+    np.testing.assert_allclose(float(res.ev_loglik_doc.sum()),
+                               float(res.ev_loglik), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sharded plan: psum plumbing degenerates on a singleton model axis
+# ---------------------------------------------------------------------------
+
+def test_infer_sharded_plan_single_shard_degenerates():
+    """Under a 1-device model axis the plan's psums are identities: the
+    sharded path must equal the plain portable path bitwise-ish."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.types import SweepPlan
+    from repro.parallel.compat import make_mesh, shard_map
+
+    D, L, K, W = 8, 6, 5, 64
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=6)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(1), est, cfg)
+    kw = dict(alpha_m1=cfg.alpha_m1, max_sweeps=8, check_every=4)
+
+    mesh = make_mesh((1,), ("model",))
+
+    def body(wid, est_c, ev_c, theta0, phi_norm):
+        r = kops.infer(wid, est_c, theta0, phi_norm, ev_counts=ev_c,
+                       plan=SweepPlan(axis_name="model"), **kw)
+        return r.theta, r.est_loglik, r.ev_loglik
+
+    theta_s, est_s, ev_s = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(None, "model"), P(None, "model")),
+        out_specs=(P(None, "model"), P(), P()),
+        check=False,
+    ))(est.word_ids, est.counts, ev.counts, theta0, phi_norm)
+
+    ref = kops.infer(est.word_ids, est.counts, theta0, phi_norm,
+                     ev_counts=ev.counts, use_pallas=False, **kw)
+    np.testing.assert_allclose(np.asarray(theta_s), np.asarray(ref.theta),
+                               rtol=2e-6, atol=1e-6)
+    np.testing.assert_allclose(float(ev_s), float(ref.ev_loglik), rtol=1e-5)
+    np.testing.assert_allclose(float(est_s), float(ref.est_loglik),
+                               rtol=1e-5)
+
+
+def test_heldout_perplexity_sharded_runs():
+    """The foem_sharded evaluation hook on a 1×1 mesh: finite, sane, and
+    close to the single-host eq. 21 value (the θ̂ init key stream differs
+    per shard, so this is a convergence check, not bitwise)."""
+    from repro.core.foem_sharded import heldout_perplexity_sharded
+    from repro.core.types import GlobalStats
+    from repro.parallel.compat import make_mesh
+
+    D, L, K, W = 12, 8, 6, 80
+    cfg = LDAConfig(num_topics=K, vocab_size=W, active_topics=2,
+                    topk_shards=0)
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=8)
+    stats = GlobalStats(phi_wk=phi_wk, phi_k=phi_k,
+                        step=jnp.zeros((), jnp.int32))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ppl = heldout_perplexity_sharded(
+        jax.random.PRNGKey(0), est, ev, stats, cfg, mesh, fit_sweeps=30,
+    )
+    ref = predictive_perplexity(
+        jax.random.PRNGKey(0), est, ev, phi_wk, phi_k, cfg, fit_sweeps=30,
+        active_topics=2,
+    )
+    assert np.isfinite(float(ppl))
+    assert 1.0 < float(ppl) < W
+    np.testing.assert_allclose(float(ppl), float(ref), rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# TopicServer round-trip against a memmap-backed store
+# ---------------------------------------------------------------------------
+
+def _trained_store(tmp_path, W, K, seed=0):
+    from repro.core import ParameterStore
+
+    rng = np.random.default_rng(seed)
+    store = ParameterStore(str(tmp_path), num_topics=K, vocab_capacity=W,
+                           buffer_rows=32)
+    phi = rng.gamma(1.0, 1.0, (W, K)).astype(np.float32)
+    store.write_rows(np.arange(W), phi)
+    store.phi_k[:] = phi.sum(0)
+    return store, phi
+
+
+def test_topic_server_roundtrip_and_determinism(tmp_path):
+    from repro.data import synthetic_lda_corpus
+    from repro.launch.serve import TopicServer
+    from repro.sparse.docword import bucketize
+
+    K, W = 6, 200
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    store, phi = _trained_store(tmp_path, W, K)
+    server = TopicServer(store, cfg, fit_sweeps=20, check_every=5)
+    corpus, _ = synthetic_lda_corpus(24, W, 4, mean_doc_len=30, seed=11)
+    w, c = bucketize(corpus, list(range(8)))
+
+    t1 = server.infer(w, c)
+    t2 = server.infer(w, c)                       # identical request
+    np.testing.assert_array_equal(t1, t2)         # the PRNG-reuse fix
+    assert t1.shape == (8, K)
+    np.testing.assert_allclose(t1.sum(-1), 1.0, rtol=1e-4)
+
+    t3 = server.infer(w, c, key=jax.random.PRNGKey(7))
+    t4 = server.infer(w, c, key=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(t3, t4)         # explicit key: same law
+
+    # round-trip: serving the store's rows equals serving the dense φ̂
+    phi_norm = em.normalize_phi(jnp.asarray(phi), jnp.asarray(
+        store.phi_k, jnp.float32), cfg)
+    res = infer_heldout(
+        jax.random.PRNGKey(0), MinibatchData(jnp.asarray(w), jnp.asarray(c)),
+        None, phi_norm, cfg, fit_sweeps=20, check_every=5,
+        use_pallas=False,
+    )
+    direct = np.asarray(em.normalize_theta(res.theta, cfg))
+    np.testing.assert_allclose(t1, direct, rtol=1e-4, atol=1e-5)
+
+
+def test_topic_server_stream_and_evaluate(tmp_path):
+    from repro.data import synthetic_lda_corpus
+    from repro.launch.serve import TopicServer
+    from repro.sparse.docword import bucketize
+
+    K, W = 5, 160
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    store, _ = _trained_store(tmp_path, W, K, seed=3)
+    server = TopicServer(store, cfg, fit_sweeps=20, check_every=5,
+                         active_topics=2)
+    corpus, _ = synthetic_lda_corpus(21, W, 4, mean_doc_len=25, seed=5)
+    ids = list(range(corpus.num_docs))
+
+    seen, thetas = [], []
+    for chunk, theta in server.infer_stream(corpus, ids, batch_size=8):
+        seen.extend(chunk)
+        thetas.append(theta)
+        assert theta.shape[0] == len(chunk)
+    assert seen == ids                            # tail batch included
+    theta_all = np.concatenate(thetas)
+    np.testing.assert_allclose(theta_all.sum(-1), 1.0, rtol=1e-4)
+
+    # lifelong evaluation: eq. 21 on an 80/20 split of the same requests
+    rng = np.random.default_rng(0)
+    w, c = bucketize(corpus, ids[:8])
+    est_c, ev_c = split_heldout_counts(c, rng)
+    theta, ppl = server.evaluate(w, est_c, ev_c)
+    assert theta.shape == (8, K)
+    assert np.isfinite(ppl) and 1.0 < ppl < W
