@@ -106,6 +106,40 @@ def bench_scheduled(batch, local, phi, ptot, cfg, reps, active_topics):
     return before, after
 
 
+def bench_sanitizer(batch, local, phi, ptot, cfg, reps):
+    """Numerical-invariant sanitizer overhead: the fused dense sweep under
+    ``checkify.checkify(jit(...))`` with ``debug_checks`` off vs on — the
+    realistic cost of running debug mode in a training loop."""
+    from jax.experimental import checkify
+    from repro.kernels import ops as kops
+
+    W = phi.shape[0]
+
+    def sweep_fn(debug):
+        @checkify.checkify
+        @jax.jit
+        def run(mu, theta, phi, ptot):
+            r = kops.sweep(
+                batch.word_ids, batch.counts, mu, theta, phi, ptot,
+                alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1,
+                wb=W * cfg.beta_m1, unroll=cfg.sweep_unroll,
+                use_pallas=False, debug_checks=debug,
+            )
+            return r.theta, r.phi_wk, r.phi_k
+        def call():
+            err, out = run(local.mu, local.theta_dk, phi, ptot)
+            return out
+        return call
+
+    off = _timeit(sweep_fn(False), reps)
+    on = _timeit(sweep_fn(True), reps)
+    return {
+        "debug_off_s": off,
+        "debug_on_s": on,
+        "overhead_x": on / max(off, 1e-12),
+    }
+
+
 MP = 4              # model-axis width of the sharded suite's simulated mesh
 _SHARDED_MARK = "SHARDED_JSON:"
 
@@ -204,7 +238,7 @@ def main(rows=None, argv=None):
                     help="small smoke cell (CI)")
     ap.add_argument("--suite",
                     choices=("all", "full", "scheduled", "sharded",
-                             "sharded-exec"),
+                             "sanitizer", "sharded-exec"),
                     default="all", help="which sweep variant(s) to time")
     ap.add_argument("--out", default=None,
                     help="output path; quick/partial runs default to "
@@ -272,6 +306,18 @@ def main(rows=None, argv=None):
             "active_topics": A,
         }
         report.append(f"scheduled {s_speedup:.2f}x")
+
+    if args.suite in ("all", "sanitizer"):
+        sz = bench_sanitizer(batch, local, phi, ptot, cfg, reps)
+        rows.append(csv_row(f"sweep_sanitizer_off_{cell}",
+                            sz["debug_off_s"] * 1e6,
+                            "debug_checks=off;overhead=1.00"))
+        rows.append(csv_row(f"sweep_sanitizer_on_{cell}",
+                            sz["debug_on_s"] * 1e6,
+                            f"debug_checks=on;"
+                            f"overhead={sz['overhead_x']:.2f}"))
+        payload["sanitizer_overhead"] = sz
+        report.append(f"sanitizer {sz['overhead_x']:.2f}x overhead")
 
     if args.suite in ("all", "sharded"):
         sh = _bench_sharded_subprocess(args.quick)

@@ -1,0 +1,81 @@
+"""Static kernel-contract analysis + runtime numerical sanitizer.
+
+Three layers, one budget model:
+
+* :mod:`repro.analysis.budget` — the shared TPU budget model (VMEM
+  live-set accounting over (8, 128)-tiled blocks, SMEM scalar-prefetch
+  bytes, the E-step tile-sizing rule).  The kernels' ``fits_vmem``
+  heuristics all delegate here.
+* :mod:`repro.analysis.contracts` — one declarative :class:`LaunchContract`
+  per Pallas kernel: grid arithmetic, BlockSpecs, dtypes, aliases and
+  scalar prefetch as data, checkable without tracing anything.
+* :mod:`repro.analysis.checks` — the static analyzer:
+  :func:`check_all` sweeps contracts × shape cells against the budgets and
+  structural rules (lane alignment, alias consistency/donation coverage,
+  index-map bounds); :func:`assert_reference_cells` is the CI gate.
+* :mod:`repro.analysis.validate` — eager argument-contract validation at
+  the ``ops.sweep``/``ops.infer`` boundary (:class:`ContractError`).
+* :mod:`repro.analysis.sanitizer` — opt-in ``checkify`` numerical
+  invariants (simplex, mass conservation, padding inertness), behind
+  ``cfg.debug_checks``.  Imported lazily — everything else here is
+  jax-free and safe for tooling (the repo lint) to import.
+
+CLI: ``python -m repro.analysis --all`` prints the fit table.
+"""
+from repro.analysis.budget import (
+    DEFAULT_SMEM_BUDGET,
+    DEFAULT_VMEM_BUDGET,
+    ESTEP_TILE_BUDGET,
+    Cell,
+    estep_token_block,
+)
+from repro.analysis.checks import (
+    REFERENCE_CELLS,
+    CheckReport,
+    assert_reference_cells,
+    check_all,
+    check_cell,
+    default_cells,
+    format_reports,
+    kernel_fits_vmem,
+    summarize,
+)
+from repro.analysis.contracts import KERNEL_CONTRACTS, LaunchContract
+from repro.analysis.validate import (
+    ContractError,
+    validate_infer_args,
+    validate_sweep_args,
+)
+
+__all__ = [
+    "Cell",
+    "CheckReport",
+    "ContractError",
+    "DEFAULT_SMEM_BUDGET",
+    "DEFAULT_VMEM_BUDGET",
+    "ESTEP_TILE_BUDGET",
+    "KERNEL_CONTRACTS",
+    "LaunchContract",
+    "REFERENCE_CELLS",
+    "assert_reference_cells",
+    "check_all",
+    "check_cell",
+    "default_cells",
+    "estep_token_block",
+    "format_reports",
+    "kernel_fits_vmem",
+    "sanitizer",
+    "summarize",
+    "validate_infer_args",
+    "validate_sweep_args",
+]
+
+
+def __getattr__(name):
+    # sanitizer pulls in jax; keep `import repro.analysis` jax-free for
+    # host-side tooling (the repo lint, CI table generation).
+    if name == "sanitizer":
+        import repro.analysis.sanitizer as sanitizer
+
+        return sanitizer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

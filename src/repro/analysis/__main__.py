@@ -1,0 +1,80 @@
+"""CLI for the static kernel-contract analyzer.
+
+Usage::
+
+    python -m repro.analysis --all            # default + reference cells
+    python -m repro.analysis --reference      # reference cells only (CI gate)
+    python -m repro.analysis --cell D=256,L=64,K=128,W_s=8192,A=16
+    python -m repro.analysis --all --lane-align 1   # interpret-mode layout
+
+Exit status is non-zero iff any (kernel, cell) report fails — budgets or
+structural contract checks — so CI can gate on it directly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.budget import Cell
+from repro.analysis.checks import (
+    REFERENCE_CELLS,
+    check_cell,
+    default_cells,
+    format_reports,
+    summarize,
+)
+
+
+def _parse_cell(text: str) -> Cell:
+    fields = {}
+    for part in text.split(","):
+        key, _, val = part.partition("=")
+        fields[key.strip()] = int(val)
+    try:
+        return Cell(**fields)
+    except TypeError as e:
+        raise SystemExit(
+            f"bad --cell {text!r} (want D=..,L=..,K=..,W_s=..[,A=..]): {e}"
+        )
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static VMEM/SMEM/contract analysis of the Pallas "
+        "kernels at a grid of problem-shape cells.",
+    )
+    p.add_argument("--all", action="store_true",
+                   help="sweep the default grid plus every reference cell")
+    p.add_argument("--reference", action="store_true",
+                   help="reference (BENCH_*/ROADMAP) cells only — the CI gate")
+    p.add_argument("--cell", action="append", default=[],
+                   metavar="D=..,L=..,K=..,W_s=..,A=..",
+                   help="add an explicit cell (repeatable)")
+    p.add_argument("--lane-align", type=int, default=128,
+                   help="topic-lane padding the wrappers apply "
+                   "(128 compiled, 1 interpret; default 128)")
+    p.add_argument("--fail-only", action="store_true",
+                   help="print only failing reports")
+    args = p.parse_args(argv)
+
+    if args.reference:
+        cells = list(REFERENCE_CELLS)
+    elif args.all or not args.cell:
+        cells = default_cells()    # includes the reference cells
+    else:
+        cells = []
+    cells += [(f"cli {c}", _parse_cell(c)) for c in args.cell]
+
+    reports = []
+    for label, cell in cells:
+        reports += check_cell(cell, label=label, lane_align=args.lane_align)
+    shown = [r for r in reports if not r.ok] if args.fail_only else reports
+    if shown:
+        print(format_reports(shown))
+    print(summarize(reports))
+    return 0 if all(r.ok for r in reports) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,390 @@
+"""Declarative launch contracts for every registered Pallas kernel.
+
+Each :class:`LaunchContract` reproduces, as data, exactly what its kernel's
+``pl.pallas_call`` site does at a given :class:`~repro.analysis.budget.Cell`:
+the grid arithmetic, every BlockSpec (block shape, full operand shape, the
+range of the index map over the grid, whether the block is VMEM-carried),
+the scalar-prefetch operands, dtypes, and ``input_output_aliases`` in the
+kernel's flat operand numbering.  ``analysis.checks`` verifies the spec
+against the shared budget model; ``tests/test_analysis.py`` verifies the
+spec against the kernel itself (shapes of a real interpret-mode launch).
+
+Contracts are registered at the launch's **high-water** static
+configuration — ``emit_loglik=True``, ``double_buffer=True``, the
+scheduled variant where one exists — because that is the configuration the
+budget must hold for.
+
+This module is import-light on purpose (no jax): the repo lint and the
+``python -m repro.analysis`` CLI load it without touching a backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+from repro.analysis.budget import (
+    LANE,
+    Block,
+    Cell,
+    LaunchSpec,
+    Scalar,
+    estep_token_block,
+    round_up,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchContract:
+    """One kernel's declarative launch contract.
+
+    ``build(cell, lane_align)`` instantiates the :class:`LaunchSpec` at a
+    static shape; ``module``/``entry`` name the Python call site the
+    contract mirrors; ``equations`` the paper equations the kernel
+    implements (the lint checks the module documents them).
+    """
+
+    name: str
+    module: str
+    entry: str
+    equations: Tuple[str, ...]
+    description: str
+    build: Callable[..., LaunchSpec]
+
+    def spec(self, cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+        return self.build(cell, lane_align)
+
+
+def _pads(cell: Cell, lane_align: int) -> Tuple[int, int]:
+    return cell.padded(lane_align)
+
+
+# ---------------------------------------------------------------------------
+# gs_sweep — fused dense column-serial Gauss-Seidel sweep
+# ---------------------------------------------------------------------------
+
+def _gs_sweep_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+    Dp, Kp = _pads(cell, lane_align)
+    L, W = cell.L, cell.W_s
+    carried_in = dict(carried=True)
+    return LaunchSpec(
+        kernel="gs_sweep",
+        grid=(2 * L,),                      # emit_loglik high-water mark
+        scalars=(
+            Scalar("word_ids", (Dp, L)),
+            Scalar("wb", (1,), dtype="float32"),
+        ),
+        inputs=(
+            Block("counts", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("mu_in", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("theta_in", (Dp, Kp), (Dp, Kp), (0, 0), **carried_in),
+            Block("phi_in", (W, Kp), (W, Kp), (0, 0), **carried_in),
+            Block("ptot_in", (1, Kp), (1, Kp), (0, 0), **carried_in),
+        ),
+        outputs=(
+            Block("theta_out", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("phi_out", (W, Kp), (W, Kp), (0, 0), carried=True),
+            Block("ptot_out", (1, Kp), (1, Kp), (0, 0), carried=True),
+            Block("mu_out", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("res_out", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("loglik", (1, 1), (L, 1), (L - 1, 0)),
+        ),
+        scratch=(
+            Block("rows_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+        ),
+        # flat operands: wid(0) wb(1) counts(2) mu(3) theta(4) phi(5) ptot(6)
+        aliases={4: 0, 5: 1, 6: 2},
+    )
+
+
+# ---------------------------------------------------------------------------
+# scheduled_sweep — fused §3.1 scheduled sparse sweep
+# ---------------------------------------------------------------------------
+
+def _scheduled_sweep_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+    Dp, Kp = _pads(cell, lane_align)
+    L, W, A = cell.L, cell.W_s, max(cell.A, 1)
+    return LaunchSpec(
+        kernel="scheduled_sweep",
+        grid=(2 * L,),
+        scalars=(
+            Scalar("word_ids", (Dp, L)),
+            Scalar("word_topics", (W, A)),
+            Scalar("wb", (1,), dtype="float32"),
+        ),
+        inputs=(
+            Block("counts", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("token_active", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("mu_in", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("theta_in", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("phi_in", (W, Kp), (W, Kp), (0, 0), carried=True),
+            Block("ptot_in", (1, Kp), (1, Kp), (0, 0), carried=True),
+        ),
+        outputs=(
+            Block("theta_out", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("phi_out", (W, Kp), (W, Kp), (0, 0), carried=True),
+            Block("ptot_out", (1, Kp), (1, Kp), (0, 0), carried=True),
+            Block("mu_out", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("res_out", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("loglik", (1, 1), (L, 1), (L - 1, 0)),
+        ),
+        scratch=(
+            Block("rows_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+            Block("mask_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+        ),
+        # flat: wid(0) wtop(1) wb(2) counts(3) act(4) mu(5) theta(6) phi(7)
+        #       ptot(8)
+        aliases={6: 0, 7: 1, 8: 2},
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharded_sweep — two-phase probe + fold (scheduled variant = high water)
+# ---------------------------------------------------------------------------
+
+def _sharded_probe_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+    Dp, Kp = _pads(cell, lane_align)
+    L, W, A = cell.L, cell.W_s, max(cell.A, 1)
+    return LaunchSpec(
+        kernel="sharded_probe",
+        grid=(L,),
+        scalars=(
+            Scalar("word_ids", (Dp, L)),
+            Scalar("word_topics", (W, A)),
+            Scalar("wb", (1,), dtype="float32"),
+        ),
+        inputs=(
+            Block("counts", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("token_active", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("mu_in", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("theta_in", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("phi_in", (W, Kp), (W, Kp), (0, 0), carried=True),
+            Block("ptot_in", (1, Kp), (1, Kp), (0, 0), carried=True),
+        ),
+        outputs=(
+            Block("s_out", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("pm_out", (Dp, 1), (Dp, L), (0, L - 1)),
+        ),
+        scratch=(
+            Block("rows_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+            Block("mask_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+        ),
+        aliases={},
+    )
+
+
+def _sharded_fold_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+    Dp, Kp = _pads(cell, lane_align)
+    L, W, A = cell.L, cell.W_s, max(cell.A, 1)
+    return LaunchSpec(
+        kernel="sharded_fold",
+        grid=(2 * L,),                      # emit_loglik high-water mark
+        scalars=(
+            Scalar("word_ids", (Dp, L)),
+            Scalar("word_topics", (W, A)),
+            Scalar("wb", (1,), dtype="float32"),
+        ),
+        inputs=(
+            Block("counts", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("token_active", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("remainder", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("prev_mass", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("mu_in", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("theta_in", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("phi_in", (W, Kp), (W, Kp), (0, 0), carried=True),
+            Block("ptot_in", (1, Kp), (1, Kp), (0, 0), carried=True),
+        ),
+        outputs=(
+            Block("theta_out", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("phi_out", (W, Kp), (W, Kp), (0, 0), carried=True),
+            Block("ptot_out", (1, Kp), (1, Kp), (0, 0), carried=True),
+            Block("mu_out", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("res_out", (1, Dp, Kp), (L, Dp, Kp), (L - 1, 0, 0)),
+            Block("live_mass", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("loglik_u", (Dp, 1), (Dp, L), (0, L - 1)),
+        ),
+        scratch=(
+            Block("rows_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+            Block("mask_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+        ),
+        # flat: wid(0) wtop(1) wb(2) counts(3) act(4) rem(5) pm(6) mu(7)
+        #       theta(8) phi(9) ptot(10)
+        aliases={8: 0, 9: 1, 10: 2},
+    )
+
+
+# ---------------------------------------------------------------------------
+# theta_sweep — fused frozen-φ inference (θ-only fixed point)
+# ---------------------------------------------------------------------------
+
+#: Chunk length ops.infer launches between stop-rule checks (grid sizing
+#: only; the VMEM live set is independent of the sweep count — §2.4).
+THETA_CHUNK_SWEEPS = 10
+
+
+def _theta_sweep_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+    Dp, Kp = _pads(cell, lane_align)
+    L, W, A = cell.L, cell.W_s, max(cell.A, 1)
+    return LaunchSpec(
+        kernel="theta_sweep",
+        grid=((THETA_CHUNK_SWEEPS + 1) * L,),   # sweeps + eq. 21 columns
+        scalars=(
+            Scalar("word_ids", (Dp, L)),
+            Scalar("word_topics", (W, A)),
+        ),
+        inputs=(
+            Block("est_counts", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("ev_counts", (Dp, 1), (Dp, L), (0, L - 1)),
+            Block("theta_in", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("phi_norm", (W, Kp), (W, Kp), (0, 0), carried=True),
+        ),
+        outputs=(
+            Block("theta_out", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+            Block("est_ll", (1, Dp, 1), (L, Dp, 1), (L - 1, 0, 0)),
+            Block("ev_ll", (1, Dp, 1), (L, Dp, 1), (L - 1, 0, 0)),
+        ),
+        scratch=(
+            Block("rows_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+            Block("acc_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+            Block("mask_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+        ),
+        # flat: wid(0) wtop(1) est(2) ev(3) theta(4) phi(5)
+        aliases={4: 0},
+    )
+
+
+# ---------------------------------------------------------------------------
+# foem_estep / topk_estep — token-block E-step tiles
+# ---------------------------------------------------------------------------
+
+def _foem_estep_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+    Kp = round_up(cell.K, lane_align)
+    T = cell.D * cell.L                 # standalone worst case: all tokens
+    BT = min(estep_token_block(Kp), round_up(T, 8))
+    Tp = round_up(T, BT)
+    tile = dict(block_shape=(BT, Kp), full_shape=(Tp, Kp),
+                max_index=(Tp // BT - 1, 0))
+    col = dict(block_shape=(BT, 1), full_shape=(Tp, 1),
+               max_index=(Tp // BT - 1, 0))
+    return LaunchSpec(
+        kernel="foem_estep",
+        grid=(Tp // BT,),
+        scalars=(),
+        inputs=(
+            Block("theta_rows", **tile),
+            Block("phi_rows", **tile),
+            Block("phi_tot", (1, Kp), (1, Kp), (0, 0), carried=True),
+            Block("exclude", **tile),
+            Block("mu_old", **tile),
+            Block("counts", **col),
+            Block("wb", (1, 1), (1, 1), (0, 0), carried=True),
+        ),
+        outputs=(
+            Block("mu_new", **tile),
+            Block("residual", **tile),
+        ),
+        scratch=(),
+        aliases={},
+    )
+
+
+def _topk_estep_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+    # A active lanes, padded to the lane boundary by the wrapper (ops.py)
+    Ap = round_up(max(cell.A, 1), lane_align)
+    T = cell.D * cell.L
+    BT = min(256, round_up(T, 8))
+    Tp = round_up(T, BT)
+    tile = dict(block_shape=(BT, Ap), full_shape=(Tp, Ap),
+                max_index=(Tp // BT - 1, 0))
+    col = dict(block_shape=(BT, 1), full_shape=(Tp, 1),
+               max_index=(Tp // BT - 1, 0))
+    return LaunchSpec(
+        kernel="topk_estep",
+        grid=(Tp // BT,),
+        scalars=(),
+        inputs=(
+            Block("theta_a", **tile),
+            Block("phi_a", **tile),
+            Block("ptot_a", **tile),
+            Block("mu_prev_a", **tile),
+            Block("counts", **col),
+            Block("active", **col),
+            Block("wb", (1, 1), (1, 1), (0, 0), carried=True),
+        ),
+        outputs=(
+            Block("mu_new", **tile),
+            Block("delta", **tile),
+        ),
+        scratch=(),
+        aliases={},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+KERNEL_CONTRACTS: Dict[str, LaunchContract] = {
+    c.name: c
+    for c in (
+        LaunchContract(
+            name="gs_sweep",
+            module="repro.kernels.gs_sweep",
+            entry="gs_sweep_pallas",
+            equations=("eq. 13", "eq. 36", "eq. 3"),
+            description="fused dense column-serial Gauss-Seidel sweep",
+            build=_gs_sweep_spec,
+        ),
+        LaunchContract(
+            name="scheduled_sweep",
+            module="repro.kernels.scheduled_sweep",
+            entry="scheduled_sweep_pallas",
+            equations=("eq. 13", "eq. 38", "eq. 36", "eq. 3"),
+            description="fused scheduled sparse sweep (§3.1 active sets)",
+            build=_scheduled_sweep_spec,
+        ),
+        LaunchContract(
+            name="sharded_probe",
+            module="repro.kernels.sharded_sweep",
+            entry="sharded_probe_pallas",
+            equations=("eq. 13", "eq. 38"),
+            description="two-phase sharded sweep, phase A (normaliser probe)",
+            build=_sharded_probe_spec,
+        ),
+        LaunchContract(
+            name="sharded_fold",
+            module="repro.kernels.sharded_sweep",
+            entry="sharded_fold_pallas",
+            equations=("eq. 13", "eq. 38", "eq. 36", "eq. 3"),
+            description="two-phase sharded sweep, phase C (Gauss-Seidel fold)",
+            build=_sharded_fold_spec,
+        ),
+        LaunchContract(
+            name="theta_sweep",
+            module="repro.kernels.theta_sweep",
+            entry="theta_sweep_pallas",
+            equations=("eq. 11", "eq. 21"),
+            description="fused frozen-φ inference fixed point (§2.4)",
+            build=_theta_sweep_spec,
+        ),
+        LaunchContract(
+            name="foem_estep",
+            module="repro.kernels.foem_estep",
+            entry="fused_estep_pallas",
+            equations=("eq. 11", "eq. 13", "eq. 36"),
+            description="fused dense E-step token-block tile",
+            build=_foem_estep_spec,
+        ),
+        LaunchContract(
+            name="topk_estep",
+            module="repro.kernels.topk_estep",
+            entry="topk_estep_pallas",
+            equations=("eq. 38",),
+            description="scheduled sparse E-step token-block tile",
+            build=_topk_estep_spec,
+        ),
+    )
+}
+
+#: Modules allowed to contain ``pl.BlockSpec`` literals (the lint's
+#: blockspec-registry rule): exactly the registered kernel modules.
+CONTRACT_MODULES = tuple(sorted({c.module for c in KERNEL_CONTRACTS.values()}))

@@ -1,0 +1,279 @@
+"""Runtime numerical-invariant sanitizer for the sweep/inference engine.
+
+Opt-in ``checkify``-wired assertions of the EM invariants that make the
+paper's convergence argument valid — the quantities the kernels must
+conserve but that no shape check can see:
+
+* **μ simplex / eq. 38 mass conservation** — a dense sweep's
+  responsibilities sum to 1 per token; a scheduled sweep preserves the
+  active set's previous mass (eq. 38); under a sharded plan both hold
+  *globally* (psum over the model axis), which is exactly the two-phase
+  engine's phase-D exact-renorm guarantee at any model-parallel degree.
+* **θ̂ row mass = column count** — Σ_k θ̂_d equals the document's token
+  count Σ_l x_{w,d} (the E-step fold moves mass, never creates it).
+* **φ̂ totals conserved** — Σ_k φ̂(k) is unchanged by a sweep (per-token
+  Δ sums to zero), and Δφ̂(k) moves in lockstep with ΔΣ_w φ̂_w(k).  The
+  delta form is deliberate: the streaming trainer sweeps a local
+  (W_s, K) row slice against the *global* (K,) totals, so the absolute
+  identity φ̂(k) = Σ_w φ̂_w(k) does not hold there.
+* **non-negativity** of every sufficient statistic and responsibility.
+* **finiteness** of the eq. 3 log-likelihood, eq. 36 residuals and
+  eq. 38 partials (NaN poisoning of the stop rule is otherwise silent).
+* **padding inertness** — zero-count token slots and (scheduled)
+  λ_w-inactive slots must carry bitwise-zero residual; mass leaking into
+  padding is how a mis-sized lane mask first manifests.
+
+Wiring: ``ops.sweep(..., debug_checks=True)`` / ``ops.infer(...,
+debug_checks=True)`` (threaded from ``LDAConfig.debug_checks``) call
+:func:`sweep_invariants` / :func:`infer_invariants` on their results.
+Called eagerly the checks raise ``checkify.JaxRuntimeError`` immediately;
+under ``jax.jit`` the caller must functionalize with
+``checkify.checkify(fn)`` and ``err.throw()`` (jax refuses an
+un-functionalized traced check with a clear error).  The checks are
+shard_map-compatible: pass ``axis_name`` and the mass invariants reduce
+over the mesh axis before comparing.
+
+Every message is prefixed ``sanitizer:`` and each invariant has a
+fault-injection test in ``tests/test_sanitizer.py`` proving it fires.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import checkify
+
+#: Default relative tolerance for the float32 mass-conservation checks.
+DEFAULT_TOL = 1e-3
+
+
+def _psum(x, axis_name):
+    return lax.psum(x, axis_name) if axis_name else x
+
+
+def _close(a, b, tol):
+    """Scale-aware |a-b| bound: tolerance grows with the masses compared."""
+    return jnp.all(jnp.abs(a - b) <= tol * (jnp.abs(a) + jnp.abs(b) + 1.0))
+
+
+def check_finite(x: jax.Array, what: str) -> None:
+    checkify.check(
+        jnp.all(jnp.isfinite(x)), "sanitizer: non-finite values in " + what
+    )
+
+
+def check_nonneg(x: jax.Array, what: str, tol: float = DEFAULT_TOL) -> None:
+    checkify.check(
+        jnp.all(x >= -tol), "sanitizer: negative values in " + what
+    )
+
+
+def check_mu_simplex(
+    mu: jax.Array,
+    counts: jax.Array,
+    *,
+    axis_name: Optional[str] = None,
+    tol: float = DEFAULT_TOL,
+) -> None:
+    """Dense sweep: responsibilities of counted tokens sum to 1 per token.
+
+    Under a sharded plan each shard holds a topic slice, so the row sum is
+    a psum over ``axis_name`` — this is the phase-D exact-renorm claim.
+    """
+    mass = _psum(mu.sum(-1), axis_name)
+    ok = jnp.where(counts > 0, jnp.abs(mass - 1.0), 0.0)
+    checkify.check(
+        jnp.all(ok <= tol),
+        "sanitizer: mu rows of counted tokens do not sum to 1 "
+        "(column-simplex violated)",
+    )
+
+
+def check_active_mass(
+    mu_new: jax.Array,
+    mu_old: jax.Array,
+    mask: jax.Array,
+    *,
+    axis_name: Optional[str] = None,
+    tol: float = DEFAULT_TOL,
+) -> None:
+    """Scheduled sweep: eq. 38 preserves the active set's previous mass,
+    and off-active entries keep μ_old unchanged."""
+    new = _psum((mu_new * mask).sum(-1), axis_name)
+    old = _psum((mu_old * mask).sum(-1), axis_name)
+    checkify.check(
+        jnp.all(jnp.abs(new - old) <= tol * (old + 1.0)),
+        "sanitizer: eq. 38 active-set mass not preserved across the sweep",
+    )
+    off = (1.0 - mask) * (mu_new - mu_old)
+    checkify.check(
+        jnp.all(jnp.abs(off) <= tol),
+        "sanitizer: inactive (token, topic) entries did not keep mu_old",
+    )
+
+
+def check_theta_row_mass(
+    theta: jax.Array,
+    counts: jax.Array,
+    *,
+    axis_name: Optional[str] = None,
+    tol: float = DEFAULT_TOL,
+) -> None:
+    """θ̂ row mass equals the document's token count (Σ_l counts[d, l])."""
+    row = _psum(theta.sum(-1), axis_name)
+    target = counts.sum(-1)
+    checkify.check(
+        _close(row, target, tol),
+        "sanitizer: theta row mass differs from the document token count",
+    )
+
+
+def check_phi_totals(
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    phi_wk_before: jax.Array,
+    phi_k_before: jax.Array,
+    *,
+    axis_name: Optional[str] = None,
+    tol: float = DEFAULT_TOL,
+) -> None:
+    """φ̂(k) moves in lockstep with φ̂'s column sums; total mass conserved.
+
+    The delta form — Δcolsum(φ̂) ≈ Δφ̂(k) per topic — is the invariant
+    that holds in *every* view the sweep engine sees: in the streaming
+    path φ̂ is the minibatch's local (W_s, K) row slice while φ̂(k) is
+    the global topic total, so the absolute identity φ̂(k) = colsum(φ̂)
+    is deliberately NOT asserted.  The per-topic lockstep check is
+    shard-local (each shard owns whole topic columns); total
+    conservation only holds globally under a topic-sharded plan — mass
+    legitimately migrates between topic shards — so the totals are
+    psum'd over ``axis_name`` before comparing.
+    """
+    d_col = phi_wk.sum(0) - phi_wk_before.sum(0)
+    d_k = phi_k - phi_k_before
+    checkify.check(
+        _close(d_col, d_k, tol),
+        "sanitizer: phi_k deltas inconsistent with column sums of phi_wk",
+    )
+    checkify.check(
+        _close(
+            _psum(phi_k.sum(), axis_name),
+            _psum(phi_k_before.sum(), axis_name),
+            tol,
+        ),
+        "sanitizer: total phi mass not conserved across the sweep",
+    )
+
+
+def check_padding_inert(
+    residual: jax.Array,
+    counts: jax.Array,
+    token_active: Optional[jax.Array] = None,
+) -> None:
+    """Zero-count (padding) slots — and λ_w-inactive slots — must carry
+    bitwise-zero residual: mass leaking into padding is a lane-mask bug."""
+    dead = counts[..., None] == 0
+    if token_active is not None:
+        dead = dead | ~token_active[..., None]
+    leaked = jnp.where(dead, residual, 0.0)
+    checkify.check(
+        jnp.all(leaked == 0.0),
+        "sanitizer: nonzero residual on zero-count/inactive padding slots",
+    )
+
+
+def sweep_invariants(
+    result,
+    *,
+    counts: jax.Array,
+    mu_before: jax.Array,
+    phi_wk_before: jax.Array,
+    phi_k_before: jax.Array,
+    word_topics: Optional[jax.Array] = None,
+    token_active: Optional[jax.Array] = None,
+    word_ids: Optional[jax.Array] = None,
+    axis_name: Optional[str] = None,
+    tol: float = DEFAULT_TOL,
+) -> None:
+    """All post-sweep invariants of one ``ops.sweep`` result.
+
+    ``result`` is a ``core.types.SweepResult``; ``mu_before``/
+    ``phi_wk_before``/``phi_k_before`` the corresponding inputs.
+    ``word_topics`` +
+    ``token_active`` (+ ``word_ids`` to expand the per-word active sets)
+    switch the mass checks to the scheduled eq. 38 form.  ``axis_name``
+    reduces the mass invariants over the mesh axis (two-phase sharded
+    path) before comparing — the exact-renorm correctness check.
+    """
+    for name, val in (
+        ("mu", result.mu),
+        ("theta", result.theta),
+        ("phi_wk", result.phi_wk),
+        ("phi_k", result.phi_k),
+        ("residual (eq. 36)", result.residual),
+    ):
+        check_finite(val, name)
+        check_nonneg(val, name, tol)
+    if result.loglik is not None:
+        check_finite(result.loglik, "loglik (eq. 3)")
+
+    scheduled = word_topics is not None
+    if scheduled:
+        mask = jnp.zeros_like(result.phi_wk)
+        mask = jnp.put_along_axis(mask, word_topics, 1.0, axis=-1,
+                                  inplace=False)
+        mask = jnp.take(mask, word_ids, axis=0)
+        if token_active is not None:
+            mask = mask * token_active.astype(mask.dtype)[..., None]
+        check_active_mass(
+            result.mu, mu_before, mask, axis_name=axis_name, tol=tol
+        )
+    else:
+        check_mu_simplex(result.mu, counts, axis_name=axis_name, tol=tol)
+
+    check_theta_row_mass(
+        result.theta, counts, axis_name=axis_name, tol=tol
+    )
+    check_phi_totals(
+        result.phi_wk, result.phi_k, phi_wk_before, phi_k_before,
+        axis_name=axis_name, tol=tol,
+    )
+    check_padding_inert(result.residual, counts, token_active)
+
+
+def infer_invariants(
+    result,
+    *,
+    est_counts: jax.Array,
+    axis_name: Optional[str] = None,
+    tol: float = DEFAULT_TOL,
+) -> None:
+    """All post-inference invariants of one ``ops.infer`` result.
+
+    ``result`` is a ``core.types.InferResult``: θ̂ must be finite,
+    non-negative, with row mass equal to the estimation-split token count
+    (θ̂ is a fold of simplex responsibilities), and both split
+    log-likelihoods must be finite and non-positive (a token's predictive
+    likelihood eq. 21 cannot exceed 1).
+    """
+    check_finite(result.theta, "theta")
+    check_nonneg(result.theta, "theta", tol)
+    check_theta_row_mass(
+        result.theta, est_counts, axis_name=axis_name, tol=tol
+    )
+    for name, val in (
+        ("est_loglik (eq. 3)", result.est_loglik),
+        ("ev_loglik (eq. 21)", result.ev_loglik),
+        ("ev_loglik_doc", result.ev_loglik_doc),
+    ):
+        check_finite(val, name)
+    checkify.check(
+        result.est_loglik <= tol,
+        "sanitizer: positive estimation-split log-likelihood",
+    )
+    checkify.check(
+        result.ev_loglik <= tol,
+        "sanitizer: positive evaluation-split log-likelihood",
+    )

@@ -1,0 +1,208 @@
+"""Eager argument-contract validation for the ``ops.sweep``/``ops.infer``
+dispatch boundary.
+
+The Pallas launches behind the dispatch have unforgiving contracts — donated
+(aliased) buffers must match the output shape/dtype exactly, grids are
+derived from ``word_ids.shape``, and the compiled path assumes the sublane
+layout the wrappers produce.  Violations surface as trace-time
+``XlaRuntimeError``/shape errors deep inside ``pallas_call``, five frames
+away from the caller's actual mistake.  This module checks the same
+contracts *eagerly* at the dispatch boundary and raises
+:class:`ContractError` with the caller's vocabulary (argument names, not
+block indices) before any tracing happens.
+
+Validation is shape/dtype-only (never reads array values), so it is free
+to run unconditionally — including under ``jit``, where shapes are static.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.analysis.budget import SUBLANE
+
+
+class ContractError(ValueError):
+    """An ``ops.sweep``/``ops.infer`` argument violates a launch contract."""
+
+
+def _require(ok: bool, msg: str) -> None:
+    if not ok:
+        raise ContractError(msg)
+
+
+def _is_int(x) -> bool:
+    return np.issubdtype(np.dtype(x.dtype), np.integer)
+
+
+def _is_float(x) -> bool:
+    return np.issubdtype(np.dtype(x.dtype), np.floating)
+
+
+def _check_plan(plan) -> None:
+    if plan is None:
+        return
+    # SweepPlan.__post_init__ already vets ``impl``; the axis is our job.
+    axis = plan.axis_name
+    _require(
+        axis is None or (isinstance(axis, str) and axis),
+        f"SweepPlan.axis_name must be None or a non-empty mesh axis name, "
+        f"got {axis!r}",
+    )
+
+
+def _check_word_topics(word_topics, num_rows: int, num_topics: int) -> None:
+    if word_topics is None:
+        return
+    _require(
+        word_topics.ndim == 2,
+        f"word_topics must be (W_s, A) per-word active topic sets, got "
+        f"shape {tuple(word_topics.shape)}",
+    )
+    _require(
+        _is_int(word_topics),
+        f"word_topics must be an integer array, got dtype "
+        f"{word_topics.dtype}",
+    )
+    _require(
+        word_topics.shape[0] == num_rows,
+        f"word_topics rows ({word_topics.shape[0]}) must match the phi "
+        f"working-set rows W_s ({num_rows})",
+    )
+    _require(
+        word_topics.shape[1] <= num_topics,
+        f"word_topics active set A ({word_topics.shape[1]}) cannot exceed "
+        f"K ({num_topics})",
+    )
+
+
+def _check_sublane(num_rows: int, use_pallas, interpret: bool,
+                   what: str) -> None:
+    """The compiled kernels carry the (W_s, K) working set as whole-array
+    blocks; Mosaic requires the second-minor extent on the f32 sublane
+    boundary.  The wrappers pad D and K but deliberately not W_s (the
+    sharded engine's row slices must stay exact), so an explicitly forced
+    compiled launch with a ragged W_s is a contract violation — refuse it
+    here instead of deep inside Mosaic.  (The auto path simply falls back
+    to the portable sweep; interpret mode has no layout constraint.)"""
+    if use_pallas is True and not interpret and num_rows % SUBLANE:
+        raise ContractError(
+            f"{what}: the phi working set has W_s = {num_rows} rows, not a "
+            f"multiple of the {SUBLANE}-row f32 sublane tile required by "
+            f"the compiled kernel; pad the vocab shard to a multiple of "
+            f"{SUBLANE} or drop use_pallas=True"
+        )
+
+
+def validate_sweep_args(
+    word_ids, counts, mu, theta, phi_wk, phi_k,
+    *,
+    word_topics=None,
+    token_active=None,
+    plan=None,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> None:
+    """Check every ``ops.sweep`` argument contract; raise ContractError."""
+    _require(
+        word_ids.ndim == 2 and _is_int(word_ids),
+        f"word_ids must be a (D, L) integer array, got shape "
+        f"{tuple(word_ids.shape)} dtype {word_ids.dtype}",
+    )
+    D, L = word_ids.shape
+    _require(
+        tuple(counts.shape) == (D, L) and _is_float(counts),
+        f"counts must be a float (D, L) = ({D}, {L}) array matching "
+        f"word_ids, got shape {tuple(counts.shape)} dtype {counts.dtype}",
+    )
+    _require(
+        mu.ndim == 3 and tuple(mu.shape[:2]) == (D, L),
+        f"mu must be (D, L, K) = ({D}, {L}, K) responsibilities, got "
+        f"shape {tuple(mu.shape)}",
+    )
+    K = mu.shape[-1]
+    _require(
+        tuple(theta.shape) == (D, K),
+        f"theta must be (D, K) = ({D}, {K}), got {tuple(theta.shape)}",
+    )
+    _require(
+        phi_wk.ndim == 2 and phi_wk.shape[1] == K,
+        f"phi_wk must be (W_s, K) with K = {K}, got "
+        f"{tuple(phi_wk.shape)}",
+    )
+    _require(
+        tuple(phi_k.shape) == (K,),
+        f"phi_k must be (K,) = ({K},), got {tuple(phi_k.shape)}",
+    )
+    # The kernels donate mu/theta/phi_wk/phi_k via input_output_aliases, so
+    # each aliased pair must agree in dtype exactly — a mismatch is a
+    # trace-time aliasing error otherwise.
+    dtypes = {
+        "mu": mu.dtype, "theta": theta.dtype,
+        "phi_wk": phi_wk.dtype, "phi_k": phi_k.dtype,
+    }
+    _require(
+        len({np.dtype(d) for d in dtypes.values()}) == 1,
+        "mu/theta/phi_wk/phi_k are donated (aliased) into the kernel "
+        "outputs and must share one dtype, got "
+        + ", ".join(f"{k}={v}" for k, v in dtypes.items()),
+    )
+    _check_word_topics(word_topics, phi_wk.shape[0], K)
+    if token_active is not None:
+        _require(
+            tuple(token_active.shape) == (D, L),
+            f"token_active must be a (D, L) = ({D}, {L}) mask, got "
+            f"{tuple(token_active.shape)}",
+        )
+    _check_plan(plan)
+    _check_sublane(phi_wk.shape[0], use_pallas, interpret, "sweep")
+
+
+def validate_infer_args(
+    word_ids, est_counts, theta0, phi_norm,
+    *,
+    ev_counts=None,
+    word_topics=None,
+    plan=None,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> None:
+    """Check every ``ops.infer`` argument contract; raise ContractError."""
+    _require(
+        word_ids.ndim == 2 and _is_int(word_ids),
+        f"word_ids must be a (D, L) integer array, got shape "
+        f"{tuple(word_ids.shape)} dtype {word_ids.dtype}",
+    )
+    D, L = word_ids.shape
+    _require(
+        tuple(est_counts.shape) == (D, L) and _is_float(est_counts),
+        f"est_counts must be a float (D, L) = ({D}, {L}) array matching "
+        f"word_ids, got shape {tuple(est_counts.shape)} dtype "
+        f"{est_counts.dtype}",
+    )
+    if ev_counts is not None:
+        _require(
+            tuple(ev_counts.shape) == (D, L),
+            f"ev_counts must share word_ids' (D, L) = ({D}, {L}) layout "
+            f"(split_heldout_counts preserves it), got "
+            f"{tuple(ev_counts.shape)}",
+        )
+    _require(
+        theta0.ndim == 2 and theta0.shape[0] == D,
+        f"theta0 must be (D, K) with D = {D}, got {tuple(theta0.shape)}",
+    )
+    K = theta0.shape[-1]
+    _require(
+        phi_norm.ndim == 2 and phi_norm.shape[1] == K,
+        f"phi_norm must be (W_s, K) with K = {K}, got "
+        f"{tuple(phi_norm.shape)}",
+    )
+    _require(
+        np.dtype(theta0.dtype) == np.dtype(phi_norm.dtype),
+        f"theta0 ({theta0.dtype}) is donated against phi_norm "
+        f"({phi_norm.dtype}) gathers; dtypes must match",
+    )
+    _check_word_topics(word_topics, phi_norm.shape[0], K)
+    _check_plan(plan)
+    _check_sublane(phi_norm.shape[0], use_pallas, interpret, "infer")

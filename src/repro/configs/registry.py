@@ -1,39 +1,70 @@
-"""Architecture registry: ``--arch <id>`` resolution for launch/dryrun/train."""
+"""Architecture registry: ``--arch <id>`` resolution for launch/dryrun/train.
+
+The LM template architectures are *quarantined*: they are not part of the
+Fast-Online-EM reproduction (``repro.analysis.modules`` keeps them
+unreachable from the reproduction roots) and exist only for their own
+smoke tests.  The registry therefore lists them in an explicit allowlist
+of (arch name → module) pairs and imports a template module only when its
+config is actually requested — importing this module, as the LDA launch
+scripts do, loads none of them.
+"""
 from __future__ import annotations
 
-from typing import Dict, List
+import importlib
+from collections.abc import Mapping
+from typing import Dict, Iterator, List
 
 from repro.configs.base import ArchConfig, LM_SHAPES, ShapeConfig
-from repro.configs import (
-    granite_20b,
-    granite_8b,
-    internlm2_20b,
-    h2o_danube_3_4b,
-    mamba2_370m,
-    qwen2_moe_a2_7b,
-    qwen3_moe_235b_a22b,
-    musicgen_medium,
-    llama_3_2_vision_11b,
-    jamba_1_5_large_398b,
-)
-
-_MODULES = (
-    granite_20b,
-    granite_8b,
-    internlm2_20b,
-    h2o_danube_3_4b,
-    mamba2_370m,
-    qwen2_moe_a2_7b,
-    qwen3_moe_235b_a22b,
-    musicgen_medium,
-    llama_3_2_vision_11b,
-    jamba_1_5_large_398b,
-)
-
-ARCHS: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
 
 # the paper's own architecture is registered separately (different step fns)
 LDA_ARCH = "foem-lda"
+
+#: The quarantined-template allowlist: every LM arch the CLI accepts, and
+#: the ONLY modules the registry will ever import for one.  Keep in sync
+#: with ``repro.analysis.modules.QUARANTINED_MODULES``.
+TEMPLATE_ARCHS: Dict[str, str] = {
+    "granite-20b": "repro.configs.granite_20b",
+    "granite-8b": "repro.configs.granite_8b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube_3_4b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+}
+
+
+class _LazyArchs(Mapping):
+    """Mapping with the allowlist's keys that imports a template module
+    only on first access to its config."""
+
+    def __init__(self) -> None:
+        self._cache: Dict[str, ArchConfig] = {}
+
+    def __getitem__(self, name: str) -> ArchConfig:
+        if name not in self._cache:
+            if name not in TEMPLATE_ARCHS:
+                raise KeyError(name)
+            mod = importlib.import_module(TEMPLATE_ARCHS[name])
+            cfg = mod.CONFIG
+            if cfg.name != name:
+                raise RuntimeError(
+                    f"registry allowlist names {name!r} but "
+                    f"{TEMPLATE_ARCHS[name]} declares {cfg.name!r}"
+                )
+            self._cache[name] = cfg
+        return self._cache[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(TEMPLATE_ARCHS)
+
+    def __len__(self) -> int:
+        return len(TEMPLATE_ARCHS)
+
+
+ARCHS: Mapping = _LazyArchs()
 
 
 def get_arch(name: str) -> ArchConfig:

@@ -258,7 +258,7 @@ def gs_sweep_with_residuals(
         phi_wk, phi_k,
         alpha_m1=cfg.alpha_m1, beta_m1=cfg.beta_m1, wb=W * cfg.beta_m1,
         compute_loglik=compute_loglik, unroll=cfg.sweep_unroll,
-        interpret=interpret, plan=plan,
+        interpret=interpret, plan=plan, debug_checks=cfg.debug_checks,
     )
     if as_delta:
         r = r._replace(phi_wk=r.phi_wk - phi_wk, phi_k=r.phi_k - phi_k)
@@ -421,7 +421,7 @@ def iem_exact_numpy(
     """
     D, L = word_ids.shape
     K = cfg.K
-    mu = mu0.copy().astype(np.float64)
+    mu = mu0.copy().astype(np.float64)  # lint: host-f64 — numpy oracle, never on device
     theta = np.einsum("dlk,dl->dk", mu, counts)
     phi = np.zeros((cfg.W, K))
     for d in range(D):

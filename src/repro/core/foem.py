@@ -134,7 +134,7 @@ def scheduled_iem_sweep(
             wb=W * cfg.beta_m1,
             word_topics=word_topics, token_active=token_active,
             compute_loglik=compute_loglik, unroll=cfg.sweep_unroll,
-            plan=plan,
+            plan=plan, debug_checks=cfg.debug_checks,
         )
         scheduler = sched_lib.scheduler_update_from_sweep(
             scheduler, r.residual, batch.word_ids, word_topics

@@ -312,6 +312,7 @@ def heldout_perplexity_sharded(
             wid, est_c, theta0, phi_norm, alpha_m1=cfg.alpha_m1,
             ev_counts=ev_c, word_topics=wt, max_sweeps=fit_sweeps,
             check_every=check, rel_tol=tol, plan=plan,
+            debug_checks=cfg.debug_checks,
         )
         # ev_loglik is already psum'd over the model axis by the dispatch;
         # only the data-axis reduction happens here
@@ -319,7 +320,7 @@ def heldout_perplexity_sharded(
         ntok = lax.psum(ev_c.sum(), dp_all)
         return jnp.exp(-ll / jnp.maximum(ntok, 1.0))
 
-    return compat.shard_map(
+    sharded = compat.shard_map(
         wrapped,
         mesh=mesh,
         in_specs=(
@@ -328,4 +329,15 @@ def heldout_perplexity_sharded(
         ),
         out_specs=P(),
         check=False,
-    )(key, est.word_ids, est.counts, ev.counts, stats.phi_wk, stats.phi_k)
+    )
+    args = (key, est.word_ids, est.counts, ev.counts,
+            stats.phi_wk, stats.phi_k)
+    if cfg.debug_checks:
+        # the sanitizer's checkify.check cannot be staged bare through
+        # shard_map — functionalize here, throw at the call boundary
+        from jax.experimental import checkify
+
+        err, out = checkify.checkify(sharded)(*args)
+        err.throw()
+        return out
+    return sharded(*args)

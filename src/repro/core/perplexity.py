@@ -155,6 +155,7 @@ def infer_heldout(
         check_every=cfg.ppl_check_every if check_every is None else check_every,
         rel_tol=cfg.ppl_rel_tol if rel_tol is None else rel_tol,
         use_pallas=use_pallas, interpret=interpret,
+        debug_checks=cfg.debug_checks,
     )
     return res
 

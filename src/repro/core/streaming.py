@@ -126,7 +126,7 @@ class ParameterStore:
         self.buffer_rows = int(buffer_rows)
         self.dtype = np.dtype(dtype)
         self.live_vocab = 0                      # W high-watermark
-        self.phi_k = np.zeros((self.K,), np.float64)  # topic totals (small, RAM)
+        self.phi_k = np.zeros((self.K,), np.float64)  # lint: host-f64 — RAM accumulator
         self.step = 0                            # minibatch cursor (restart point)
         self.stats = StoreStats()
         self.write_version = 0                   # bumps on every write_rows
@@ -360,7 +360,7 @@ class ParameterStore:
         assert payload["K"] == self.K, "topic count mismatch on restart"
         self.live_vocab = payload["live_vocab"]
         self.step = payload["step"]
-        self.phi_k = np.asarray(payload["phi_k"], np.float64)
+        self.phi_k = np.asarray(payload["phi_k"], np.float64)  # lint: host-f64
 
     # ------------------------------------------------------------- helpers
 

@@ -106,7 +106,22 @@ class FOEMTrainer:
         # both wholesale, so the device can update them in place instead of
         # copying per step.  (CPU has no donation; skip the warning there.)
         donate = () if jax.default_backend() == "cpu" else (2, 3)
-        return jax.jit(run, donate_argnums=donate)
+        fn = jax.jit(run, donate_argnums=donate)
+        if not cfg.debug_checks:
+            return fn
+        # checkify functionalizes the sanitizer's checks through the jitted
+        # inner loop (checkify.check cannot be staged bare); a fired
+        # invariant surfaces as JaxRuntimeError at the step boundary
+        from jax.experimental import checkify
+
+        checked = checkify.checkify(fn)
+
+        def run_checked(*args):
+            err, out = checked(*args)
+            err.throw()
+            return out
+
+        return run_checked
 
     def _get_step_fn(self, shapes):
         key = (self.algorithm, shapes)
@@ -168,7 +183,7 @@ class FOEMTrainer:
         new_rows, new_phi_k, sweeps, ppl = jax.device_get(
             (new_rows, new_phi_k, sweeps, ppl)
         )
-        new_phi_k = np.asarray(new_phi_k, np.float64)
+        new_phi_k = np.asarray(new_phi_k, np.float64)  # lint: host-f64 — RAM accumulator
 
         # --- write back + advance cursor ---
         self.store.write_rows(mb.local_vocab, new_rows)

@@ -71,6 +71,13 @@ class LDAConfig:
     tau0: float = 1.0
     kappa: float = 0.9
     rho_mode: str = "accumulate"  # "accumulate" (FOEM eq. 33) | "stepwise" (SEM eq. 20)
+    # --- numerical-invariant sanitizer (repro.analysis.sanitizer) ---
+    # True wires checkify invariant assertions (μ simplex / eq. 38 mass,
+    # θ̂ row mass, φ̂ totals, padding inertness, finiteness) onto every
+    # ops.sweep/ops.infer result. Eager callers fail fast with
+    # JaxRuntimeError; jitted callers must functionalize with
+    # checkify.checkify. Debug-only: each check is an extra device pass.
+    debug_checks: bool = False
     dtype: jnp.dtype = jnp.float32
 
     def __post_init__(self):

@@ -21,8 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024   # bytes; ~half of a v5e core's VMEM
+from repro.analysis.budget import ESTEP_TILE_BUDGET, estep_token_block
 
 
 def _estep_kernel(
@@ -48,11 +47,13 @@ def _estep_kernel(
     res_ref[...] = counts_ref[...] * jnp.abs(mu - mu_old_ref[...])
 
 
-def token_block_for(num_topics: int, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
-    """Largest multiple-of-8 token block with 6 live (BT,K) f32 tiles in VMEM."""
-    per_token = 6 * num_topics * 4
-    bt = max(8, (vmem_budget // per_token) // 8 * 8)
-    return int(min(bt, 1024))
+def token_block_for(num_topics: int, vmem_budget: int = ESTEP_TILE_BUDGET) -> int:
+    """Largest multiple-of-8 token block with 6 live (BT,K) f32 tiles in VMEM.
+
+    Delegates to ``repro.analysis.budget.estep_token_block`` (the shared
+    budget model's tile-sizing rule).
+    """
+    return estep_token_block(num_topics, vmem_budget)
 
 
 @functools.partial(

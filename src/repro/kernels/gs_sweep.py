@@ -53,24 +53,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-DEFAULT_VMEM_BUDGET = 12 * 1024 * 1024   # bytes (~3/4 of a 16 MB core)
+from repro.analysis.budget import DEFAULT_VMEM_BUDGET
+from repro.analysis.checks import kernel_fits_vmem
 
 
 def fits_vmem(num_rows: int, num_docs: int, num_topics: int,
               budget: int = DEFAULT_VMEM_BUDGET) -> bool:
     """Can the kernel's live VMEM set fit for one launch?
 
-    Counts what the compiled kernel actually holds, at the padded shapes:
-    the carried φ̂/θ̂/φ̂(k) pairs (in + aliased out block each), the
-    l-varying per-column blocks (μ in/out, residual out — double-buffered
-    by the pipeline), the counts column and the gather scratch.
+    Delegates to the ``gs_sweep`` contract in ``repro.analysis`` — the
+    same budget model the static analyzer checks, so dispatch and
+    analysis can never disagree about what fits.
     """
-    Dp = num_docs + (-num_docs) % 8
-    Kp = num_topics + (-num_topics) % 128      # lane_align=128 when compiled
-    carried = 2 * (num_rows + Dp + 1) * Kp * 4
-    per_column = (2 * 3 + 1) * Dp * Kp * 4 + 2 * Dp * 128 * 4
-    return carried + per_column <= budget
+    return kernel_fits_vmem("gs_sweep", num_rows, num_docs, num_topics,
+                            budget)
 
 
 def loglik_partial(cnt, theta, ptot, rows, wb, *, alpha_m1: float,

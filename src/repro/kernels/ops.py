@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis.budget import SUBLANE
+from repro.analysis.validate import validate_infer_args, validate_sweep_args
 from repro.core.types import InferResult, SweepPlan, SweepResult
 from repro.kernels import ref
 from repro.kernels.foem_estep import fused_estep_pallas
@@ -44,7 +46,6 @@ from repro.kernels.sharded_sweep import (
 )
 from repro.kernels.theta_sweep import theta_fits_vmem, theta_sweep_pallas
 from repro.kernels.topk_estep import topk_estep_pallas
-from repro.kernels.flash_attention import flash_attention as _flash_pallas
 
 
 def on_tpu() -> bool:
@@ -509,6 +510,7 @@ def sweep(
     norm_psum: Optional[Callable] = None,      # dense E-step normaliser hook
     renorm_psum: Optional[Callable] = None,    # eq. 38 mass hook (scheduled)
     plan: Optional[SweepPlan] = None,          # execution plan (mesh axis etc.)
+    debug_checks: bool = False,                # numerical-invariant sanitizer
 ) -> SweepResult:
     """One column-serial Gauss-Seidel sweep — THE sweep entry point.
 
@@ -551,7 +553,56 @@ def sweep(
       ``(D, 1)`` column to its cross-shard sum.  Hooks imply the portable
       path — a collective cannot cross a Pallas kernel boundary — and are
       mutually exclusive with a sharded ``plan``.
+    * Argument contracts (shapes, dtypes of the donated stats, plan axis,
+      sublane layout of a forced compiled launch) are validated eagerly at
+      this boundary — ``repro.analysis.validate`` raises ``ContractError``
+      before any tracing.  ``debug_checks=True`` (``cfg.debug_checks``)
+      additionally runs the ``repro.analysis.sanitizer`` numerical
+      invariants on the result via ``checkify`` — eager calls raise
+      immediately, jitted callers wrap with ``checkify.checkify``.
     """
+    forced_pallas = use_pallas is True or (
+        plan is not None and plan.axis_name is None and plan.impl == "pallas"
+    )
+    validate_sweep_args(
+        word_ids, counts, mu, theta, phi_wk, phi_k,
+        word_topics=word_topics, token_active=token_active, plan=plan,
+        use_pallas=True if forced_pallas else use_pallas,
+        interpret=interpret,
+    )
+    scheduled = word_topics is not None
+    if scheduled and token_active is None:
+        token_active = counts > 0
+    result = _sweep_impl(
+        word_ids, counts, mu, theta, phi_wk, phi_k,
+        alpha_m1=alpha_m1, beta_m1=beta_m1, wb=wb,
+        word_topics=word_topics, token_active=token_active,
+        compute_loglik=compute_loglik, unroll=unroll,
+        use_pallas=use_pallas, interpret=interpret,
+        norm_psum=norm_psum, renorm_psum=renorm_psum, plan=plan,
+    )
+    if debug_checks:
+        from repro.analysis import sanitizer
+
+        sanitizer.sweep_invariants(
+            result, counts=counts, mu_before=mu,
+            phi_wk_before=phi_wk, phi_k_before=phi_k,
+            word_topics=word_topics, token_active=token_active,
+            word_ids=word_ids,
+            axis_name=plan.axis_name if plan is not None else None,
+        )
+    return result
+
+
+def _sweep_impl(
+    word_ids, counts, mu, theta, phi_wk, phi_k,
+    *,
+    alpha_m1, beta_m1, wb,
+    word_topics=None, token_active=None,
+    compute_loglik=False, unroll=8,
+    use_pallas=None, interpret=False,
+    norm_psum=None, renorm_psum=None, plan=None,
+) -> SweepResult:
     D, L = word_ids.shape
     K = mu.shape[-1]
     scheduled = word_topics is not None
@@ -570,6 +621,7 @@ def sweep(
             fits = sharded_fits_vmem(phi_wk.shape[0], D, K, scheduled)
             how = "pallas" if (
                 plan.two_phase and on_tpu() and fits
+                and phi_wk.shape[0] % SUBLANE == 0
             ) else "portable"
         if plan.two_phase:
             return _sweep_two_phase(
@@ -622,7 +674,12 @@ def sweep(
         fits = (sched_fits_vmem if scheduled else fits_vmem)(
             phi_wk.shape[0], D, K
         )
-        use_pallas = on_tpu() and fits and not hooked
+        # a ragged W_s violates the compiled kernels' sublane layout
+        # (ContractError when forced); auto simply stays portable
+        use_pallas = (
+            on_tpu() and fits and not hooked
+            and phi_wk.shape[0] % SUBLANE == 0
+        )
     if hooked and (use_pallas or interpret):
         # refuse rather than silently downgrade: a collective cannot cross
         # a kernel boundary, and a parity test passing a hook would
@@ -736,6 +793,7 @@ def infer(
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
     plan: Optional[SweepPlan] = None,          # execution plan (mesh axis etc.)
+    debug_checks: bool = False,                # numerical-invariant sanitizer
 ) -> InferResult:
     """Frozen-φ inference for unseen documents — THE serving entry point.
 
@@ -777,7 +835,20 @@ def infer(
       restructuring).  Sharded plans imply the portable path (a collective
       cannot cross a Pallas kernel boundary); the returned ``theta`` is
       the shard's topic slice, the logliks are already globally reduced.
+    * Argument contracts are validated eagerly (``ContractError``);
+      ``debug_checks=True`` runs the ``repro.analysis.sanitizer``
+      invariants on the result (jitted callers wrap with
+      ``checkify.checkify``).
     """
+    forced_pallas = use_pallas is True or (
+        plan is not None and plan.axis_name is None and plan.impl == "pallas"
+    )
+    validate_infer_args(
+        word_ids, est_counts, theta0, phi_norm,
+        ev_counts=ev_counts, word_topics=word_topics, plan=plan,
+        use_pallas=True if forced_pallas else use_pallas,
+        interpret=interpret,
+    )
     D, L = word_ids.shape
     K = theta0.shape[-1]
     check_every = max(1, min(check_every, max_sweeps))
@@ -812,7 +883,10 @@ def infer(
         if use_pallas is False:
             interpret = False           # explicit False wins: pure-jnp oracle
         elif use_pallas is None:
-            use_pallas = on_tpu() and theta_fits_vmem(phi_norm.shape[0], D, K)
+            use_pallas = (
+                on_tpu() and theta_fits_vmem(phi_norm.shape[0], D, K)
+                and phi_norm.shape[0] % SUBLANE == 0
+            )
 
     if use_pallas or interpret:
         lane_align = 128 if (use_pallas and not interpret) else 1
@@ -857,13 +931,20 @@ def infer(
          jnp.zeros((), dtype), jnp.zeros((D, L), dtype),
          jnp.asarray(jnp.inf, dtype)),
     )
-    return InferResult(
+    result = InferResult(
         theta=theta,
         sweeps=c * check_every,
         est_loglik=est_ll,
         ev_loglik=ev_ll_tok.sum(),
         ev_loglik_doc=ev_ll_tok.sum(-1),
     )
+    if debug_checks:
+        from repro.analysis import sanitizer
+
+        sanitizer.infer_invariants(
+            result, est_counts=est_counts, axis_name=axis_name,
+        )
+    return result
 
 
 def gs_sweep(
@@ -907,6 +988,10 @@ def attention(
     """Grouped-query attention over (BH, S, d) flattened head layout."""
     use_pallas = on_tpu() if use_pallas is None else use_pallas
     if use_pallas or interpret:
+        # lazy: flash_attention is quarantined LM-template code
+        # (analysis.modules), not part of the LDA reproduction graph
+        from repro.kernels.flash_attention import flash_attention as _flash_pallas
+
         return _flash_pallas(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
             interpret=interpret,

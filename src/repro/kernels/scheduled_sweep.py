@@ -47,18 +47,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.gs_sweep import DEFAULT_VMEM_BUDGET, loglik_partial
+from repro.analysis.budget import DEFAULT_VMEM_BUDGET
+from repro.analysis.checks import kernel_fits_vmem
+from repro.kernels.gs_sweep import loglik_partial
 
 
 def sched_fits_vmem(num_rows: int, num_docs: int, num_topics: int,
                     budget: int = DEFAULT_VMEM_BUDGET) -> bool:
-    """Like ``gs_sweep.fits_vmem`` plus the (D, K) active-mask scratch."""
-    Dp = num_docs + (-num_docs) % 8
-    Kp = num_topics + (-num_topics) % 128      # lane_align=128 when compiled
-    carried = 2 * (num_rows + Dp + 1) * Kp * 4
-    per_column = (2 * 3 + 1) * Dp * Kp * 4 + 3 * Dp * 128 * 4
-    scratch = 2 * Dp * Kp * 4                  # gathered rows + lane mask
-    return carried + per_column + scratch <= budget
+    """Like ``gs_sweep.fits_vmem`` plus the (D, K) active-mask scratch.
+
+    Delegates to the ``scheduled_sweep`` contract in ``repro.analysis``
+    (the shared budget model).
+    """
+    return kernel_fits_vmem("scheduled_sweep", num_rows, num_docs,
+                            num_topics, budget)
 
 
 def _make_sched_kernel(*, alpha_m1: float, beta_m1: float, k_actual: int,

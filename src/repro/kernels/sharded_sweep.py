@@ -65,7 +65,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.gs_sweep import DEFAULT_VMEM_BUDGET
+from repro.analysis.budget import DEFAULT_VMEM_BUDGET
+from repro.analysis.checks import kernel_fits_vmem
 
 
 def sharded_fits_vmem(num_rows: int, num_docs: int, num_topics: int,
@@ -73,17 +74,16 @@ def sharded_fits_vmem(num_rows: int, num_docs: int, num_topics: int,
                       budget: int = DEFAULT_VMEM_BUDGET) -> bool:
     """Can one two-phase launch's live VMEM set fit?
 
-    Sized like ``scheduled_sweep.sched_fits_vmem`` (the fold phase is the
-    high-water mark: carried φ̂/θ̂/φ̂(k) in/out pairs, per-column μ blocks,
-    rows + lane-mask scratch) plus the handful of (D, 1) normaliser column
-    blocks the two-phase structure adds.
+    Delegates to the ``sharded_fold`` contract in ``repro.analysis`` —
+    the fold phase is the high-water mark (carried φ̂/θ̂/φ̂(k) in/out
+    pairs, per-column μ blocks, rows + lane-mask scratch, plus the
+    (D, 1) normaliser columns the two-phase structure adds), and the
+    registered contract is the scheduled variant, which dominates the
+    dense one — so one query covers both.
     """
-    Dp = num_docs + (-num_docs) % 8
-    Kp = num_topics + (-num_topics) % 128      # lane_align=128 when compiled
-    carried = 2 * (num_rows + Dp + 1) * Kp * 4
-    per_column = (2 * 3 + 1) * Dp * Kp * 4 + 8 * Dp * 128 * 4
-    scratch = (2 if scheduled else 1) * Dp * Kp * 4
-    return carried + per_column + scratch <= budget
+    del scheduled  # the registered high-water contract covers both variants
+    return kernel_fits_vmem("sharded_fold", num_rows, num_docs, num_topics,
+                            budget)
 
 
 def _expand_mask(wid_ref, wtop_ref, mask_ref, l, D, K, active_topics, dtype):

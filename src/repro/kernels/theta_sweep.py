@@ -63,23 +63,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.gs_sweep import DEFAULT_VMEM_BUDGET
+from repro.analysis.budget import DEFAULT_VMEM_BUDGET
+from repro.analysis.checks import kernel_fits_vmem
 
 
 def theta_fits_vmem(num_rows: int, num_docs: int, num_topics: int,
                     budget: int = DEFAULT_VMEM_BUDGET) -> bool:
     """Can the inference kernel's live VMEM set fit for one launch?
 
-    Counts the carried θ̂ pair (in + aliased out), the read-only φ block,
-    the rows/accumulator/mask scratches and the small per-column blocks,
-    at the padded shapes.
+    Delegates to the ``theta_sweep`` contract in ``repro.analysis``: the
+    carried θ̂ pair (in + aliased out), the read-only φ block, the
+    rows/accumulator/mask scratches and the per-column split/loglik
+    blocks, at the padded shapes.
     """
-    Dp = num_docs + (-num_docs) % 8
-    Kp = num_topics + (-num_topics) % 128      # lane_align=128 when compiled
-    carried = (2 * Dp + num_rows) * Kp * 4
-    scratch = 3 * Dp * Kp * 4                  # rows + accumulator + mask
-    per_column = 2 * 2 * 2 * Dp * 4            # cnt/ev in + ll out, buffered
-    return carried + scratch + per_column <= budget
+    return kernel_fits_vmem("theta_sweep", num_rows, num_docs, num_topics,
+                            budget)
 
 
 def _make_theta_kernel(*, alpha_m1: float, k_actual: int, num_cols: int,

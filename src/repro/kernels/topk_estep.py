@@ -64,6 +64,13 @@ def topk_estep_pallas(
     block_tokens: int = 256,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
+    """Scheduled active-set E-step (eq. 38) over (tokens × A) gathered tiles.
+
+    Returns ``(mu_new, delta)``.  VMEM live set per program: 6 pipelined
+    (BT, A) tiles + 2 (BT, 1) columns, ≈ 2 MiB at the default BT = 256 —
+    far under the shared 12 MiB budget at any registered cell (contract
+    ``topk_estep`` in ``repro.analysis.contracts``).
+    """
     T, A = theta_a.shape
     BT = min(block_tokens, T)
     pad = (-T) % BT

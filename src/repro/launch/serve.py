@@ -59,6 +59,7 @@ def _infer_local(key, word_ids, counts, ev_counts, rows, phi_k, cfg,
         ),
         max_sweeps=fit_sweeps, check_every=check_every, rel_tol=rel_tol,
         use_pallas=use_pallas, interpret=interpret,
+        debug_checks=cfg.debug_checks,
     )
     return em.normalize_theta(res.theta, cfg), res.sweeps, res.ev_loglik
 
@@ -115,7 +116,7 @@ class TopicServer:
             rows = np.concatenate(
                 [rows, np.zeros((pad, rows.shape[1]), rows.dtype)]
             )
-        theta, sweeps, ev_ll = _infer_local(
+        args = (
             key, jnp.asarray(local), jnp.asarray(counts),
             jnp.asarray(
                 ev_counts if ev_counts is not None
@@ -125,6 +126,16 @@ class TopicServer:
             self.cfg, self.fit_sweeps, self.check_every, self.rel_tol,
             self.active_topics, self.use_pallas, self.interpret,
         )
+        if self.cfg.debug_checks:
+            # functionalize the sanitizer checks through the jitted batch
+            from jax.experimental import checkify
+
+            err, (theta, sweeps, ev_ll) = checkify.checkify(_infer_local)(
+                *args
+            )
+            err.throw()
+        else:
+            theta, sweeps, ev_ll = _infer_local(*args)
         self.last_sweeps = int(sweeps)
         return np.asarray(theta), ev_ll
 

@@ -12,8 +12,6 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops as kops
-
 
 def _dense_init(key, shape, dtype, scale: Optional[float] = None):
     fan_in = shape[0] if len(shape) >= 2 else 1

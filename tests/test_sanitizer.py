@@ -1,0 +1,289 @@
+"""Numerical-invariant sanitizer: fault injection proves every check fires.
+
+Each invariant of ``repro.analysis.sanitizer`` gets (a) a clean pass on a
+real ``ops.sweep``/``ops.infer`` result with ``debug_checks=True`` and
+(b) an injected violation — NaN lane, broken simplex, mass leaked into
+padding, inconsistent φ totals — asserting the specific ``sanitizer:``
+message fires.  The checkify wiring is exercised eagerly (raises
+``JaxRuntimeError`` immediately), under ``checkify.checkify(jax.jit(...))``,
+and through the 4-virtual-device sharded engine in a subprocess.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import checkify
+
+from repro.analysis import sanitizer as san
+from repro.core import em
+from repro.core.types import LDAConfig, LocalState, MinibatchData
+from repro.kernels import ops as kops
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+KW = dict(alpha_m1=0.01, beta_m1=0.01)
+
+
+def _state(D=8, L=10, K=8, W=40, seed=0):
+    rng = np.random.default_rng(seed)
+    wid = jnp.asarray(rng.integers(0, W, (D, L)).astype(np.int32))
+    cnt = jnp.asarray(rng.integers(0, 5, (D, L)).astype(np.float32))
+    assert bool((cnt == 0).any())       # padding slots exist
+    mu = jnp.asarray(rng.dirichlet(np.ones(K), (D, L)).astype(np.float32))
+    theta = em.fold_theta(mu, cnt)
+    phi, ptot = em.fold_phi(mu, cnt, wid, W)
+    return wid, cnt, mu, theta, phi, ptot
+
+
+def _clean_sweep(debug_checks=True, **kw):
+    wid, cnt, mu, theta, phi, ptot = _state()
+    r = kops.sweep(wid, cnt, mu, theta, phi, ptot, wb=40 * 0.01, **KW,
+                   use_pallas=False, debug_checks=debug_checks, **kw)
+    return (wid, cnt, mu, theta, phi, ptot), r
+
+
+def _invariants(r, inputs, **kw):
+    wid, cnt, mu, theta, phi, ptot = inputs
+    san.sweep_invariants(r, counts=cnt, mu_before=mu,
+                         phi_wk_before=phi, phi_k_before=ptot, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Clean paths
+# ---------------------------------------------------------------------------
+
+def test_clean_dense_sweep_passes():
+    _, r = _clean_sweep(compute_loglik=True)
+    assert r.loglik is not None         # sanitizer ran inside ops.sweep
+
+
+def test_clean_scheduled_sweep_passes():
+    wid, cnt, mu, theta, phi, ptot = _state(seed=1)
+    wt = jax.lax.top_k(phi, 3)[1].astype(jnp.int32)
+    kops.sweep(wid, cnt, mu, theta, phi, ptot, wb=0.4, **KW,
+               word_topics=wt, use_pallas=False, debug_checks=True)
+
+
+def test_clean_infer_passes():
+    wid, cnt, mu, theta, phi, ptot = _state(seed=2)
+    phin = phi / jnp.maximum(phi.sum(0, keepdims=True), 1e-30)
+    r = kops.infer(wid, cnt, theta, phin, alpha_m1=0.01, ev_counts=cnt,
+                   max_sweeps=10, check_every=5, use_pallas=False,
+                   debug_checks=True)
+    assert int(r.sweeps) == 10
+
+
+# ---------------------------------------------------------------------------
+# Fault injection — one test per invariant, matching the message
+# ---------------------------------------------------------------------------
+
+def _expect(match, fn):
+    with pytest.raises(checkify.JaxRuntimeError, match=match):
+        fn()
+
+
+def test_fires_on_nan():
+    inputs, r = _clean_sweep(debug_checks=False)
+    bad = r._replace(mu=r.mu.at[0, 0, 0].set(jnp.nan))
+    _expect("non-finite values in mu", lambda: _invariants(bad, inputs))
+
+
+def test_fires_on_negative_stat():
+    inputs, r = _clean_sweep(debug_checks=False)
+    bad = r._replace(theta=r.theta.at[0, 0].set(-0.5))
+    _expect("negative values in theta", lambda: _invariants(bad, inputs))
+
+
+def test_fires_on_broken_simplex():
+    inputs, r = _clean_sweep(debug_checks=False)
+    d, l = map(int, np.argwhere(np.asarray(inputs[1]) > 0)[0])
+    bad = r._replace(mu=r.mu.at[d, l].mul(1.5))
+    _expect("do not sum to 1", lambda: _invariants(bad, inputs))
+
+
+def test_fires_on_theta_row_mass():
+    inputs, r = _clean_sweep(debug_checks=False)
+    bad = r._replace(theta=r.theta * 1.1, mu=r.mu)
+    _expect("theta row mass", lambda: _invariants(bad, inputs))
+
+
+def test_fires_on_phi_column_inconsistency():
+    inputs, r = _clean_sweep(debug_checks=False)
+    bad = r._replace(phi_k=r.phi_k.at[0].add(1.0))
+    _expect("deltas inconsistent", lambda: _invariants(bad, inputs))
+
+
+def test_fires_on_total_mass_change():
+    inputs, r = _clean_sweep(debug_checks=False)
+    bad = r._replace(
+        phi_wk=r.phi_wk.at[:, 0].mul(1.2),
+        phi_k=(r.phi_wk.at[:, 0].mul(1.2)).sum(0),
+    )
+    _expect("total phi mass not conserved", lambda: _invariants(bad, inputs))
+
+
+def test_fires_on_padding_leak():
+    inputs, r = _clean_sweep(debug_checks=False)
+    cnt = np.asarray(inputs[1])
+    d, l = map(int, np.argwhere(cnt == 0)[0])
+    bad = r._replace(residual=r.residual.at[d, l, 0].set(1e-4))
+    _expect("padding", lambda: _invariants(bad, inputs))
+
+
+def test_fires_on_inactive_entry_drift():
+    wid, cnt, mu, theta, phi, ptot = _state(seed=3)
+    wt = jax.lax.top_k(phi, 3)[1].astype(jnp.int32)
+    tok_act = cnt > 0
+    r = kops.sweep(wid, cnt, mu, theta, phi, ptot, wb=0.4, **KW,
+                   word_topics=wt, token_active=tok_act, use_pallas=False)
+    # poke an entry OUTSIDE the word's active set on a counted token
+    d, l = map(int, np.argwhere(np.asarray(cnt) > 0)[0])
+    active = set(np.asarray(wt)[int(wid[d, l])].tolist())
+    k_off = next(k for k in range(mu.shape[-1]) if k not in active)
+    bad = r._replace(mu=r.mu.at[d, l, k_off].add(0.01))
+    with pytest.raises(checkify.JaxRuntimeError,
+                       match="did not keep mu_old"):
+        san.sweep_invariants(
+            bad, counts=cnt, mu_before=mu,
+            phi_wk_before=phi, phi_k_before=ptot,
+            word_topics=wt, token_active=tok_act, word_ids=wid,
+        )
+
+
+def test_fires_on_active_mass_loss():
+    wid, cnt, mu, theta, phi, ptot = _state(seed=4)
+    wt = jax.lax.top_k(phi, 3)[1].astype(jnp.int32)
+    tok_act = cnt > 0
+    r = kops.sweep(wid, cnt, mu, theta, phi, ptot, wb=0.4, **KW,
+                   word_topics=wt, token_active=tok_act, use_pallas=False)
+    d, l = map(int, np.argwhere(np.asarray(cnt) > 0)[0])
+    k_on = int(np.asarray(wt)[int(wid[d, l])][0])
+    bad = r._replace(mu=r.mu.at[d, l, k_on].mul(5.0))
+    with pytest.raises(checkify.JaxRuntimeError,
+                       match="active-set mass not preserved"):
+        san.sweep_invariants(
+            bad, counts=cnt, mu_before=mu,
+            phi_wk_before=phi, phi_k_before=ptot,
+            word_topics=wt, token_active=tok_act, word_ids=wid,
+        )
+
+
+def test_infer_fires_on_bad_theta_and_positive_loglik():
+    wid, cnt, mu, theta, phi, ptot = _state(seed=5)
+    phin = phi / jnp.maximum(phi.sum(0, keepdims=True), 1e-30)
+    r = kops.infer(wid, cnt, theta, phin, alpha_m1=0.01, ev_counts=cnt,
+                   max_sweeps=10, check_every=5, use_pallas=False)
+    _expect("theta row mass", lambda: san.infer_invariants(
+        r._replace(theta=r.theta * 2.0), est_counts=cnt))
+    _expect("positive estimation-split", lambda: san.infer_invariants(
+        r._replace(est_loglik=jnp.float32(3.0)), est_counts=cnt))
+    _expect("non-finite values in ev_loglik", lambda: san.infer_invariants(
+        r._replace(ev_loglik=jnp.float32(jnp.nan)), est_counts=cnt))
+
+
+# ---------------------------------------------------------------------------
+# checkify wiring under jit, config threading, sanitized e2e paths
+# ---------------------------------------------------------------------------
+
+def test_checkify_wraps_jitted_sweep():
+    wid, cnt, mu, theta, phi, ptot = _state(seed=6)
+
+    @checkify.checkify
+    @jax.jit
+    def run(theta_in):
+        return kops.sweep(wid, cnt, mu, theta_in, phi, ptot, wb=0.4, **KW,
+                          use_pallas=False, debug_checks=True)
+
+    err, _ = run(theta)
+    assert err.get() is None
+    # the GS sweep updates theta incrementally (θ − c·μ_old + c·μ_new), so
+    # an inflated input row mass survives the sweep and trips the check
+    err, _ = run(theta * 1.1)
+    assert err.get() is not None and "sanitizer:" in err.get()
+
+
+def test_unfunctionalized_jit_fails_loudly():
+    """Under plain jit the check cannot be silently dropped — jax refuses
+    with its functionalization error, pointing at checkify.checkify."""
+    wid, cnt, mu, theta, phi, ptot = _state(seed=7)
+    fn = jax.jit(lambda: kops.sweep(
+        wid, cnt, mu, theta, phi, ptot, wb=0.4, **KW,
+        use_pallas=False, debug_checks=True,
+    ))
+    with pytest.raises(ValueError, match="functionalize"):
+        fn()
+
+
+def test_cfg_debug_checks_threads_through_em():
+    cfg = LDAConfig(num_topics=8, vocab_size=40, debug_checks=True)
+    wid, cnt, mu, theta, phi, ptot = _state(K=8, W=40, seed=8)
+    r = em.gs_sweep_with_residuals(
+        MinibatchData(wid, cnt), LocalState(mu=mu, theta_dk=theta),
+        phi, ptot, cfg, compute_loglik=True,
+    )
+    assert bool(jnp.isfinite(r.loglik))
+
+
+def test_sharded_sanitizer_via_shard_map():
+    """The psum-reduced invariants hold through the two-phase sharded
+    engine at mp=4 (exact-renorm correctness), and a cross-shard
+    inconsistency still fires — checkify travels through shard_map."""
+    body = """
+    from jax.experimental import checkify
+    from repro.core import em
+    from repro.core.types import SweepPlan
+    from repro.kernels import ops as kops
+
+    D, L, K, W = 8, 6, 8, 40
+    rng = np.random.default_rng(0)
+    wid = jnp.asarray(rng.integers(0, W, (D, L)).astype(np.int32))
+    cnt = jnp.asarray(rng.integers(0, 5, (D, L)).astype(np.float32))
+    mu = jnp.asarray(rng.dirichlet(np.ones(K), (D, L)).astype(np.float32))
+    theta = em.fold_theta(mu, cnt)
+    phi, ptot = em.fold_phi(mu, cnt, wid, W)
+
+    mesh = make_mesh((4,), ("model",))
+    plan = SweepPlan(axis_name="model", impl="portable")
+
+    def sweep_body(mu, theta, phi, ptot):
+        r = kops.sweep(wid, cnt, mu, theta, phi, ptot,
+                       alpha_m1=0.01, beta_m1=0.01, wb=W * 0.01,
+                       plan=plan, debug_checks=True)
+        return (r.mu, r.phi_k)
+
+    run = checkify.checkify(jax.jit(shard_map(
+        sweep_body, mesh=mesh,
+        in_specs=(P(None, None, "model"), P(None, "model"),
+                  P(None, "model"), P("model")),
+        out_specs=(P(None, None, "model"), P("model")),
+    )))
+    err, _ = run(mu, theta, phi, ptot)
+    assert err.get() is None, err.get()
+    # cross-shard fault: inflate every shard's theta slice — the GS sweep
+    # carries the input row mass through (θ − c·μ_old + c·μ_new), so the
+    # psum-reduced row-mass check must fire through jit + shard_map + the
+    # two-phase engine's collectives
+    err, _ = run(mu, theta * 1.1, phi, ptot)
+    assert err.get() is not None and "sanitizer:" in err.get(), err.get()
+    print("SHARDED-SANITIZER-OK")
+    """
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=4"
+        )
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel.compat import make_mesh, shard_map
+    """) + textwrap.dedent(body)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "SHARDED-SANITIZER-OK" in r.stdout

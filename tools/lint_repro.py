@@ -1,0 +1,209 @@
+#!/usr/bin/env python
+"""Repo lint: AST rules the Fast-Online-EM reproduction holds itself to.
+
+Pure-AST (no repro imports are executed, no jax needed), so it runs as a
+cheap gating CI job next to ``python -m repro.analysis --reference``.
+
+Rules, over every module under ``src/repro``:
+
+  f64        no float64 literal dtype: the kernels and the budget model
+             assume f32 tiles, and jax silently narrows f64 without x64 —
+             a host-side numpy accumulator is fine but must say so with a
+             trailing ``# lint: host-f64`` comment.
+  mutable-default
+             no mutable default arguments (list/dict/set literals or
+             constructors) — shared-state bugs under jit tracing.
+  bare-except
+             no bare ``except:`` — swallows KeyboardInterrupt and the
+             checkify/contract errors this PR makes load-bearing.
+  kernel-doc every registered kernel entry point must document its VMEM
+             budget ("VMEM") and the paper equation it implements ("eq.")
+             in the entry's or module's docstring.
+  blockspec  no ``pl.BlockSpec`` literal outside the modules registered in
+             ``repro.analysis.contracts.KERNEL_CONTRACTS`` — a BlockSpec
+             the static analyzer cannot see is an unbudgeted launch.
+             (Quarantined template modules are exempt: they are not part
+             of the reproduction graph.)
+  module-graph
+             ``repro.analysis.modules.check_module_graph`` — every module
+             unreachable from the reproduction roots must be explicitly
+             quarantined, and the quarantine list must not rot.
+
+Exit status: number of violation classes hit (0 == clean).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+# import-light by design: contracts/modules never pull jax
+from repro.analysis.contracts import CONTRACT_MODULES, KERNEL_CONTRACTS  # noqa: E402
+from repro.analysis.modules import (  # noqa: E402
+    QUARANTINED_MODULES,
+    check_module_graph,
+)
+
+HOST_F64_TAG = "lint: host-f64"
+
+
+def _module_name(path: str) -> str:
+    rel = os.path.relpath(path, SRC)[:-len(".py")]
+    parts = rel.split(os.sep)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _iter_sources():
+    for dirpath, _, files in os.walk(os.path.join(SRC, "repro")):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                path = os.path.join(dirpath, fn)
+                with open(path, "r", encoding="utf-8") as f:
+                    text = f.read()
+                yield path, _module_name(path), text, ast.parse(text, path)
+
+
+def _rel(path: str) -> str:
+    return os.path.relpath(path, REPO)
+
+
+def check_f64(path, module, text, tree) -> List[str]:
+    if "jax_enable_x64" in text:
+        return []  # module opts into x64 explicitly
+    lines = text.splitlines()
+    out = []
+    for node in ast.walk(tree):
+        is_f64 = (
+            isinstance(node, ast.Attribute) and node.attr == "float64"
+        ) or (
+            isinstance(node, ast.Name) and node.id == "float64"
+        ) or (
+            isinstance(node, ast.Constant) and node.value == "float64"
+        )
+        if not is_f64:
+            continue
+        line = lines[node.lineno - 1]
+        if HOST_F64_TAG in line:
+            continue
+        out.append(
+            f"{_rel(path)}:{node.lineno}: [f64] float64 without x64 — "
+            f"annotate a host-only accumulator with `# {HOST_F64_TAG}` "
+            f"or narrow to the f32 tile dtype"
+        )
+    return out
+
+
+_MUTABLE_CALLS = {"list", "dict", "set", "defaultdict", "OrderedDict"}
+
+
+def check_mutable_defaults(path, module, text, tree) -> List[str]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for d in list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None
+        ]:
+            bad = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(d, ast.Call)
+                and isinstance(d.func, ast.Name)
+                and d.func.id in _MUTABLE_CALLS
+            )
+            if bad:
+                out.append(
+                    f"{_rel(path)}:{d.lineno}: [mutable-default] "
+                    f"{node.name}() has a mutable default argument — "
+                    f"default to None and build inside"
+                )
+    return out
+
+
+def check_bare_except(path, module, text, tree) -> List[str]:
+    return [
+        f"{_rel(path)}:{node.lineno}: [bare-except] bare `except:` — "
+        f"name the exception (it would swallow contract/sanitizer errors)"
+        for node in ast.walk(tree)
+        if isinstance(node, ast.ExceptHandler) and node.type is None
+    ]
+
+
+def check_kernel_docs(path, module, text, tree) -> List[str]:
+    entries = {
+        c.entry: c for c in KERNEL_CONTRACTS.values() if c.module == module
+    }
+    if not entries:
+        return []
+    mod_doc = ast.get_docstring(tree) or ""
+    out = []
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if node.name not in entries:
+            continue
+        doc = (ast.get_docstring(node) or "") + "\n" + mod_doc
+        missing = [tag for tag in ("VMEM", "eq.") if tag not in doc]
+        if missing:
+            out.append(
+                f"{_rel(path)}:{node.lineno}: [kernel-doc] registered "
+                f"kernel entry {node.name}() must document "
+                f"{' and '.join(missing)} in its (or the module's) "
+                f"docstring"
+            )
+    return out
+
+
+def check_blockspec(path, module, text, tree) -> List[str]:
+    if module in CONTRACT_MODULES or module in QUARANTINED_MODULES:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "BlockSpec":
+            out.append(
+                f"{_rel(path)}:{node.lineno}: [blockspec] pl.BlockSpec "
+                f"outside a registered kernel contract module — register "
+                f"the launch in repro.analysis.contracts so the static "
+                f"analyzer budgets it"
+            )
+    return out
+
+
+RULES = (
+    check_f64,
+    check_mutable_defaults,
+    check_bare_except,
+    check_kernel_docs,
+    check_blockspec,
+)
+
+
+def run_lint() -> List[str]:
+    violations: List[str] = []
+    for path, module, text, tree in _iter_sources():
+        for rule in RULES:
+            violations.extend(rule(path, module, text, tree))
+    graph_violations, _ = check_module_graph(SRC)
+    violations.extend(f"module-graph: {v}" for v in graph_violations)
+    return violations
+
+
+def main() -> int:
+    violations = run_lint()
+    for v in violations:
+        print(v)
+    classes = {v.split("[")[1].split("]")[0] if "[" in v else "module-graph"
+               for v in violations}
+    print(f"lint_repro: {len(violations)} violation(s) "
+          f"in {len(classes)} class(es)" if violations
+          else "lint_repro: clean")
+    return len(classes)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
