@@ -140,6 +140,86 @@ def bench_sanitizer(batch, local, phi, ptot, cfg, reps):
     }
 
 
+def bench_faults(cfg, reps, *, shards=4, rounds=6, rows_per_shard=1024):
+    """Fault-tolerance layer overhead on the fold hot path.
+
+    Times ``rounds × shards`` compacted Δφ̂ folds (the eq. 33
+    ``em.fold_phi_delta`` scatter-add) bare, then with the full elastic
+    bookkeeping wrapped around each fold exactly as
+    ``runtime/elastic.ElasticFOEMRuntime`` runs it: a (non-matching)
+    ``FaultPlan.fire`` consult per shard, ``StragglerMonitor`` latency
+    recording + per-round straggler query, and
+    ``BoundedStalenessMerger`` submit/drain in canonical order.  The
+    difference is the price every step pays for fault tolerance when
+    nothing fails — the number worth pinning.
+    """
+    from repro.runtime import faults as fault_lib
+    from repro.runtime.fault_tolerance import (
+        BoundedStalenessMerger,
+        StragglerMonitor,
+    )
+
+    rng = np.random.default_rng(0)
+    K, W = cfg.K, cfg.W
+    W_s = min(rows_per_shard, W)
+    ids = [
+        jnp.asarray(np.sort(rng.choice(W, W_s, replace=False))
+                    .astype(np.int32))
+        for _ in range(shards)
+    ]
+    deltas = [
+        [jnp.asarray(rng.random((W_s, K)).astype(np.float32))
+         for _ in range(shards)]
+        for _ in range(rounds)
+    ]
+    fold = jax.jit(em.fold_phi_delta)
+
+    def bare():
+        phi = jnp.zeros((W, K), jnp.float32)
+        ptot = jnp.zeros((K,), jnp.float32)
+        for r in range(rounds):
+            for s in range(shards):
+                phi, ptot = fold(phi, ptot, ids[s], deltas[r][s])
+        return phi
+
+    # a plan with an armed-but-never-matching spec: the realistic
+    # always-paid consult cost (an empty plan would short-circuit)
+    plan = fault_lib.FaultPlan([fault_lib.FaultSpec(
+        point=fault_lib.PRE_PROBE, kind="kill", step=10**9)])
+
+    def wrapped():
+        phi = jnp.zeros((W, K), jnp.float32)
+        ptot = jnp.zeros((K,), jnp.float32)
+        monitor = StragglerMonitor()
+        merger = BoundedStalenessMerger(max_staleness=1,
+                                        expected_shards=shards)
+        for r in range(rounds):
+            for s in range(shards):
+                t0 = time.perf_counter()
+                plan.fire(fault_lib.PRE_PROBE, shard=s, step=r)
+                merger.submit(s, r, (ids[s], deltas[r][s]))
+                monitor.record(s, time.perf_counter() - t0)
+            for _, _, (i, d) in merger.drain(r):
+                phi, ptot = fold(phi, ptot, i, d)
+            monitor.stragglers()
+        for _, _, (i, d) in merger.flush():
+            phi, ptot = fold(phi, ptot, i, d)
+        return phi
+
+    bare_s = _timeit(bare, reps)
+    wrapped_s = _timeit(wrapped, reps)
+    n = rounds * shards
+    return {
+        "shards": shards,
+        "rounds": rounds,
+        "rows_per_shard": W_s,
+        "bare_fold_s": bare_s,
+        "with_ft_s": wrapped_s,
+        "overhead_x": wrapped_s / max(bare_s, 1e-12),
+        "overhead_per_delta_us": (wrapped_s - bare_s) / n * 1e6,
+    }
+
+
 MP = 4              # model-axis width of the sharded suite's simulated mesh
 _SHARDED_MARK = "SHARDED_JSON:"
 
@@ -238,7 +318,7 @@ def main(rows=None, argv=None):
                     help="small smoke cell (CI)")
     ap.add_argument("--suite",
                     choices=("all", "full", "scheduled", "sharded",
-                             "sanitizer", "sharded-exec"),
+                             "sanitizer", "faults", "sharded-exec"),
                     default="all", help="which sweep variant(s) to time")
     ap.add_argument("--out", default=None,
                     help="output path; quick/partial runs default to "
@@ -318,6 +398,25 @@ def main(rows=None, argv=None):
                             f"overhead={sz['overhead_x']:.2f}"))
         payload["sanitizer_overhead"] = sz
         report.append(f"sanitizer {sz['overhead_x']:.2f}x overhead")
+
+    if args.suite in ("all", "faults"):
+        ft = bench_faults(cfg, reps,
+                          shards=2 if args.quick else 4,
+                          rounds=3 if args.quick else 6,
+                          rows_per_shard=min(1024, W))
+        rows.append(csv_row(
+            f"fold_bare_{cell}_s{ft['shards']}r{ft['rounds']}",
+            ft["bare_fold_s"] * 1e6, "impl=bare_fold;overhead=1.00",
+        ))
+        rows.append(csv_row(
+            f"fold_fault_tolerant_{cell}_s{ft['shards']}r{ft['rounds']}",
+            ft["with_ft_s"] * 1e6,
+            f"impl=monitor+merger+faultplan;"
+            f"overhead={ft['overhead_x']:.2f}",
+        ))
+        payload["fault_tolerance_overhead"] = ft
+        report.append(f"fault-tolerance {ft['overhead_x']:.2f}x overhead "
+                      f"({ft['overhead_per_delta_us']:.0f}us/delta)")
 
     if args.suite in ("all", "sharded"):
         sh = _bench_sharded_subprocess(args.quick)

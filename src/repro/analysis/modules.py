@@ -40,6 +40,7 @@ ROOTS = (
     "repro.core.baselines",
     "repro.core.sem",
     "repro.kernels.ops",
+    "repro.runtime.elastic",      # elastic fault-tolerant driver
     "repro.launch.train",
     "repro.launch.serve",
     "repro.launch.dryrun",
@@ -73,8 +74,6 @@ QUARANTINED_MODULES = frozenset({
     "repro.parallel.compression",
     "repro.parallel.moe_ep",
     "repro.parallel.pipeline",
-    "repro.runtime",
-    "repro.runtime.fault_tolerance",
 })
 
 

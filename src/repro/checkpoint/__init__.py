@@ -1,4 +1,18 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step
-from repro.checkpoint.elastic import reshard
+from repro.checkpoint.ckpt import (
+    CheckpointCorruptionError,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    scan_checkpoints,
+)
+from repro.checkpoint.elastic import reshard, restore_resharded
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "reshard"]
+__all__ = [
+    "CheckpointCorruptionError",
+    "latest_step",
+    "reshard",
+    "restore_checkpoint",
+    "restore_resharded",
+    "save_checkpoint",
+    "scan_checkpoints",
+]

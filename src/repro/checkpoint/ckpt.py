@@ -1,13 +1,18 @@
-"""Atomic pytree checkpoints.
+"""Atomic, crash-consistent pytree checkpoints.
 
 Layout:  <dir>/step_<n>/
-            manifest.json     — tree structure, shapes, dtypes, write fingerprint
+            manifest.json     — tree structure, shapes, dtypes, per-leaf crc32
             <leaf-index>.npy  — one file per leaf (streamable, partial-readable)
          <dir>/LATEST         — atomically-replaced pointer file
 
-Write protocol: write into ``step_<n>.tmp``, fsync files, rename the directory,
-then replace LATEST — a crash at any point leaves either the old or the new
-checkpoint valid (never a torn one).  Restart reads LATEST.
+Write protocol: write into ``step_<n>.tmp`` (every leaf and the manifest
+fsync'd), rename the directory — the commit point — then replace LATEST;
+directory fsyncs order the renames against power loss.  A crash (or a
+seeded ``kill`` fault — the chaos suite SIGKILLs at both injected
+boundaries) at any point leaves either the old or the new checkpoint valid,
+never a torn one: :func:`scan_checkpoints` on restart removes stale
+``.tmp`` debris, validates manifests + leaf checksums, and repairs a
+missing or dangling LATEST pointer to the newest intact checkpoint.
 
 Leaves are gathered to host before writing (CPU-scale corpora / the FOEM
 ParameterStore handles the big-model tier separately); sharded reload is done
@@ -19,10 +24,17 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Optional, Tuple
+import zlib
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.runtime import faults as fault_lib
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint failed validation (torn write / external damage)."""
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -30,7 +42,42 @@ def _flatten(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
-def save_checkpoint(path: str, step: int, tree: Any, *, keep: int = 3) -> str:
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _save_npy_synced(path: str, arr: np.ndarray) -> int:
+    """np.save + fsync; returns the file's crc32 (the manifest fingerprint)."""
+    with open(path, "wb") as f:
+        np.save(f, arr)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(path, "rb") as f:
+        return zlib.crc32(f.read())
+
+
+def save_checkpoint(
+    path: str,
+    step: int,
+    tree: Any,
+    *,
+    keep: int = 3,
+    faults: Optional[fault_lib.FaultPlan] = None,
+) -> str:
+    """Atomically persist ``tree`` as ``step_<n>``.
+
+    ``faults`` fires ``mid-flush`` after the shadow directory is fully
+    written but *before* the commit rename (kill → old checkpoint stands)
+    and ``pre-publish`` after the commit but before LATEST moves (kill →
+    new checkpoint exists; the recovery scan repairs the pointer).
+    """
     leaves, treedef = _flatten(tree)
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -41,23 +88,30 @@ def save_checkpoint(path: str, step: int, tree: Any, *, keep: int = 3) -> str:
                 "treedef": str(treedef), "leaves": []}
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, f"{i}.npy"), arr)
+        crc = _save_npy_synced(os.path.join(tmp, f"{i}.npy"), arr)
         manifest["leaves"].append(
-            {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+            {"shape": list(arr.shape), "dtype": str(arr.dtype), "crc": crc}
         )
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    if faults is not None:
+        faults.fire(fault_lib.MID_FLUSH, step=step)
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.replace(tmp, final)
+    os.replace(tmp, final)                       # ---- COMMIT ----
+    _fsync_dir(path)
+    if faults is not None:
+        faults.fire(fault_lib.PRE_PUBLISH, step=step)
     latest_tmp = os.path.join(path, "LATEST.tmp")
     with open(latest_tmp, "w") as f:
         f.write(os.path.basename(final))
         f.flush()
         os.fsync(f.fileno())
     os.replace(latest_tmp, os.path.join(path, "LATEST"))
+    _fsync_dir(path)
     _gc(path, keep)
     return final
 
@@ -69,6 +123,66 @@ def _gc(path: str, keep: int) -> None:
     )
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+
+
+def _validate(d: str) -> bool:
+    """Is ``step_<n>`` intact? (manifest readable, every leaf present with
+    a matching checksum — pre-crc checkpoints validate by presence only)."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    for i, spec in enumerate(manifest.get("leaves", [])):
+        p = os.path.join(d, f"{i}.npy")
+        if not os.path.exists(p):
+            return False
+        crc = spec.get("crc")
+        if crc is not None:
+            with open(p, "rb") as f:
+                if zlib.crc32(f.read()) != crc:
+                    return False
+    return True
+
+
+def scan_checkpoints(path: str) -> List[int]:
+    """Recovery scan: drop ``.tmp`` debris, validate every checkpoint, and
+    repair a missing/dangling LATEST.  Returns the valid steps (ascending).
+
+    Idempotent and safe to run on every open — the restart half of the
+    crash-consistency contract.
+    """
+    if not os.path.isdir(path):
+        return []
+    valid: List[int] = []
+    for name in sorted(os.listdir(path)):
+        full = os.path.join(path, name)
+        if name.endswith(".tmp"):                # uncommitted shadow
+            (shutil.rmtree if os.path.isdir(full) else os.unlink)(full)
+            continue
+        if not name.startswith("step_"):
+            continue
+        if _validate(full):
+            valid.append(int(name.split("_")[1]))
+        else:
+            shutil.rmtree(full, ignore_errors=True)   # torn: unusable
+    latest = os.path.join(path, "LATEST")
+    pointed: Optional[int] = None
+    if os.path.exists(latest):
+        with open(latest) as f:
+            name = f.read().strip()
+        if name.startswith("step_") and int(name.split("_")[1]) in valid:
+            pointed = int(name.split("_")[1])
+    if valid and pointed != valid[-1]:
+        tmp = latest + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"step_{valid[-1]:08d}")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, latest)
+    elif not valid and os.path.exists(latest):
+        os.unlink(latest)                        # dangling pointer
+    return valid
 
 
 def latest_step(path: str) -> Optional[int]:
@@ -83,11 +197,20 @@ def latest_step(path: str) -> Optional[int]:
 def restore_checkpoint(path: str, like: Any, *, step: Optional[int] = None,
                        shardings: Any = None) -> Tuple[int, Any]:
     """Restore into the structure of ``like``; optionally place per-leaf
-    shardings (a matching pytree of NamedSharding) — the elastic path."""
+    shardings (a matching pytree of NamedSharding) — the elastic path.
+
+    Runs the recovery scan first, so a restart right after a crash (torn
+    directory, stale LATEST) restores the newest *intact* checkpoint.
+    """
+    valid = scan_checkpoints(path)
     if step is None:
         step = latest_step(path)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {path}")
+    elif step not in valid:
+        raise CheckpointCorruptionError(
+            f"checkpoint step {step} under {path} is missing or torn"
+        )
     d = os.path.join(path, f"step_{step:08d}")
     leaves, treedef = jax.tree.flatten(like)
     out = []

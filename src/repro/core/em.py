@@ -106,6 +106,28 @@ def fold_phi(
     return delta_wk, weighted.sum(axis=(0, 1))
 
 
+def fold_phi_delta(
+    phi_wk: jax.Array,
+    phi_k: jax.Array,
+    word_ids: jax.Array,
+    delta_rows: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold a *compacted* Δφ̂ contribution into the global stats (eq. 33,
+    accumulate mode): ``φ̂_wk[word_ids] += Δrows``, ``φ̂_k += ΣΔrows``.
+
+    ``word_ids`` is the (R,) unique-row index of the contribution and
+    ``delta_rows`` its (R, K) dense delta — the shape a shard's sweep
+    publishes and the ``BoundedStalenessMerger`` parks.  The fold is a pure
+    scatter-add: commutative across contributions, so folding a merger's
+    canonically-ordered drain is bitwise reproducible regardless of how
+    shards raced (the SA argument of eq. 19 says the *order* was already
+    free; canonical release makes it deterministic too).
+    """
+    phi_wk = phi_wk.at[word_ids].add(delta_rows)
+    phi_k = phi_k + delta_rows.sum(axis=0)
+    return phi_wk, phi_k
+
+
 # ---------------------------------------------------------------------------
 # Sweeps
 # ---------------------------------------------------------------------------

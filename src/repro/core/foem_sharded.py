@@ -59,6 +59,7 @@ from repro.core import em, foem
 from repro.core import scheduling as sched_lib
 from repro.kernels import ops as kops
 from repro.parallel import compat
+from repro.runtime import faults as fault_lib
 from repro.core.types import (
     GlobalStats,
     LDAConfig,
@@ -214,6 +215,7 @@ def foem_step_sharded(
     dp_axis: str = "data",
     tp_axis: str = "model",
     impl: str = "auto",
+    faults: Optional[fault_lib.FaultPlan] = None,
 ):
     """shard_map FOEM step: φ̂ K-sharded over ``model``, docs over ``data``.
 
@@ -222,10 +224,31 @@ def foem_step_sharded(
     Pallas launches on TPU, the portable two-phase mirror elsewhere;
     "interpret" runs the kernel bodies on CPU — tests).
     Returns (new_stats, final train ppl).
+
+    ``faults`` (or the process-wide active plan) fires ``pre-probe`` once
+    per model shard at this host boundary *before* the shard_map launch —
+    injection never enters traced code.  A ``kill`` raises
+    :class:`~repro.runtime.faults.InjectedFault` carrying the shard id (the
+    elastic driver catches it, reshards onto the survivors and resumes); a
+    ``delay`` sleeps here, stretching exactly this step's wall-clock the
+    way a straggling shard would (what ``StragglerMonitor`` times); a
+    ``drop`` discards the whole step's contribution — stats are returned
+    unchanged with ``ppl = nan`` so the driver re-issues the minibatch.
     """
     mp = mesh.shape[tp_axis]
     assert cfg.topk_shards == mp, (cfg.topk_shards, mp)
     assert cfg.K % mp == 0 and cfg.active_topics % mp == 0
+
+    plan_ = faults if faults is not None else fault_lib.get_active()
+    if plan_ is not None and not isinstance(stats.step, jax.core.Tracer):
+        step_now = int(stats.step)
+        dropped = False
+        for s in range(mp):
+            dropped |= plan_.fire(
+                fault_lib.PRE_PROBE, shard=s, step=step_now
+            )
+        if dropped:
+            return stats, jnp.float32(float("nan"))
 
     dp_all = tuple(a for a in mesh.axis_names if a != tp_axis)
 

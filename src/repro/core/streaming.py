@@ -52,13 +52,78 @@ the checkpoint substrate.
 from __future__ import annotations
 
 import dataclasses
+import io
 import json
 import os
+import struct
 import threading
 import time
-from typing import Iterable, Iterator, NamedTuple, Tuple
+import zlib
+from typing import Iterable, Iterator, NamedTuple, Optional, Tuple
 
 import numpy as np
+
+from repro.runtime import faults as fault_lib
+
+
+class StoreCorruptionError(RuntimeError):
+    """The on-disk store state is not recoverable to a consistent version
+    (externally corrupted manifest with no valid WAL to rebuild from)."""
+
+
+_WAL_MAGIC = b"FOEMWAL1"
+
+
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync (durability of renames on POSIX)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_record(path: str, arrays: dict, meta: dict) -> None:
+    """Shadow-write a checksummed record file (fsync'd, NOT renamed —
+    the caller owns the atomic-rename commit point)."""
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    meta_bytes = json.dumps(meta, sort_keys=True).encode()
+    body = struct.pack("<II", len(meta_bytes), len(payload)) + meta_bytes + payload
+    with open(path, "wb") as f:
+        f.write(_WAL_MAGIC)
+        f.write(struct.pack("<I", zlib.crc32(body)))
+        f.write(body)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _read_record(path: str) -> Optional[Tuple[dict, dict]]:
+    """Read a record written by ``_write_record``; ``None`` when torn or
+    corrupt (bad magic / truncated / checksum mismatch)."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except OSError:
+        return None
+    hdr = len(_WAL_MAGIC) + 4
+    if len(raw) < hdr + 8 or raw[: len(_WAL_MAGIC)] != _WAL_MAGIC:
+        return None
+    (crc,) = struct.unpack_from("<I", raw, len(_WAL_MAGIC))
+    body = raw[hdr:]
+    if zlib.crc32(body) != crc:
+        return None
+    meta_len, payload_len = struct.unpack_from("<II", body, 0)
+    if len(body) != 8 + meta_len + payload_len:
+        return None
+    meta = json.loads(body[8 : 8 + meta_len].decode())
+    with np.load(io.BytesIO(body[8 + meta_len :])) as z:
+        arrays = {k: z[k] for k in z.files}
+    return arrays, meta
 
 
 @dataclasses.dataclass
@@ -111,6 +176,7 @@ class ParameterStore:
 
     MANIFEST = "store.json"
     BACKING = "phi_wk.mmap"
+    WAL = "store.wal"
 
     def __init__(
         self,
@@ -119,6 +185,7 @@ class ParameterStore:
         vocab_capacity: int,
         buffer_rows: int = 0,
         dtype=np.float32,
+        faults: Optional[fault_lib.FaultPlan] = None,
     ):
         self.path = path
         self.K = int(num_topics)
@@ -130,6 +197,9 @@ class ParameterStore:
         self.step = 0                            # minibatch cursor (restart point)
         self.stats = StoreStats()
         self.write_version = 0                   # bumps on every write_rows
+        self.flush_version = 0                   # bumps on every committed flush
+        self.faults = faults                     # seeded fault-injection plan
+        self.recovered_from_wal = False          # last open replayed a WAL
         self._lock = threading.RLock()
         # ---- array-backed LRU (empty slots carry id == -1) ----
         W_star = self.buffer_rows
@@ -150,7 +220,7 @@ class ParameterStore:
         # blocks); durability still goes through self._mm.flush().
         self._arr = np.asarray(self._mm)
         if mode == "r+":
-            self._load_manifest()
+            self._recover()
 
     # ------------------------------------------------------------------ I/O
 
@@ -319,48 +389,152 @@ class ParameterStore:
 
     # ---------------------------------------------------------- persistence
 
+    def _fire(self, point: str) -> None:
+        if self.faults is not None:
+            self.faults.fire(point, step=self.step)
+
     def flush(self) -> None:
-        """Write back all dirty buffer rows + memmap + manifest (fsync'd)."""
+        """Crash-consistent flush: WAL-committed write-back of all dirty
+        buffer rows + memmap + manifest.
+
+        Protocol (every on-disk transition is shadow-write → fsync →
+        atomic rename, so a SIGKILL at ANY point leaves the store
+        recoverable to a consistent version — see ``_recover``):
+
+          1. snapshot the dirty rows + scalars into ``store.wal.tmp``
+             (checksummed, fsync'd);                       [kill → old version]
+          2. rename to ``store.wal`` — the COMMIT point;   [kill → new version]
+          3. apply the rows to the memmap and msync;       [kill → new version]
+          4. atomically replace the manifest;              [kill → new version]
+          5. retire the WAL.
+
+        The seeded fault points: ``mid-flush`` fires between 1 and 2
+        (pre-commit), ``pre-publish`` between 3 and 4 (post-apply,
+        pre-manifest) — the two sides of the commit the chaos tests kill
+        at.
+        """
         with self._lock:
             dirty_slots = np.flatnonzero(self._buf_dirty)
-            if len(dirty_slots):
-                d_ids = self._buf_ids[dirty_slots]
-                order = np.argsort(d_ids)
-                self._arr[d_ids[order]] = self._buf[dirty_slots[order]]
+            d_ids = self._buf_ids[dirty_slots]
+            order = np.argsort(d_ids)
+            d_ids = d_ids[order]
+            d_rows = self._buf[dirty_slots[order]]
+            wal = self._wal_path()
+            _write_record(
+                wal + ".tmp",
+                {"ids": d_ids, "rows": d_rows, "phi_k": self.phi_k},
+                self._manifest_payload(version=self.flush_version + 1),
+            )
+            self._fire(fault_lib.MID_FLUSH)
+            os.replace(wal + ".tmp", wal)              # ---- COMMIT ----
+            _fsync_dir(self.path)
+            if len(d_ids):
+                self._arr[d_ids] = d_rows
                 self.stats.disk_writes += len(d_ids)
                 self._buf_dirty[dirty_slots] = False
             self._mm.flush()
+            self._fire(fault_lib.PRE_PUBLISH)
+            self.flush_version += 1
             self._save_manifest()
+            os.unlink(wal)
 
     def _manifest_path(self) -> str:
         return os.path.join(self.path, self.MANIFEST)
 
-    def _save_manifest(self) -> None:
-        tmp = self._manifest_path() + ".tmp"
-        payload = {
+    def _wal_path(self) -> str:
+        return os.path.join(self.path, self.WAL)
+
+    def _manifest_payload(self, version: Optional[int] = None) -> dict:
+        return {
             "K": self.K,
             "capacity": self.capacity,
             "live_vocab": self.live_vocab,
             "step": self.step,
             "phi_k": self.phi_k.tolist(),
             "dtype": self.dtype.name,
+            "version": self.flush_version if version is None else version,
         }
+
+    def _save_manifest(self) -> None:
+        tmp = self._manifest_path() + ".tmp"
+        payload = self._manifest_payload()
+        payload["crc"] = zlib.crc32(
+            json.dumps(payload, sort_keys=True).encode()
+        )
         with open(tmp, "w") as f:
             json.dump(payload, f)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self._manifest_path())   # atomic rename
+        _fsync_dir(self.path)
+
+    def _apply_manifest(self, payload: dict) -> None:
+        assert payload["K"] == self.K, "topic count mismatch on restart"
+        self.live_vocab = int(payload["live_vocab"])
+        self.step = int(payload["step"])
+        self.phi_k = np.asarray(payload["phi_k"], np.float64)  # lint: host-f64
+        self.flush_version = int(payload.get("version", 0))
+
+    def _recover(self) -> None:
+        """Recovery scan on open: roll the store to its last consistent
+        version.
+
+        * stale ``*.tmp`` shadows (a kill before a commit rename) are
+          deleted;
+        * a valid committed WAL is replayed — rows into the memmap,
+          scalars into the manifest — and retired (idempotent: replaying
+          an already-applied WAL rewrites identical bytes), repairing both
+          a missing/stale manifest and a partially applied memmap write;
+        * a torn/corrupt WAL means the flush never committed: it is
+          discarded and the previous manifest version stands;
+        * a corrupt manifest with no WAL to rebuild from raises
+          ``StoreCorruptionError`` (external damage, not a crash artifact
+          — every crash window above leaves a recoverable state).
+        """
+        self.recovered_from_wal = False
+        for stale in (self._wal_path() + ".tmp",
+                      self._manifest_path() + ".tmp"):
+            if os.path.exists(stale):
+                os.unlink(stale)
+        wal = self._wal_path()
+        if os.path.exists(wal):
+            rec = _read_record(wal)
+            if rec is None:                      # torn: never committed
+                os.unlink(wal)
+            else:
+                arrays, meta = rec
+                ids = arrays["ids"].astype(np.int64)
+                if len(ids):
+                    self._arr[ids] = arrays["rows"].astype(self.dtype)
+                self._mm.flush()
+                self._apply_manifest(
+                    {**meta, "phi_k": arrays["phi_k"].tolist()}
+                )
+                self._save_manifest()
+                os.unlink(wal)
+                self.recovered_from_wal = True
+                return
+        self._load_manifest()
 
     def _load_manifest(self) -> None:
         p = self._manifest_path()
         if not os.path.exists(p):
             return
-        with open(p) as f:
-            payload = json.load(f)
-        assert payload["K"] == self.K, "topic count mismatch on restart"
-        self.live_vocab = payload["live_vocab"]
-        self.step = payload["step"]
-        self.phi_k = np.asarray(payload["phi_k"], np.float64)  # lint: host-f64
+        try:
+            with open(p) as f:
+                payload = json.load(f)
+            crc = payload.pop("crc", None)
+        except (OSError, ValueError) as e:
+            raise StoreCorruptionError(
+                f"unreadable store manifest {p} and no WAL to rebuild from"
+            ) from e
+        if crc is not None and crc != zlib.crc32(
+            json.dumps(payload, sort_keys=True).encode()
+        ):
+            raise StoreCorruptionError(
+                f"store manifest {p} fails its checksum and no WAL exists"
+            )
+        self._apply_manifest(payload)
 
     # ------------------------------------------------------------- helpers
 

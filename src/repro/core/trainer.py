@@ -31,6 +31,7 @@ import numpy as np
 from repro.core import em, foem, sem
 from repro.core.streaming import ParameterStore, StreamPrefetcher
 from repro.core.types import GlobalStats, LDAConfig, MinibatchData
+from repro.runtime import faults as fault_lib
 from repro.sparse.minibatch import Minibatch, MinibatchStream
 
 
@@ -59,6 +60,7 @@ class FOEMTrainer:
         checkpoint_every: int = 0,
         algorithm: str = "foem",   # "foem" | "sem"
         prefetch_depth: int = 1,   # 0 = fully synchronous host I/O
+        faults: Optional[fault_lib.FaultPlan] = None,
     ):
         if store.K != cfg.K:
             raise ValueError("store/config topic count mismatch")
@@ -68,6 +70,10 @@ class FOEMTrainer:
         self.checkpoint_every = checkpoint_every
         self.algorithm = algorithm
         self.prefetch_depth = int(prefetch_depth)
+        self.faults = faults
+        # steps whose contribution a seeded "drop" fault discarded — the
+        # re-issue queue a driver replays through MinibatchStream
+        self.dropped_steps: List[int] = []
         self.history: List[StepMetrics] = []
         # snapshot of cumulative store I/O counters at the last step boundary
         self._stats_base = (
@@ -162,6 +168,12 @@ class FOEMTrainer:
         cfg = self.cfg
         if t0 is None:
             t0 = time.perf_counter()
+        # pre-probe: a "kill" raises before any state is touched; a "drop"
+        # skips this minibatch entirely (contribution lost → re-issue queue)
+        if self.faults is not None and self.faults.fire(
+            fault_lib.PRE_PROBE, step=self.store.step
+        ):
+            return self._dropped_step(mb, phi_rows, t0), phi_rows
         self.store.ensure_vocab(int(mb.local_vocab.max(initial=0)))
         phi_k = self.store.phi_k.astype(np.float32)                # (K,)
 
@@ -184,6 +196,14 @@ class FOEMTrainer:
             (new_rows, new_phi_k, sweeps, ppl)
         )
         new_phi_k = np.asarray(new_phi_k, np.float64)  # lint: host-f64 — RAM accumulator
+
+        # post-fold: the local fold is complete but unpublished — a "kill"
+        # here loses exactly this minibatch (the paper's restart unit); a
+        # "drop" discards the fold without touching the store.
+        if self.faults is not None and self.faults.fire(
+            fault_lib.POST_FOLD, step=self.store.step
+        ):
+            return self._dropped_step(mb, phi_rows, t0), phi_rows
 
         # --- write back + advance cursor ---
         self.store.write_rows(mb.local_vocab, new_rows)
@@ -211,6 +231,34 @@ class FOEMTrainer:
         )
         self.history.append(m)
         return m, new_rows
+
+    def _dropped_step(
+        self, mb: Minibatch, phi_rows: np.ndarray, t0: float
+    ) -> StepMetrics:
+        """Account for a minibatch whose contribution a fault discarded.
+
+        The store is untouched and the cursor still advances (the stream
+        consumed the minibatch); the step index lands in
+        ``dropped_steps`` so a driver can re-issue it.  Metrics carry
+        ``sweeps=0`` / ``ppl=nan`` — a visibly-dropped cell, not a fake
+        convergence point.
+        """
+        self.store.step += 1
+        self.dropped_steps.append(self.store.step)
+        st = self.store.stats
+        base = self._stats_base
+        self._stats_base = (st.disk_reads, st.disk_writes, st.buffer_hits)
+        m = StepMetrics(
+            step=self.store.step,
+            sweeps=0,
+            train_ppl=float("nan"),
+            seconds=time.perf_counter() - t0,
+            disk_reads=st.disk_reads - base[0],
+            disk_writes=st.disk_writes - base[1],
+            buffer_hits=st.buffer_hits - base[2],
+        )
+        self.history.append(m)
+        return m
 
     # ------------------------------------------------------------------
 

@@ -561,6 +561,15 @@ def sweep(
       invariants on the result via ``checkify`` — eager calls raise
       immediately, jitted callers wrap with ``checkify.checkify``.
     """
+    # Seeded fault injection (runtime/faults.py): eager calls consult the
+    # process-wide plan at the pre-probe boundary.  Skipped under tracing —
+    # a fault must never be staged into a jit cache — and free (one None
+    # check) when no plan is active.  Lazy import: faults lives above the
+    # kernel layer.
+    if not isinstance(word_ids, jax.core.Tracer):
+        from repro.runtime import faults as _faults
+
+        _faults.fire_active(_faults.PRE_PROBE)
     forced_pallas = use_pallas is True or (
         plan is not None and plan.axis_name is None and plan.impl == "pallas"
     )

@@ -1,6 +1,42 @@
+"""Runtime fault tolerance: seeded fault injection, straggler mitigation,
+bounded-staleness merging, and the elastic driver.
+
+``repro.runtime.elastic`` is intentionally NOT imported here: it depends on
+``repro.core``, while ``faults``/``fault_tolerance`` are dependency-light and
+imported *by* the core/kernel layers — an eager import would cycle.
+"""
 from repro.runtime.fault_tolerance import (
     BoundedStalenessMerger,
     StragglerMonitor,
 )
+from repro.runtime.faults import (
+    ANY_STEP,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    MID_FLUSH,
+    POINTS,
+    POST_FOLD,
+    PRE_PROBE,
+    PRE_PUBLISH,
+    active_plan,
+    fire_active,
+    get_active,
+)
 
-__all__ = ["BoundedStalenessMerger", "StragglerMonitor"]
+__all__ = [
+    "ANY_STEP",
+    "BoundedStalenessMerger",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "MID_FLUSH",
+    "POINTS",
+    "POST_FOLD",
+    "PRE_PROBE",
+    "PRE_PUBLISH",
+    "StragglerMonitor",
+    "active_plan",
+    "fire_active",
+    "get_active",
+]

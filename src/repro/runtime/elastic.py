@@ -1,0 +1,338 @@
+"""Elastic FOEM driver: straggler-aware, fault-tolerant data-parallel rounds.
+
+This is the host-level runtime the multi-host ROADMAP item needs: it wires
+the previously-orphaned :class:`~repro.runtime.fault_tolerance.StragglerMonitor`
+and :class:`~repro.runtime.fault_tolerance.BoundedStalenessMerger` into the
+actual FOEM step, with the seeded :class:`~repro.runtime.faults.FaultPlan`
+as the reproducible failure source.
+
+Execution model (a round = one Jacobi super-step over ``num_shards``
+logical data shards):
+
+  1. each shard draws a minibatch (retry queue first, then the stream —
+     the stream cursor counts every consumed minibatch, the crash-resume
+     coordinate);
+  2. each shard runs the paper's inner loop (``foem.foem_minibatch``) on
+     its minibatch against the *round-start* φ̂ snapshot — the
+     bounded-staleness E-step view — and publishes a compacted
+     ``(local_vocab, Δrows)`` delta; its wall-clock is recorded by the
+     ``StragglerMonitor`` (seeded ``delay`` faults stretch exactly this);
+  3. deltas go to the ``BoundedStalenessMerger``; whatever it releases
+     (canonical round/shard order) is folded into global φ̂ through
+     ``em.fold_phi_delta`` — the eq. 33 accumulate fold, so the final φ̂
+     is a pure function of *what* was folded, bitwise independent of
+     arrival races (eq. 19's SA argument makes the order free in theory;
+     canonical release makes it deterministic in practice);
+  4. contributions lost to ``drop`` faults — and merger-dropped
+     too-late arrivals surfaced via ``reissue()`` — go back on the retry
+     queue with bounded attempts + linear backoff; exhausted minibatches
+     land in ``lost`` (the paper's restart unit: lose at most those
+     minibatches, never φ̂).
+
+A ``kill`` fault raises :class:`~repro.runtime.faults.InjectedFault` out of
+:meth:`run` — state (φ̂, round, cursor) stays consistent, so a driver
+checkpoints, drops the dead shard (:meth:`remove_shard`) and calls
+:meth:`run` again: elastic shrink without losing the stream position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import em, foem
+from repro.core.types import GlobalStats, LDAConfig, MinibatchData
+from repro.runtime import faults as fault_lib
+from repro.runtime.fault_tolerance import BoundedStalenessMerger, StragglerMonitor
+from repro.sparse.minibatch import Minibatch
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """What one elastic round did — the chaos suite's assertion surface."""
+
+    round_idx: int
+    shards_run: List[int]
+    folded: int                 # deltas folded into φ̂ this round
+    requeued: int               # contributions lost → back on the retry queue
+    lost: int                   # minibatches that exhausted their retries
+    stragglers: List[int]
+    train_ppl: float            # mean of the shard ppls that survived
+    seconds: float
+
+
+class ElasticFOEMRuntime:
+    """Data-parallel FOEM over ``num_shards`` logical shards with fault
+    tolerance wired end-to-end (see module docstring).
+
+    ``phi_wk``/``phi_k`` are the dense lifetime sufficient statistics
+    (``rho_mode == "accumulate"`` semantics — the merger's order-invariance
+    guarantee is exactly the eq. 33 fold's commutativity).  ``clock`` and
+    ``sleep`` are injectable for deterministic tests.
+    """
+
+    def __init__(
+        self,
+        cfg: LDAConfig,
+        *,
+        num_shards: int,
+        seed: int = 0,
+        max_staleness: int = 1,
+        max_retries: int = 2,
+        backoff_seconds: float = 0.0,
+        monitor: Optional[StragglerMonitor] = None,
+        merger: Optional[BoundedStalenessMerger] = None,
+        faults: Optional[fault_lib.FaultPlan] = None,
+        clock: Callable[[], float] = time.perf_counter,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.cfg = cfg
+        self.num_shards = int(num_shards)
+        self.key = jax.random.PRNGKey(seed)
+        self.max_retries = int(max_retries)
+        self.backoff_seconds = float(backoff_seconds)
+        self.monitor = monitor or StragglerMonitor()
+        self.merger = merger or BoundedStalenessMerger(
+            max_staleness=max_staleness, expected_shards=num_shards
+        )
+        self.faults = faults
+        self._clock = clock
+        self._sleep = sleep
+
+        self.phi_wk = jnp.zeros((cfg.W, cfg.K), jnp.float32)
+        self.phi_k = jnp.zeros((cfg.K,), jnp.float32)
+        self.round = 0
+        self.cursor = 0                      # minibatches consumed (resume)
+        self.lost: List[int] = []            # minibatch indices given up on
+        self.reports: List[RoundReport] = []
+        # retry queue: (minibatch, attempts-so-far)
+        self._retry: Deque[Tuple[Minibatch, int]] = deque()
+        # recent round → shard → minibatch, for merger re-issue attribution
+        self._issued: Dict[int, Dict[int, Minibatch]] = {}
+        self._jit_cache: Dict = {}
+
+    # ------------------------------------------------------------- state
+
+    def stats(self) -> GlobalStats:
+        return GlobalStats(
+            phi_wk=self.phi_wk, phi_k=self.phi_k, step=jnp.int32(self.round)
+        )
+
+    def checkpoint_tree(self) -> dict:
+        """The crash-resume coordinate: lifetime stats + stream position."""
+        return {
+            "phi_wk": self.phi_wk,
+            "phi_k": self.phi_k,
+            "round": jnp.int32(self.round),
+            "cursor": jnp.int32(self.cursor),
+        }
+
+    def load_checkpoint_tree(self, tree: dict) -> None:
+        self.phi_wk = jnp.asarray(tree["phi_wk"], jnp.float32)
+        self.phi_k = jnp.asarray(tree["phi_k"], jnp.float32)
+        self.round = int(tree["round"])
+        self.cursor = int(tree["cursor"])
+
+    def remove_shard(self, shard: int) -> None:
+        """Elastic shrink after a shard death: forget its latency history
+        and expect one fewer contribution per round from now on."""
+        if self.num_shards <= 1:
+            raise ValueError("cannot remove the last shard")
+        self.num_shards -= 1
+        self.monitor.forget(shard)
+        if self.merger.expected_shards is not None:
+            self.merger.expected_shards = self.num_shards
+
+    # ----------------------------------------------------------- compute
+
+    def _delta_fn(self):
+        cfg = self.cfg
+
+        def run(key, batch, phi_rows, phi_k, live_w):
+            res = foem.foem_minibatch(
+                key, batch, phi_rows, phi_k, cfg, vocab_size=live_w
+            )
+            # compacted Δ on this minibatch's rows — what the merger parks
+            return (res.phi_wk - phi_rows, res.phi_k - phi_k,
+                    res.diag.final_train_ppl)
+
+        return jax.jit(run, static_argnames=("live_w",))
+
+    def _compute_delta(self, mb: Minibatch):
+        """Shard-local inner loop against the round-start snapshot; returns
+        ``(local_vocab, delta_rows, delta_k, ppl)`` (compacted Δφ̂)."""
+        shapes = (mb.local_word_ids.shape, mb.local_vocab.shape)
+        fn = self._jit_cache.get(shapes)
+        if fn is None:
+            fn = self._jit_cache[shapes] = self._delta_fn()
+        phi_rows = self.phi_wk[jnp.asarray(mb.local_vocab)]
+        batch = MinibatchData(
+            word_ids=jnp.asarray(mb.local_word_ids),
+            counts=jnp.asarray(mb.counts),
+        )
+        self.key, sub = jax.random.split(self.key)
+        d_rows, d_k, ppl = fn(sub, batch, phi_rows, self.phi_k, self.cfg.W)
+        return mb.local_vocab, d_rows, d_k, float(ppl)
+
+    def _fold(self, delta) -> None:
+        """Eq. 33 accumulate fold of one compacted delta (the
+        ``fold_phi_delta`` path)."""
+        ids, d_rows, d_k = delta
+        self.phi_wk, _ = em.fold_phi_delta(
+            self.phi_wk, self.phi_k, jnp.asarray(ids), d_rows
+        )
+        self.phi_k = self.phi_k + d_k
+
+    # ------------------------------------------------------------- rounds
+
+    def _requeue(self, mb: Minibatch, attempts: int) -> bool:
+        """Bounded retry + linear backoff; returns False when given up."""
+        if attempts > self.max_retries:
+            self.lost.append(mb.index)
+            return False
+        if self.backoff_seconds > 0.0:
+            self._sleep(self.backoff_seconds * attempts)
+        self._retry.append((mb, attempts))
+        return True
+
+    def _next_assignments(
+        self, it: Iterator[Minibatch]
+    ) -> List[Tuple[int, Minibatch, int]]:
+        """Fill up to ``num_shards`` slots: retries first, then the stream
+        (each stream pull advances the resume cursor)."""
+        out: List[Tuple[int, Minibatch, int]] = []
+        for shard in range(self.num_shards):
+            if self._retry:
+                mb, attempts = self._retry.popleft()
+                out.append((shard, mb, attempts))
+                continue
+            try:
+                mb = next(it)
+            except StopIteration:
+                break
+            self.cursor += 1
+            out.append((shard, mb, 0))
+        return out
+
+    def run(
+        self,
+        stream: Iterator[Minibatch],
+        *,
+        max_rounds: Optional[int] = None,
+    ) -> List[RoundReport]:
+        """Drive elastic rounds until the stream (and retry queue) drain.
+
+        Raises :class:`~repro.runtime.faults.InjectedFault` when a seeded
+        kill fires; φ̂/round/cursor are consistent at that point, so the
+        caller may checkpoint, :meth:`remove_shard` and re-enter with the
+        remaining stream.
+        """
+        it = iter(stream)
+        ran = 0
+        reports: List[RoundReport] = []
+        while max_rounds is None or ran < max_rounds:
+            assignments = self._next_assignments(it)
+            if not assignments:
+                break
+            reports.append(self._run_round(assignments))
+            ran += 1
+        # end of stream: release everything still parked
+        if max_rounds is None or ran < max_rounds:
+            for _, _, delta in self.merger.flush():
+                self._fold(delta)
+        return reports
+
+    def _run_round(
+        self, assignments: List[Tuple[int, Minibatch, int]]
+    ) -> RoundReport:
+        r = self.round
+        t_round = self._clock()
+        ppls: List[float] = []
+        requeued = lost = 0
+        self._issued[r] = {}
+        try:
+            self._shard_pass(r, assignments, ppls)
+        except fault_lib.InjectedFault:
+            # roll the round back: re-park every assigned minibatch (the
+            # killed shard's attempt counts against its retry bound) and
+            # discard the round's parked deltas — on re-entry after the
+            # caller shrinks the fleet, round r re-runs from scratch, so
+            # the kill loses no minibatch and double-folds nothing.
+            self._issued.pop(r, None)
+            self.merger.pending.pop(r, None)
+            for shard, mb, attempts in assignments:
+                self._requeue(mb, attempts + 1)
+            raise
+        self.round += 1
+        released = self.merger.drain(self.round - 1)
+        for _, _, delta in released:
+            self._fold(delta)
+        folded_n = len(released)
+        # -- re-issue merger-dropped late arrivals (bounded retry) --
+        for shard, rnd in self.merger.reissue():
+            mb = self._issued.get(rnd, {}).pop(shard, None)
+            if mb is not None:
+                if self._requeue(mb, 1):
+                    requeued += 1
+                else:
+                    lost += 1
+        # prune the issued ledger past the staleness window
+        horizon = self.round - self.merger.max_staleness - 2
+        for old in [k for k in self._issued if k < horizon]:
+            del self._issued[old]
+
+        # account drops/losses recorded by the shard pass
+        requeued += self._round_requeued
+        lost += self._round_lost
+        report = RoundReport(
+            round_idx=r,
+            shards_run=[s for s, _, _ in assignments],
+            folded=folded_n,
+            requeued=requeued,
+            lost=lost,
+            stragglers=self.monitor.stragglers(),
+            train_ppl=float(np.mean(ppls)) if ppls else float("nan"),
+            seconds=self._clock() - t_round,
+        )
+        self.reports.append(report)
+        return report
+
+    def _shard_pass(
+        self,
+        r: int,
+        assignments: List[Tuple[int, Minibatch, int]],
+        ppls: List[float],
+    ) -> None:
+        self._round_requeued = self._round_lost = 0
+        for shard, mb, attempts in assignments:
+            t0 = self._clock()
+            survived = True
+            if self.faults is not None and self.faults.fire(
+                fault_lib.PRE_PROBE, shard=shard, step=r
+            ):
+                survived = False       # pre-probe drop: nothing computed
+            if survived:
+                delta = self._compute_delta(mb)
+                ids, d_rows, d_k, ppl = delta
+                if self.faults is not None and self.faults.fire(
+                    fault_lib.POST_FOLD, shard=shard, step=r
+                ):
+                    survived = False   # post-fold drop: Δ discarded
+            self.monitor.record(shard, self._clock() - t0)
+            if not survived:
+                if self._requeue(mb, attempts + 1):
+                    self._round_requeued += 1
+                else:
+                    self._round_lost += 1
+                continue
+            self._issued[r][shard] = mb
+            if not self.merger.submit(shard, r, (ids, d_rows, d_k)):
+                continue               # recorded in merger.dropped
+            ppls.append(ppl)

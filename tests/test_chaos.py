@@ -1,0 +1,269 @@
+"""Chaos suite: seeded fault injection under real process death and the
+e2e elastic-resume path on the 4-fake-device mesh.
+
+Two kinds of test here, both driven by ``runtime/faults.py`` plans:
+
+* **crash consistency** — a sacrificial subprocess SIGKILLs itself
+  (``hard=True`` kill specs) inside ``ParameterStore.flush`` / checkpoint
+  save; the parent then opens the survivors and asserts recovery lands on
+  a consistent version (the WAL-commit protocol's contract: a kill at ANY
+  injected point never corrupts φ̂).
+
+* **elastic resume** — a seeded shard-kill mid-stream on a (data=2,
+  model=2) mesh; the driver checkpoints, reshards onto the surviving
+  (data=2, model=1) mesh (``checkpoint/elastic.restore_resharded``),
+  resumes from the data cursor, and the held-out perplexity matches the
+  unfaulted run within stochastic-approximation tolerance — the paper's
+  eq. 19 argument made operational.
+
+Subprocesses keep the XLA fake-device flag (and the SIGKILLs) away from
+the rest of the suite — the same pattern as test_distributed.py.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(body: str, devices: int = 0, expect_signal: int = 0) -> str:
+    preamble = "import os\n"
+    if devices:
+        preamble += (
+            "os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+        )
+    code = preamble + textwrap.dedent(body)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    if expect_signal:
+        assert r.returncode == -expect_signal, (
+            f"expected death by signal {expect_signal}, got "
+            f"{r.returncode}\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+        )
+    else:
+        assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# ParameterStore: SIGKILL at the injected flush points
+# ---------------------------------------------------------------------------
+
+_STORE_SETUP = """
+import numpy as np
+from repro.core.streaming import ParameterStore
+from repro.runtime import faults
+d = {path!r}
+plan = faults.FaultPlan([faults.FaultSpec(
+    point={point!r}, kind="kill", step=5, hard=True)])
+s = ParameterStore(d, num_topics=4, vocab_capacity=64, buffer_rows=16,
+                   faults=plan)
+s.write_rows(np.arange(3), np.full((3, 4), 2.0, np.float32))
+s.phi_k = np.full(4, 6.0); s.step = 1
+s.flush()                                # version 1 lands cleanly
+s.write_rows(np.arange(3), np.full((3, 4), 9.0, np.float32))
+s.phi_k = np.full(4, 27.0); s.step = 5
+s.flush()                                # SIGKILL fires inside this one
+raise SystemExit("fault did not fire")
+"""
+
+
+@pytest.mark.parametrize("point,expect_new", [
+    ("mid-flush", False),     # killed before the WAL commit → old version
+    ("pre-publish", True),    # killed after apply, before manifest → new
+])
+def test_store_sigkill_recovers_consistent_version(tmp_path, point,
+                                                   expect_new):
+    from repro.core.streaming import ParameterStore
+
+    _run(_STORE_SETUP.format(path=str(tmp_path), point=point),
+         expect_signal=signal.SIGKILL)
+    s = ParameterStore(str(tmp_path), num_topics=4, vocab_capacity=64,
+                       buffer_rows=16)
+    if expect_new:
+        assert s.step == 5 and s.recovered_from_wal
+        np.testing.assert_allclose(s.fetch_rows(np.arange(3)), 9.0)
+        np.testing.assert_allclose(s.phi_k, 27.0)
+    else:
+        assert s.step == 1 and not s.recovered_from_wal
+        np.testing.assert_allclose(s.fetch_rows(np.arange(3)), 2.0)
+        np.testing.assert_allclose(s.phi_k, 6.0)
+    # either way: a consistent version, never a torn mix
+    assert not os.path.exists(tmp_path / "store.wal")
+    assert not os.path.exists(tmp_path / "store.wal.tmp")
+
+
+def test_store_torn_manifest_repaired_by_wal(tmp_path):
+    """External truncation of the manifest is survivable while the WAL
+    exists (the pre-publish crash window); without one it raises."""
+    from repro.core.streaming import ParameterStore, StoreCorruptionError
+
+    _run(_STORE_SETUP.format(path=str(tmp_path), point="pre-publish"),
+         expect_signal=signal.SIGKILL)
+    # simulate a torn manifest on top of the committed WAL
+    with open(tmp_path / "store.json", "r+") as f:
+        f.truncate(10)
+    s = ParameterStore(str(tmp_path), num_topics=4, vocab_capacity=64,
+                       buffer_rows=16)
+    assert s.step == 5 and s.recovered_from_wal
+    # now corrupt the manifest with no WAL left → hard error, not silence
+    with open(tmp_path / "store.json", "r+") as f:
+        f.truncate(10)
+    with pytest.raises(StoreCorruptionError):
+        ParameterStore(str(tmp_path), num_topics=4, vocab_capacity=64,
+                       buffer_rows=16)
+
+
+def test_checkpoint_sigkill_mid_save(tmp_path):
+    """SIGKILL inside save_checkpoint leaves the previous checkpoint
+    restorable (mid-flush: before the commit rename)."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    import jax.numpy as jnp
+
+    tree = {"x": jnp.arange(4.0)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    _run(f"""
+    import jax.numpy as jnp
+    from repro.checkpoint import save_checkpoint
+    from repro.runtime import faults
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.MID_FLUSH, kind="kill", hard=True)])
+    save_checkpoint({str(tmp_path)!r}, 2, {{"x": jnp.arange(4.0) + 1}},
+                    faults=plan)
+    raise SystemExit("fault did not fire")
+    """, expect_signal=signal.SIGKILL)
+    step, out = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(out["x"]), np.arange(4.0))
+
+
+# ---------------------------------------------------------------------------
+# e2e: seeded shard kill → reshard onto survivors → resume from cursor
+# ---------------------------------------------------------------------------
+
+def test_elastic_resume_e2e(tmp_path):
+    _run(f"""
+    import dataclasses, json
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.parallel.compat import make_mesh
+    from repro.checkpoint import restore_resharded, save_checkpoint
+    from repro.core import GlobalStats, LDAConfig, MinibatchData
+    from repro.core.foem_sharded import foem_step_sharded
+    from repro.core.perplexity import predictive_perplexity, \\
+        split_heldout_counts
+    from repro.data import synthetic_lda_corpus
+    from repro.runtime import FaultPlan, InjectedFault, faults
+    from repro.sparse import MinibatchStream
+
+    SEED = 1234
+    corpus, _ = synthetic_lda_corpus(160, 300, 8, mean_doc_len=50, seed=3)
+    cfg = LDAConfig(num_topics=8, vocab_size=300, max_sweeps=12,
+                    iem_blocks=2, active_topics=4, topk_shards=2,
+                    ppl_check_every=4)
+    mbs = list(MinibatchStream(corpus, 32, seed=0, epochs=1))
+    held = mbs.pop()                      # last minibatch = held-out docs
+    rng = np.random.default_rng(11)
+    est_c, ev_c = split_heldout_counts(held.counts.astype(np.int64), rng)
+    hw = jnp.asarray(held.word_ids)
+    est = MinibatchData(hw, jnp.asarray(est_c, jnp.float32))
+    ev = MinibatchData(hw, jnp.asarray(ev_c, jnp.float32))
+
+    def heldout_ppl(stats, cfg):
+        phi = jnp.asarray(np.asarray(stats.phi_wk))   # gather to host
+        ptot = jnp.asarray(np.asarray(stats.phi_k))
+        return float(predictive_perplexity(
+            jax.random.PRNGKey(99), est, ev, phi, ptot, cfg,
+            fit_sweeps=32, active_topics=cfg.active_topics,
+        ))
+
+    def spec_tree():
+        return GlobalStats(phi_wk=P(None, "model"), phi_k=P("model"),
+                           step=P())
+
+    def place(mesh, cfg):
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree(),
+                          is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(GlobalStats.zeros(cfg), sh)
+
+    def run_steps(stats, cfg, mesh, todo, start=0, faults_plan=None):
+        with mesh:
+            for i, mb in enumerate(todo, start=start):
+                b = MinibatchData(jnp.asarray(mb.word_ids),
+                                  jnp.asarray(mb.counts))
+                sub = jax.random.fold_in(jax.random.PRNGKey(7), i)
+                stats, _ = foem_step_sharded(sub, b, stats, cfg, mesh,
+                                             faults=faults_plan)
+        return stats
+
+    # ---- unfaulted reference on the full (2, 2) mesh ----
+    mesh = make_mesh((2, 2), ("data", "model"))
+    clean = run_steps(place(mesh, cfg), cfg, mesh, mbs)
+    ppl_clean = heldout_ppl(clean, cfg)
+
+    # ---- faulted run: the kill's (step, shard) comes from the seed ----
+    plan = FaultPlan.from_seed(SEED, num_faults=1, max_step=3,
+                               num_shards=2, points=(faults.PRE_PROBE,),
+                               kinds=("kill",))
+    spec = plan.specs[0]
+    again = FaultPlan.from_seed(SEED, num_faults=1, max_step=3,
+                                num_shards=2, points=(faults.PRE_PROBE,),
+                                kinds=("kill",))
+    assert again.specs == plan.specs      # the plan IS its seed
+    stats = place(mesh, cfg)
+    cursor = 0
+    ckpt = {str(tmp_path)!r}
+    save_checkpoint(ckpt, 0, {{"stats": stats, "cursor": jnp.int32(0)}})
+    try:
+        for i, mb in enumerate(mbs):
+            b = MinibatchData(jnp.asarray(mb.word_ids),
+                              jnp.asarray(mb.counts))
+            with mesh:
+                stats, _ = foem_step_sharded(
+                    jax.random.fold_in(jax.random.PRNGKey(7), i), b, stats,
+                    cfg, mesh, faults=plan)
+            cursor = i + 1
+            save_checkpoint(ckpt, cursor,
+                            {{"stats": stats, "cursor": jnp.int32(cursor)}})
+        raise SystemExit("seeded kill never fired")
+    except InjectedFault as e:
+        assert e.shard == spec.shard and e.step == spec.step, (
+            "fault must fire exactly where the seed put it",
+            (e.shard, e.step), (spec.shard, spec.step))
+        assert plan.fired_log() == [
+            ("kill", faults.PRE_PROBE, spec.shard, spec.step)]
+
+    # ---- reshard onto the surviving (1, 2) mesh, resume from cursor ----
+    # a device died: the rebuilt mesh keeps the model axis (the topic
+    # sharding structure, so cfg is unchanged) and halves the data axis
+    mesh2 = make_mesh((1, 2), ("data", "model"))
+    like = {{"stats": GlobalStats.zeros(cfg), "cursor": jnp.int32(0)}}
+    specs2 = {{"stats": spec_tree(), "cursor": P()}}
+    step, tree = restore_resharded(ckpt, like, specs2, mesh2)
+    cursor = int(tree["cursor"])
+    assert step == cursor == spec.step    # kill at step s → s clean steps
+    resumed = run_steps(tree["stats"], cfg, mesh2, mbs[cursor:],
+                        start=cursor)
+
+    # every minibatch folded exactly once across the kill/reshard boundary
+    tokens = sum(float(mb.counts.sum()) for mb in mbs)
+    mass = float(resumed.phi_k.sum())
+    assert abs(mass - tokens) / tokens < 1e-3, (mass, tokens)
+    assert int(resumed.step) == len(mbs)
+
+    # SA tolerance: the resumed trajectory reaches the same held-out
+    # quality (data-shard RNG draws re-mix on the reshard, so not bitwise)
+    ppl_resumed = heldout_ppl(resumed, cfg)
+    rel = abs(ppl_resumed - ppl_clean) / ppl_clean
+    assert rel < 0.05, (ppl_clean, ppl_resumed, rel)
+    print("e2e ok", ppl_clean, ppl_resumed, rel)
+    """, devices=4)

@@ -1,4 +1,5 @@
-"""Fault tolerance: trainer restart, checkpoints, stragglers, staleness."""
+"""Fault tolerance: seeded fault plans, trainer restart, checkpoints,
+stragglers, bounded-staleness merging, and the elastic runtime."""
 import dataclasses
 import os
 
@@ -12,11 +13,95 @@ from repro.checkpoint import (
     reshard,
     restore_checkpoint,
     save_checkpoint,
+    scan_checkpoints,
 )
 from repro.core import FOEMTrainer, GlobalStats, LDAConfig, ParameterStore
-from repro.runtime import BoundedStalenessMerger, StragglerMonitor
+from repro.core import em
+from repro.runtime import (
+    BoundedStalenessMerger,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    StragglerMonitor,
+    faults,
+)
+from repro.runtime.elastic import ElasticFOEMRuntime
 from repro.sparse import MinibatchStream
 
+
+# ---------------------------------------------------------------------------
+# Seeded fault plans
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_from_seed():
+    a = FaultPlan.from_seed(42, num_faults=6, max_step=10, num_shards=4)
+    b = FaultPlan.from_seed(42, num_faults=6, max_step=10, num_shards=4)
+    assert a.specs == b.specs
+    assert FaultPlan.from_seed(43, num_faults=6, max_step=10,
+                               num_shards=4).specs != a.specs
+
+
+def test_fault_plan_fire_semantics():
+    naps = []
+    plan = FaultPlan(
+        [
+            FaultSpec(point=faults.PRE_PROBE, kind="drop", step=2),
+            FaultSpec(point=faults.PRE_PROBE, kind="delay", step=faults.ANY_STEP,
+                      seconds=0.5),
+            FaultSpec(point=faults.POST_FOLD, kind="kill", step=3, shard=1),
+        ],
+        sleep=naps.append,
+    )
+    assert not plan.fire(faults.PRE_PROBE, step=0)      # delay only
+    assert plan.fire(faults.PRE_PROBE, step=2)          # drop fires
+    assert not plan.fire(faults.PRE_PROBE, step=2)      # one-shot: consumed
+    assert naps == [0.5, 0.5, 0.5]                      # ANY_STEP persists
+    assert not plan.fire(faults.POST_FOLD, step=3, shard=0)   # wrong shard
+    with pytest.raises(InjectedFault) as ei:
+        plan.fire(faults.POST_FOLD, step=3, shard=1)
+    assert ei.value.shard == 1 and ei.value.step == 3
+    kinds = [k for k, *_ in plan.fired_log()]
+    assert kinds == ["delay", "drop", "delay", "delay", "kill"]
+    plan.reset()
+    assert plan.fired_log() == [] and plan.fire(faults.PRE_PROBE, step=2)
+
+
+def test_fault_plan_validates_points_and_kinds():
+    with pytest.raises(ValueError):
+        FaultSpec(point="mid-sweep", kind="kill")
+    with pytest.raises(ValueError):
+        FaultSpec(point=faults.PRE_PROBE, kind="explode")
+    with pytest.raises(ValueError):
+        FaultSpec(point=faults.PRE_PROBE, kind="delay", seconds=0.0)
+    with pytest.raises(ValueError):
+        FaultPlan().fire("nonsense")
+
+
+def test_ops_sweep_fires_active_plan_eagerly(tiny_cfg):
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(0)
+    D, L, K, W = 4, 8, tiny_cfg.K, tiny_cfg.W
+    wid = jnp.asarray(rng.integers(0, W, (D, L)).astype(np.int32))
+    cnt = jnp.asarray(rng.integers(0, 5, (D, L)).astype(np.float32))
+    mu = jnp.asarray(rng.dirichlet(np.ones(K), (D, L)).astype(np.float32))
+    theta = em.fold_theta(mu, cnt)
+    phi, ptot = em.fold_phi(mu, cnt, wid, W)
+    plan = FaultPlan([FaultSpec(point=faults.PRE_PROBE, kind="kill")])
+    with faults.active_plan(plan):
+        with pytest.raises(InjectedFault):
+            kops.sweep(wid, cnt, mu, theta, phi, ptot,
+                       alpha_m1=tiny_cfg.alpha_m1, beta_m1=tiny_cfg.beta_m1,
+                       wb=tiny_cfg.W * tiny_cfg.beta_m1, use_pallas=False)
+    # no active plan → clean run
+    kops.sweep(wid, cnt, mu, theta, phi, ptot,
+               alpha_m1=tiny_cfg.alpha_m1, beta_m1=tiny_cfg.beta_m1,
+               wb=tiny_cfg.W * tiny_cfg.beta_m1, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Trainer: restart + injected faults
+# ---------------------------------------------------------------------------
 
 def test_trainer_restart_resumes_cursor(tmp_path, tiny_corpus, tiny_cfg):
     corpus, _ = tiny_corpus
@@ -37,6 +122,45 @@ def test_trainer_restart_resumes_cursor(tmp_path, tiny_corpus, tiny_cfg):
                    max_steps=2)
     assert store2.step == 5
 
+
+def test_trainer_drop_fault_skips_writeback(tmp_path, tiny_corpus, tiny_cfg):
+    corpus, _ = tiny_corpus
+    cfg = dataclasses.replace(tiny_cfg, max_sweeps=8)
+    plan = FaultPlan([FaultSpec(point=faults.POST_FOLD, kind="drop", step=1)])
+    store = ParameterStore(str(tmp_path), num_topics=cfg.K,
+                           vocab_capacity=cfg.W, buffer_rows=32)
+    tr = FOEMTrainer(cfg, store, faults=plan, prefetch_depth=0)
+    ms = tr.fit_stream(iter(MinibatchStream(corpus, 32, seed=0, epochs=1)),
+                       max_steps=3)
+    assert tr.dropped_steps == [2]                 # step index post-advance
+    dropped = ms[1]
+    assert dropped.sweeps == 0 and np.isnan(dropped.train_ppl)
+    assert plan.fired_log() == [("drop", faults.POST_FOLD, None, 1)]
+    # the other steps trained normally
+    assert ms[0].sweeps > 0 and ms[2].sweeps > 0
+
+
+def test_trainer_kill_fault_raises_and_resumes(tmp_path, tiny_corpus, tiny_cfg):
+    corpus, _ = tiny_corpus
+    cfg = dataclasses.replace(tiny_cfg, max_sweeps=8)
+    plan = FaultPlan([FaultSpec(point=faults.PRE_PROBE, kind="kill", step=2)])
+    store = ParameterStore(str(tmp_path), num_topics=cfg.K,
+                           vocab_capacity=cfg.W, buffer_rows=32)
+    tr = FOEMTrainer(cfg, store, faults=plan, checkpoint_every=1,
+                     prefetch_depth=0)
+    stream = iter(MinibatchStream(corpus, 32, seed=0, epochs=2))
+    with pytest.raises(InjectedFault):
+        tr.fit_stream(stream, max_steps=5)
+    assert store.step == 2                         # two clean steps landed
+    # the flushed store reopens at the pre-kill cursor
+    store2 = ParameterStore(str(tmp_path), num_topics=cfg.K,
+                            vocab_capacity=cfg.W, buffer_rows=32)
+    assert store2.step == 2
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints
+# ---------------------------------------------------------------------------
 
 def test_checkpoint_atomic_roundtrip(tmp_path):
     tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.int32(4)}}
@@ -59,6 +183,45 @@ def test_checkpoint_gc_keeps_latest(tmp_path):
     assert len(dirs) == 2 and "step_00000005" in dirs
 
 
+def test_checkpoint_scan_repairs_torn_state(tmp_path):
+    tree = {"x": jnp.arange(4.0)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    # torn leaf in step 2 (simulated partial write), stale tmp debris,
+    # LATEST pointing at the now-torn checkpoint
+    with open(tmp_path / "step_00000002" / "0.npy", "r+b") as f:
+        f.truncate(8)
+    os.makedirs(tmp_path / "step_00000003.tmp")
+    assert scan_checkpoints(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1          # pointer repaired
+    assert not os.path.exists(tmp_path / "step_00000003.tmp")
+    step, out = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+    np.testing.assert_allclose(out["x"], np.arange(4.0))
+
+
+def test_checkpoint_kill_mid_save_never_torn(tmp_path):
+    tree = {"x": jnp.arange(4.0)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    for point in (faults.MID_FLUSH, faults.PRE_PUBLISH):
+        plan = FaultPlan([FaultSpec(point=point, kind="kill")])
+        with pytest.raises(InjectedFault):
+            save_checkpoint(str(tmp_path), 2, jax.tree.map(lambda x: x + 1,
+                                                           tree), faults=plan)
+        valid = scan_checkpoints(str(tmp_path))
+        # mid-flush kill → only step 1; pre-publish kill → both, pointer
+        # repaired to 2.  Either way restore finds an intact checkpoint.
+        step, out = restore_checkpoint(str(tmp_path), tree)
+        assert step == valid[-1]
+        np.testing.assert_allclose(
+            np.asarray(out["x"]), np.arange(4.0) + (step - 1)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Straggler monitor
+# ---------------------------------------------------------------------------
+
 def test_straggler_monitor_flags_slow_shard():
     mon = StragglerMonitor(threshold=2.0, warmup_steps=2)
     for step in range(4):
@@ -68,30 +231,215 @@ def test_straggler_monitor_flags_slow_shard():
     assert mon.should_reissue(5) and not mon.should_reissue(2)
 
 
-def test_bounded_staleness_merge_order_invariance():
-    """accumulate-mode folds commute: late fold ≡ on-time fold (eq. 33)."""
+def test_straggler_monitor_single_shard_never_straggles():
+    mon = StragglerMonitor(threshold=1.1, warmup_steps=1)
+    for _ in range(10):
+        mon.record(0, 5.0)
+    assert mon.stragglers() == []
+
+
+def test_straggler_monitor_floor_suppresses_jitter():
+    # micro-latencies: 3x relative spread but far below the absolute floor
+    mon = StragglerMonitor(threshold=1.5, warmup_steps=1, floor_seconds=0.05)
+    for _ in range(5):
+        mon.record(0, 0.001)
+        mon.record(1, 0.004)
+    assert mon.stragglers() == []
+    # same ratio at real magnitudes → flagged
+    mon2 = StragglerMonitor(threshold=1.5, warmup_steps=1, floor_seconds=0.05)
+    for _ in range(5):
+        mon2.record(0, 1.0)
+        mon2.record(1, 4.0)
+    assert mon2.stragglers() == [1]
+
+
+def test_straggler_monitor_rejects_degenerate_threshold():
+    with pytest.raises(ValueError):
+        StragglerMonitor(threshold=1.0)
+
+
+def test_straggler_monitor_forget():
+    mon = StragglerMonitor(threshold=1.5, warmup_steps=1, floor_seconds=0.0)
+    for _ in range(3):
+        mon.record(0, 1.0)
+        mon.record(1, 9.0)
+    assert mon.stragglers() == [1]
+    mon.forget(1)
+    assert mon.stragglers() == []
+
+
+# ---------------------------------------------------------------------------
+# Bounded-staleness merger
+# ---------------------------------------------------------------------------
+
+def test_bounded_staleness_merge_order_invariance_bitwise():
+    """Release order is canonical (round, then shard) regardless of arrival
+    interleaving, so the float32 eq. 33 fold is BITWISE identical — the
+    associativity caveat of float addition never surfaces."""
     rng = np.random.default_rng(0)
-    deltas = [rng.random((5, 3)) for _ in range(4)]
-    on_time = np.zeros((5, 3))
-    for d in deltas:
-        on_time = on_time + d
+    W, K = 7, 3
+    ids = [np.sort(rng.choice(W, 4, replace=False)) for _ in range(6)]
+    deltas = [
+        (jnp.asarray(i), jnp.asarray(rng.random((4, K)).astype(np.float32)),
+         jnp.asarray(rng.random(K).astype(np.float32)))
+        for i in ids
+    ]
 
-    m = BoundedStalenessMerger(max_staleness=1)
-    late = np.zeros((5, 3))
-    m.submit(0, 0, deltas[0])
-    m.submit(1, 0, deltas[1])
-    for d in m.drain(0):
-        late = late + d
-    m.submit(2, 0, deltas[2])       # one round late (within bound)
-    m.submit(3, 1, deltas[3])
-    for d in m.drain(1):
-        late = late + d
-    np.testing.assert_allclose(late, on_time)
-    assert not m.dropped
+    def fold_all(arrivals):
+        m = BoundedStalenessMerger(max_staleness=1, expected_shards=3)
+        phi = jnp.zeros((W, K), jnp.float32)
+        ptot = jnp.zeros((K,), jnp.float32)
+        for rnd in range(3):
+            for shard, r, d in arrivals[rnd]:
+                m.submit(shard, r, d)
+            for _, _, (i, dr, dk) in m.drain(rnd):
+                phi, _ = em.fold_phi_delta(phi, ptot, i, dr)
+                ptot = ptot + dk
+        for _, _, (i, dr, dk) in m.flush():
+            phi, _ = em.fold_phi_delta(phi, ptot, i, dr)
+            ptot = ptot + dk
+        return np.asarray(phi), np.asarray(ptot)
+
+    # arrival A: in order.  arrival B: shards race, one delta a round late.
+    A = {
+        0: [(0, 0, deltas[0]), (1, 0, deltas[1]), (2, 0, deltas[2])],
+        1: [(0, 1, deltas[3]), (1, 1, deltas[4]), (2, 1, deltas[5])],
+        2: [],
+    }
+    B = {
+        0: [(2, 0, deltas[2]), (0, 0, deltas[0])],
+        1: [(1, 0, deltas[1]), (2, 1, deltas[5]), (0, 1, deltas[3])],
+        2: [(1, 1, deltas[4])],
+    }
+    phi_a, ptot_a = fold_all(A)
+    phi_b, ptot_b = fold_all(B)
+    np.testing.assert_array_equal(phi_a, phi_b)     # bitwise
+    np.testing.assert_array_equal(ptot_a, ptot_b)
 
 
-def test_bounded_staleness_drops_too_old():
-    m = BoundedStalenessMerger(max_staleness=1)
-    m.submit(0, 0, "x")
-    assert m.drain(5) == []
-    assert m.dropped == [(0, 0)]
+def test_bounded_staleness_preserves_shard_attribution():
+    m = BoundedStalenessMerger(max_staleness=0, expected_shards=2)
+    m.submit(1, 0, "b")
+    m.submit(0, 0, "a")
+    assert m.drain(0) == [(0, 0, "a"), (1, 0, "b")]  # canonical order
+
+
+def test_bounded_staleness_holds_within_bound():
+    m = BoundedStalenessMerger(max_staleness=2, expected_shards=3)
+    m.submit(0, 0, "a")
+    assert m.drain(0) == [] and m.drain(1) == []     # age < bound: parked
+    assert m.drain(2) == [(0, 0, "a")]               # bound reached
+    assert m.num_pending == 0
+
+
+def test_bounded_staleness_drops_late_submit_and_reissues():
+    m = BoundedStalenessMerger(max_staleness=0, expected_shards=2)
+    m.submit(0, 0, "a")
+    m.submit(1, 0, "b")
+    assert len(m.drain(0)) == 2
+    assert not m.submit(1, 0, "late")    # round already released
+    assert m.dropped == [(1, 0)]
+    assert list(m.reissue()) == [(1, 0)]
+    assert list(m.reissue()) == []       # surfaced exactly once
+    m.submit(0, 1, "c")
+    assert not m.submit(1, 0, "later still")
+    assert list(m.reissue()) == [(1, 0)]
+
+
+def test_bounded_staleness_strict_round_order():
+    m = BoundedStalenessMerger(max_staleness=1, expected_shards=2)
+    m.submit(0, 1, "r1-a")
+    m.submit(1, 1, "r1-b")
+    # round 1 is complete, but round 0 is neither complete nor over-age:
+    # nothing may release (strict ascending order)
+    assert m.drain(0) == []
+    m.submit(0, 0, "r0-a")
+    m.submit(1, 0, "r0-b")
+    assert [r for _, r, _ in m.drain(1)] == [0, 0, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# Elastic runtime
+# ---------------------------------------------------------------------------
+
+def _make_runtime(tiny_cfg, **kw):
+    cfg = dataclasses.replace(tiny_cfg, max_sweeps=8)
+    return ElasticFOEMRuntime(cfg, num_shards=2, seed=0, **kw)
+
+
+def test_elastic_runtime_drop_reissue_matches_clean_run(tiny_corpus, tiny_cfg):
+    corpus, _ = tiny_corpus
+    clean = _make_runtime(tiny_cfg)
+    clean.run(MinibatchStream(corpus, 24, seed=0, epochs=1))
+
+    plan = FaultPlan([FaultSpec(point=faults.POST_FOLD, kind="drop",
+                                step=0, shard=1)])
+    faulty = _make_runtime(tiny_cfg, faults=plan)
+    reports = faulty.run(MinibatchStream(corpus, 24, seed=0, epochs=1))
+    assert plan.fired_log() == [("drop", faults.POST_FOLD, 1, 0)]
+    assert reports[0].requeued == 1
+    assert faulty.lost == []                       # re-issue succeeded
+    # every token's statistics were folded exactly once in both runs
+    assert float(faulty.phi_k.sum()) == pytest.approx(
+        float(clean.phi_k.sum()), rel=1e-5
+    )
+
+
+def test_elastic_runtime_bounded_retry_gives_up(tiny_corpus, tiny_cfg):
+    corpus, _ = tiny_corpus
+    # EVERY shard drops at pre-probe → each minibatch retries (on whichever
+    # shard picks it up) until the bound, then lands in `lost`
+    plan = FaultPlan([FaultSpec(point=faults.PRE_PROBE, kind="drop")])
+    rt = _make_runtime(tiny_cfg, faults=plan, max_retries=1)
+    rt.run(MinibatchStream(corpus, 24, seed=0, epochs=1), max_rounds=6)
+    assert sorted(rt.lost) == [1, 2, 3, 4]         # bounded, not infinite
+    assert all(k == "drop" for k, *_ in plan.fired_log())
+    assert float(rt.phi_k.sum()) == 0.0            # nothing ever folded
+
+
+def test_elastic_runtime_kill_shrink_resume(tiny_corpus, tiny_cfg, tmp_path):
+    corpus, _ = tiny_corpus
+    plan = FaultPlan([FaultSpec(point=faults.PRE_PROBE, kind="kill",
+                                step=1, shard=1)])
+    rt = _make_runtime(tiny_cfg, faults=plan)
+    stream = iter(MinibatchStream(corpus, 24, seed=0, epochs=1))
+    with pytest.raises(InjectedFault) as ei:
+        rt.run(stream)
+    assert ei.value.shard == 1
+    # state is consistent: checkpoint, shrink, resume the same iterator
+    save_checkpoint(str(tmp_path), rt.round, rt.checkpoint_tree())
+    rt.remove_shard(1)
+    assert rt.num_shards == 1 and rt.merger.expected_shards == 1
+    rt.run(stream)
+    assert rt.cursor == 4 and rt.lost == []
+    clean = _make_runtime(tiny_cfg)
+    clean.run(MinibatchStream(corpus, 24, seed=0, epochs=1))
+    # the killed shard's round-1 minibatch was re-assigned, not lost
+    assert float(rt.phi_k.sum()) == pytest.approx(
+        float(clean.phi_k.sum()), rel=1e-5
+    )
+
+
+def test_elastic_runtime_delay_fault_flags_straggler(tiny_corpus, tiny_cfg):
+    corpus, _ = tiny_corpus
+    naps = []
+    plan = FaultPlan(
+        [FaultSpec(point=faults.PRE_PROBE, kind="delay", shard=1,
+                   seconds=0.2)],
+        sleep=naps.append,   # don't actually sleep in tests
+    )
+    # deterministic clock: every sleep request advances fake time
+    t = [0.0]
+
+    def clock():
+        return t[0] + sum(naps) + 0.01 * len(naps)
+
+    mon = StragglerMonitor(threshold=1.5, warmup_steps=1, floor_seconds=0.0)
+    rt = ElasticFOEMRuntime(
+        dataclasses.replace(tiny_cfg, max_sweeps=8),
+        num_shards=2, seed=0, faults=plan, monitor=mon, clock=clock,
+    )
+    rt.run(MinibatchStream(corpus, 24, seed=0, epochs=1))
+    assert naps == [0.2, 0.2]                      # fired every round
+    # the injected delays were recorded against shard 1's latency
+    assert mon.stats[1].ewma > mon.stats[0].ewma
