@@ -1,36 +1,25 @@
-"""Serving benchmark — the fused frozen-φ inference engine vs the legacy
-dense fixed-point path.
+"""Serving benchmark — the frozen-φ serving stack end to end.
 
-Measures, at the reference cell D=256, L=64, K=128, W_s=8192 on this
-backend, one held-out request batch (fit θ̂ on the 80% split + eq. 21
-held-out perplexity on the 20% split):
+Four suites (``--suite``, default ``all``), each writing its own section
+of ``BENCH_serve.json`` (sections merge — re-running one suite never
+clobbers another's pinned numbers):
 
-  * ``before``     — the pre-kernel path: materialise the dense (D, L, K)
-    gathered φ rows, scan a FIXED 50 Jacobi sweeps, then run a second
-    standalone (D, L, K) gather+einsum pass for eq. 21;
-  * ``fixed``      — ``ops.infer`` with ``rel_tol=0`` (same 50 sweeps, but
-    the eq. 21 partials come from inside the launch — isolates the
-    no-standalone-pass saving);
-  * ``converged``  — ``ops.infer`` with the §2.4 relative stop rule
-    (``rel_tol=0.005`` checked every 5 sweeps — the training stop rule's
-    tolerance at ``benchmarks.common.lda_config``'s check cadence) — the
-    serving configuration; the pinned headline speedup is
-    before/converged;
-  * ``scheduled``  — ``converged`` plus the top-A-by-φ-mass active-set fit
-    (``serving_active_topics``, A=16).  On the CPU portable path the
-    masked-dense mirror costs MORE per sweep than the dense fit (same
-    trade the scheduled training sweep documents); the variant is pinned
-    for the TPU lane-mask kernel it dispatches to there.
+  * ``infer``   — the PR-5 engine comparison at the reference cell
+    D=256, L=64, K=128, W_s=8192: legacy dense 50-sweep + standalone
+    eq. 21 pass (``before``) vs ``ops.infer`` fixed/converged/scheduled.
+  * ``latency`` — the continuous-batching SLO cells: synthetic
+    Zipf/Poisson traffic through :class:`~repro.launch.serve.ServingEngine`
+    (sustained QPS closed-loop + p50/p99 latency open-loop at half the
+    sustained rate), against a per-call baseline serving the SAME trace
+    one document per launch.  Also asserts the pre-warmed jit trace grid
+    never recompiles under traffic.
+  * ``quant``   — bf16/int8 serving φ vs f32 at iso-sweeps: per-variant
+    wall time and eq. 21 perplexity drift (must stay < 1% relative).
+  * ``cache``   — the serving hot-row cache under Zipf traffic: hit rate,
+    store I/O displaced, and row-fetch wall time vs the bare store.
 
-The request batch is drawn from a synthetic LDA corpus and served against
-its (scaled) true topics — a trained-model workload, where the fixed
-point actually converges, rather than noise-vs-noise.  Each variant also
-reports its eq. 21 perplexity so the speedup is readable as iso-quality
-(stopping earlier slightly *lowers* held-out perplexity here — fewer
-sweeps overfit θ̂ to the 80% split less).
-
-Emits machine-readable ``BENCH_serve.json`` so future PRs have a pinned
-baseline.  ``--quick`` shrinks the cell for CI smoke runs.
+``--quick`` shrinks every suite to a CI smoke cell and writes
+``BENCH_serve_quick.json`` so the pinned baseline can't be clobbered.
 """
 from __future__ import annotations
 
@@ -48,6 +37,8 @@ from benchmarks.common import csv_row
 from repro.core import em
 from repro.core.perplexity import infer_heldout, split_heldout_counts
 from repro.core.types import LDAConfig, MinibatchData, uniform_responsibilities
+
+SUITES = ("all", "infer", "latency", "quant", "cache")
 
 
 def _timeit(fn, reps: int) -> float:
@@ -79,6 +70,21 @@ def _make_request(D, L, K, W, seed=0):
             MinibatchData(wid, jnp.asarray(ev_np)), phi_wk, phi_k)
 
 
+def _trained_store(path, W, K, seed=0):
+    """A ParameterStore holding a trained-like φ̂ for the serving suites."""
+    from repro.core import ParameterStore
+    from repro.data import synthetic_lda_corpus
+
+    _, true_phi = synthetic_lda_corpus(8, W, K, mean_doc_len=16, seed=seed)
+    phi = (true_phi * 1e5).astype(np.float32)
+    store = ParameterStore(str(path), num_topics=K, vocab_capacity=W,
+                           buffer_rows=0)
+    store.write_rows(np.arange(W), phi)
+    store.phi_k = phi.sum(0).astype(np.float64)
+    store.ensure_vocab(W - 1)
+    return store
+
+
 def _legacy_before(key, est, ev, phi_norm, cfg, sweeps):
     """The pre-kernel serving path, verbatim: dense gathered rows, fixed
     sweep scan, standalone eq. 21 evaluation pass.  Operands arrive as
@@ -102,25 +108,13 @@ def _legacy_before(key, est, ev, phi_norm, cfg, sweeps):
     return jnp.exp(-ll / jnp.maximum(ev.counts.sum(), 1.0))
 
 
-def main(rows=None, argv=None):
-    rows = rows if rows is not None else []
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="small smoke cell (CI)")
-    ap.add_argument("--out", default=None,
-                    help="output path; quick runs default to a separate "
-                         "file so they can't clobber the pinned baseline")
-    args = ap.parse_args(argv if argv is not None else [])
+# ---------------------------------------------------------------------------
+# Suite: infer — the PR-5 fused-engine comparison (unchanged measurement)
+# ---------------------------------------------------------------------------
 
-    if args.quick:
-        D, L, K, W, reps, A, sweeps = 32, 16, 32, 512, 3, 8, 20
-    else:
-        D, L, K, W, reps, A, sweeps = 256, 64, 128, 8192, 9, 16, 50
-    A = min(A, K)
-    if args.out is None:
-        args.out = "BENCH_serve_quick.json" if args.quick else (
-            "BENCH_serve.json")
 
+def _suite_infer(shape, rows):
+    D, L, K, W, reps, A, sweeps = shape
     cfg = LDAConfig(num_topics=K, vocab_size=W)
     est, ev, phi_wk, phi_k = _make_request(D, L, K, W)
     phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
@@ -157,8 +151,6 @@ def main(rows=None, argv=None):
     payload = {
         "cell": {"D": D, "L": L, "K": K, "W_s": W, "A": A,
                  "fit_sweeps": sweeps, "reps": reps},
-        "backend": jax.default_backend(),
-        "quick": bool(args.quick),
         "before": {"seconds": before_s, "ppl": ppl_before,
                    "sweeps": sweeps},
     }
@@ -178,10 +170,329 @@ def main(rows=None, argv=None):
             f"impl={name};sweeps={int(swp)};speedup={speedup:.2f}",
         ))
         report.append(f"{name} {speedup:.2f}x")
+    return payload, ", ".join(report)
 
-    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# wrote {args.out} ({', '.join(report)})", flush=True)
+
+# ---------------------------------------------------------------------------
+# Suite: latency — continuous batching vs per-call, p50/p99/QPS SLO cells
+# ---------------------------------------------------------------------------
+
+
+def _suite_latency(shape, rows, workdir, n_requests):
+    from repro.core import LDAConfig
+    from repro.launch.serve import ServingEngine, TopicServer, TrafficGenerator
+
+    D, L, K, W, _, _, sweeps = shape
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    cell = f"D{D}_L{L}_K{K}_W{W}"
+    store = _trained_store(pathlib.Path(workdir) / "latency", W, K)
+    doc_len = (max(L // 4, 4), L)
+    gen = TrafficGenerator(W, doc_len=doc_len, seed=123)
+    trace = gen.trace([(1000.0, n_requests)])  # arrival stamps for pacing
+
+    def build_server():
+        return TopicServer(store, cfg, fit_sweeps=sweeps,
+                           rel_tol=0.005, check_every=5,
+                           vocab_pad=512, hot_rows=min(W, 4096))
+
+    # --- continuous batching: closed-loop sustained QPS -------------------
+    server = build_server()
+    with ServingEngine(server, max_batch=D, max_delay_ms=5.0,
+                       max_len=L) as eng:
+        compiled = eng.prewarm()
+        t0 = time.perf_counter()
+        futs = TrafficGenerator.replay(trace, eng.submit, pace=False)
+        for f in futs:
+            f.result()
+        eng.drain()
+        qps_engine = len(futs) / (time.perf_counter() - t0)
+        assert eng.compile_count() == compiled, (
+            f"jit cache grew under traffic: {eng.compile_count()} > "
+            f"{compiled} traces — a bucket escaped the pre-warm grid"
+        )
+        eng.metrics(reset=True)
+        # --- open-loop paced run at ~half the sustained rate: p50/p99 ----
+        paced_qps = max(qps_engine / 2.0, 1.0)
+        paced = gen.trace([(paced_qps, n_requests)])
+        for f in TrafficGenerator.replay(paced, eng.submit, pace=True):
+            f.result()
+        eng.drain()
+        m = eng.metrics()
+
+    # --- per-call baseline: same trace, one document per launch -----------
+    base = build_server()
+    base_eng = ServingEngine(base, max_batch=1, max_delay_ms=0.0,
+                             max_len=L)
+    base_eng.prewarm()                   # same trace-grid warmup discipline
+    base_eng.close()
+    lat_base = []
+    t0 = time.perf_counter()
+    for _, w, c in trace:
+        t1 = time.perf_counter()
+        Lb = ((max(len(w), 1) + 15) // 16) * 16
+        wp = np.zeros((1, Lb), np.int32)
+        cp = np.zeros((1, Lb), np.float32)
+        wp[0, : len(w)] = w
+        cp[0, : len(c)] = c
+        base.infer(wp, cp, key=jnp.zeros((1, 2), jnp.uint32))
+        lat_base.append(time.perf_counter() - t1)
+    qps_base = len(trace) / (time.perf_counter() - t0)
+
+    batching_gain = qps_engine / max(qps_base, 1e-9)
+    payload = {
+        "cell": {"D": D, "L": L, "K": K, "W_s": W, "fit_sweeps": sweeps,
+                 "requests": n_requests, "doc_len": list(doc_len)},
+        "engine": {
+            "sustained_qps": qps_engine,
+            "paced_qps": paced_qps,
+            "p50_ms": m.get("p50_ms", 0.0),
+            "p99_ms": m.get("p99_ms", 0.0),
+            "mean_fill": m["mean_fill"],
+            "batches": m["batches"],
+            "compiled_traces": compiled,
+        },
+        "per_call": {
+            "sustained_qps": qps_base,
+            "p50_ms": float(np.percentile(lat_base, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat_base, 99) * 1e3),
+        },
+        "batching_qps_gain": batching_gain,
+    }
+    rows.append(csv_row(
+        f"serve_engine_{cell}", 1e6 / max(qps_engine, 1e-9),
+        f"impl=continuous_batching;qps={qps_engine:.1f};"
+        f"p50_ms={m.get('p50_ms', 0.0):.2f};p99_ms={m.get('p99_ms', 0.0):.2f}",
+    ))
+    rows.append(csv_row(
+        f"serve_percall_{cell}", 1e6 / max(qps_base, 1e-9),
+        f"impl=per_call;qps={qps_base:.1f};gain={batching_gain:.2f}",
+    ))
+    return payload, (
+        f"engine {qps_engine:.0f} QPS vs per-call {qps_base:.0f} QPS "
+        f"({batching_gain:.2f}x), p50 {m.get('p50_ms', 0.0):.1f}ms "
+        f"p99 {m.get('p99_ms', 0.0):.1f}ms"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Suite: quant — bf16/int8 serving φ vs f32 at iso-sweeps
+# ---------------------------------------------------------------------------
+
+
+def _suite_quant(shape, rows):
+    D, L, K, W, reps, _, sweeps = shape
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    est, ev, phi_wk, phi_k = _make_request(D, L, K, W)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    key = jax.random.PRNGKey(0)
+    cell = f"D{D}_L{L}_K{K}_W{W}"
+
+    def quant_fn(dt):
+        @functools.partial(jax.jit, static_argnames=("dt",))
+        def run(key, est, ev, phi_norm, dt):
+            # iso-sweeps (rel_tol=0, one chunk): every dtype does identical
+            # work, so drift is quantization error, not sweep-count skew
+            r = infer_heldout(
+                key, est, ev, phi_norm, cfg, fit_sweeps=sweeps,
+                rel_tol=0.0, check_every=sweeps, phi_dtype=dt,
+            )
+            return r.theta, r.perplexity(ev.counts.sum())
+        return lambda: run(key, est, ev, phi_norm, dt)
+
+    payload = {
+        "cell": {"D": D, "L": L, "K": K, "W_s": W,
+                 "fit_sweeps": sweeps, "reps": reps},
+    }
+    base_ppl = None
+    report = []
+    for dt in ("float32", "bfloat16", "int8"):
+        fn = quant_fn(dt)
+        s = _timeit(fn, reps)
+        _, ppl = fn()
+        ppl = float(ppl)
+        if dt == "float32":
+            base_ppl = ppl
+            drift = 0.0
+        else:
+            drift = abs(ppl / base_ppl - 1.0)
+            assert drift < 0.01, (
+                f"{dt} eq. 21 drift {drift:.4%} breaches the 1% SLO"
+            )
+        payload[dt] = {"seconds": s, "ppl": ppl, "rel_ppl_drift": drift}
+        rows.append(csv_row(
+            f"serve_quant_{dt}_{cell}", s * 1e6,
+            f"impl=phi_{dt};ppl={ppl:.2f};drift={drift:.5f}",
+        ))
+        report.append(f"{dt} drift {drift:.4%}")
+    return payload, ", ".join(report)
+
+
+# ---------------------------------------------------------------------------
+# Suite: cache — the serving hot-row cache under Zipf traffic
+# ---------------------------------------------------------------------------
+
+
+def _suite_cache(shape, rows, workdir, n_requests):
+    from repro.core import HotRowCache
+    from repro.launch.serve import TrafficGenerator
+    from repro.sparse.docword import localize_vocab
+
+    _, L, K, W, _, _, _ = shape
+    cell = f"K{K}_W{W}"
+    store = _trained_store(pathlib.Path(workdir) / "cache", W, K)
+    hot_rows = max(W // 8, 64)
+    gen = TrafficGenerator(W, doc_len=(max(L // 4, 4), L), seed=7)
+    batches = []
+    for _ in range(n_requests):
+        w, _c = gen.document()
+        batches.append(localize_vocab(w[None, :])[0])
+
+    def run_store():
+        store.stats_window(reset=True)
+        t0 = time.perf_counter()
+        for ids in batches:
+            store.fetch_rows(ids, promote=False)
+        return time.perf_counter() - t0, store.stats_window()
+
+    def run_cache():
+        cache = HotRowCache(store, hot_rows)
+        for ids in batches:              # warm the Zipf head
+            cache.fetch(ids)
+        cache.window_stats(reset=True)
+        store.stats_window(reset=True)
+        t0 = time.perf_counter()
+        for ids in batches:
+            cache.fetch(ids)
+        return (time.perf_counter() - t0, cache.window_stats(),
+                store.stats_window())
+
+    bare_s, bare_stats = run_store()
+    cache_s, cwin, swin = run_cache()
+    total = cwin.hits + cwin.misses
+    # The SLO metric is displaced store traffic: every hit is a read that
+    # never touches the (training-shared, lock-serialized, possibly
+    # disk-backed) ParameterStore.  Wall seconds are reported for context
+    # only — against a page-cached memmap the bare fancy-read is already
+    # cheap, so the read-reduction, not fetch time, is the headline.
+    read_reduction = 1.0 - swin.disk_reads / max(bare_stats.disk_reads, 1)
+    payload = {
+        "cell": {"K": K, "W": W, "hot_rows": hot_rows,
+                 "requests": n_requests},
+        "bare_store": {"seconds": bare_s,
+                       "disk_reads": bare_stats.disk_reads},
+        "hot_cache": {
+            "seconds": cache_s,
+            "hits": cwin.hits, "misses": cwin.misses,
+            "hit_rate": cwin.hits / max(total, 1),
+            "store_disk_reads": swin.disk_reads,
+            "store_promotions": swin.promotions,
+        },
+        "store_read_reduction": read_reduction,
+    }
+    assert swin.promotions == 0, (
+        "serving reads leaked promotions into the training LRU "
+        "(promote=False contract broken)"
+    )
+    rows.append(csv_row(
+        f"serve_cache_{cell}", cache_s / max(n_requests, 1) * 1e6,
+        f"impl=hot_rows{hot_rows};hit_rate={payload['hot_cache']['hit_rate']:.3f};"
+        f"reads_displaced={read_reduction:.3f}",
+    ))
+    return payload, (
+        f"hit rate {payload['hot_cache']['hit_rate']:.1%}, "
+        f"store reads displaced {read_reduction:.1%}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def _merge_out(path, sections, quick):
+    """Per-suite merge: update only the suites that ran, preserve the rest
+    (and migrate a pre-suite flat layout under ``suites.infer``)."""
+    p = pathlib.Path(path)
+    data = {}
+    if p.exists():
+        try:
+            data = json.loads(p.read_text())
+        except ValueError:
+            data = {}
+    if "suites" not in data:
+        legacy = {
+            k: data[k]
+            for k in ("cell", "before", "fixed", "converged", "scheduled")
+            if k in data
+        }
+        data = {"suites": ({"infer": legacy} if legacy else {})}
+    data["backend"] = jax.default_backend()
+    data["quick"] = bool(quick)
+    data["suites"].update(sections)
+    p.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def main(rows=None, argv=None):
+    rows = rows if rows is not None else []
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=SUITES, default="all")
+    ap.add_argument("--quick", action="store_true",
+                    help="small smoke cell (CI)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="traffic length for the latency/cache suites")
+    ap.add_argument("--workdir", default="/tmp/repro_bench_serving",
+                    help="scratch dir for the suites' parameter stores")
+    ap.add_argument("--out", default=None,
+                    help="output path; quick runs default to a separate "
+                         "file so they can't clobber the pinned baseline")
+    args = ap.parse_args(argv if argv is not None else [])
+
+    if args.quick:
+        shape = (32, 16, 32, 512, 3, 8, 20)     # D L K W reps A sweeps
+        n_requests = args.requests or 48
+    else:
+        shape = (256, 64, 128, 8192, 9, 16, 50)
+        # long enough that each of the ~4 doc-length buckets fills its
+        # max_batch=256 slots several times over — shorter traces only ever
+        # deadline-flush partial batches and measure padding, not batching
+        n_requests = args.requests or 2048
+    if args.out is None:
+        args.out = "BENCH_serve_quick.json" if args.quick else (
+            "BENCH_serve.json")
+
+    sections, report = {}, []
+    if args.suite in ("all", "infer"):
+        sections["infer"], msg = _suite_infer(shape, rows)
+        report.append(f"infer: {msg}")
+    if args.suite in ("all", "latency"):
+        sections["latency"], msg = _suite_latency(
+            shape, rows, args.workdir, n_requests
+        )
+        report.append(f"latency: {msg}")
+    if args.suite in ("all", "quant"):
+        sections["quant"], msg = _suite_quant(shape, rows)
+        report.append(f"quant: {msg}")
+    if args.suite in ("all", "cache"):
+        sections["cache"], msg = _suite_cache(
+            shape, rows, args.workdir, n_requests
+        )
+        report.append(f"cache: {msg}")
+
+    _merge_out(args.out, sections, args.quick)
+    print(f"# wrote {args.out} ({'; '.join(report)})", flush=True)
     return rows
+
+
+def main_latency(rows=None, argv=None):
+    return main(rows, (argv or []) + ["--suite", "latency"])
+
+
+def main_quant(rows=None, argv=None):
+    return main(rows, (argv or []) + ["--suite", "quant"])
+
+
+def main_cache(rows=None, argv=None):
+    return main(rows, (argv or []) + ["--suite", "cache"])
 
 
 if __name__ == "__main__":

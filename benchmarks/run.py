@@ -14,10 +14,12 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   * sharded  the topic-sharded sweep on a simulated 4-way model axis:
              two-phase engine vs per-column psum hooks, pinned against the
              single-shard fused sweep (bench_sweep --suite sharded)
-  * serve    frozen-φ serving + held-out evaluation (§2.4/eq. 21): the
-             fused convergence-stopped ``ops.infer`` path vs the legacy
-             dense 50-sweep + standalone-pass path
-             (bench_serving → BENCH_serve.json)
+  * serve    frozen-φ serving + held-out evaluation (§2.4/eq. 21): all four
+             serving suites — fused-engine comparison, continuous-batching
+             latency/QPS SLO cells, bf16/int8 quantized-φ drift, hot-row
+             cache (bench_serving → BENCH_serve.json, per-suite sections)
+  * serve-latency / serve-quant / serve-cache  the focused serving
+             sub-suites (bench_serving --suite ...), opt-in via --only
 
 ``python -m benchmarks.run [--only fig7,table5,sweep,scheduled,...] [--quick]``
 (``--quick`` currently applies to the sweep suites' smoke cell.)
@@ -52,7 +54,15 @@ SUITES = {
     "scheduled": bench_sweep.main_scheduled,
     "sharded": bench_sweep.main_sharded,
     "serve": bench_serving.main,
+    "serve-latency": bench_serving.main_latency,
+    "serve-quant": bench_serving.main_quant,
+    "serve-cache": bench_serving.main_cache,
 }
+
+#: focused subsets of a broader suite — opt-in via --only so default runs
+#: don't measure the same cell twice
+SUBSET_SUITES = ("scheduled", "sharded",
+                 "serve-latency", "serve-quant", "serve-cache")
 
 
 def main() -> None:
@@ -61,10 +71,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode for suites that support it")
     args = ap.parse_args()
-    # "scheduled"/"sharded" are focused subsets of "sweep" (same cell, one
-    # variant each) — opt-in via --only so default runs don't time them twice
     picks = args.only.split(",") if args.only else [
-        n for n in SUITES if n not in ("scheduled", "sharded")
+        n for n in SUITES if n not in SUBSET_SUITES
     ]
     print("name,us_per_call,derived")
     failures = []

@@ -30,6 +30,8 @@ from repro.analysis.budget import (
     estep_token_block,
 )
 from repro.analysis.checks import (
+    QUANT_KERNELS,
+    QUANT_REFERENCE_CELLS,
     REFERENCE_CELLS,
     CheckReport,
     assert_reference_cells,
@@ -56,6 +58,8 @@ __all__ = [
     "ESTEP_TILE_BUDGET",
     "KERNEL_CONTRACTS",
     "LaunchContract",
+    "QUANT_KERNELS",
+    "QUANT_REFERENCE_CELLS",
     "REFERENCE_CELLS",
     "assert_reference_cells",
     "check_all",

@@ -17,6 +17,8 @@ import sys
 
 from repro.analysis.budget import Cell
 from repro.analysis.checks import (
+    QUANT_KERNELS,
+    QUANT_REFERENCE_CELLS,
     REFERENCE_CELLS,
     check_cell,
     default_cells,
@@ -69,6 +71,15 @@ def main(argv=None) -> int:
     reports = []
     for label, cell in cells:
         reports += check_cell(cell, label=label, lane_align=args.lane_align)
+    if args.reference or args.all:
+        # quantized-serving showcase cells: checked only against the
+        # quantized theta_sweep contracts (the f32 kernel is *expected*
+        # to blow VMEM there — that gap is the feature)
+        for label, cell in QUANT_REFERENCE_CELLS:
+            reports += check_cell(
+                cell, label=label, kernels=QUANT_KERNELS,
+                lane_align=args.lane_align,
+            )
     shown = [r for r in reports if not r.ok] if args.fail_only else reports
     if shown:
         print(format_reports(shown))

@@ -37,6 +37,19 @@ REFERENCE_CELLS: Tuple[Tuple[str, Cell], ...] = (
     ("ROADMAP W_s=8k/K=128", Cell(D=256, L=64, K=128, W_s=8192, A=16)),
 )
 
+#: Quantized-serving showcase cells, checked ONLY against the quantized
+#: theta_sweep contracts: at W_s=32768 the f32 φ block alone is 16 MiB
+#: (over the 12 MiB VMEM budget), while bf16 (~8 MiB) and int8 (~4 MiB +
+#: a 128 KiB SMEM scale vector) still fit — the concrete "halving VMEM
+#: doubles the servable W_s×K" cell pinned by BENCH_serve's quant suite.
+#: A=0 keeps the (W_s, A) schedule table out of SMEM so the comparison
+#: isolates the φ footprint.
+QUANT_KERNELS: Tuple[str, ...] = ("theta_sweep_bf16", "theta_sweep_int8")
+QUANT_REFERENCE_CELLS: Tuple[Tuple[str, Cell], ...] = (
+    ("BENCH_serve quant W_s=16k", Cell(D=256, L=64, K=128, W_s=16384, A=0)),
+    ("BENCH_serve quant W_s=32k", Cell(D=256, L=64, K=128, W_s=32768, A=0)),
+)
+
 #: Default exploration grid for ``check_all`` (beyond the reference cells):
 #: where does the single-launch working set stop fitting?
 DEFAULT_GRID_D = (64, 256, 1024)
@@ -267,8 +280,19 @@ def assert_reference_cells(lane_align: int = bm.LANE) -> List[CheckReport]:
 
     Raises ``AssertionError`` naming the first failing (kernel, cell) if
     any reference launch does not fit; returns the reports otherwise.
+
+    The quantized showcase cells (:data:`QUANT_REFERENCE_CELLS`) are
+    checked only against the quantized theta_sweep contracts — the f32
+    kernel is *expected* not to fit there; that gap is the point.
     """
     reports = check_all(REFERENCE_CELLS, lane_align=lane_align)
+    for label, cell in QUANT_REFERENCE_CELLS:
+        reports.extend(
+            check_cell(
+                cell, label=label, kernels=QUANT_KERNELS,
+                lane_align=lane_align,
+            )
+        )
     bad = [r for r in reports if not r.ok]
     if bad:
         lines = "\n".join(

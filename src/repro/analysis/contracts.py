@@ -221,35 +221,73 @@ def _sharded_fold_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
 THETA_CHUNK_SWEEPS = 10
 
 
-def _theta_sweep_spec(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
-    Dp, Kp = _pads(cell, lane_align)
-    L, W, A = cell.L, cell.W_s, max(cell.A, 1)
-    return LaunchSpec(
-        kernel="theta_sweep",
-        grid=((THETA_CHUNK_SWEEPS + 1) * L,),   # sweeps + eq. 21 columns
-        scalars=(
+#: Serving φ storage dtypes: (itemsize, min sublane tile) per variant.
+#: bf16 halves and int8 quarters the dominant (W_s, K) φ block — the
+#: "halving VMEM doubles the servable W_s×K per launch" lever — at the
+#: price of a larger Mosaic sublane tile on W_s (16/32 rows instead of 8)
+#: and, for int8, a (W_s,) f32 per-row scale vector in SMEM.
+PHI_STORAGE = {
+    "float32": (4, 8),
+    "bfloat16": (2, 16),
+    "int8": (1, 32),
+}
+
+
+def _theta_sweep_spec_for(phi_dtype: str):
+    """Build the theta_sweep contract at one serving φ storage dtype.
+
+    The f32 instantiation reproduces the original contract exactly; the
+    quantized variants change ONLY the φ block's dtype/footprint, its
+    sublane-tile rounding of W_s, and (int8) add the scalar-prefetched
+    per-row scale vector — mirroring ``theta_sweep_pallas``'s quantized
+    operand list.
+    """
+    phi_bytes, phi_tile = PHI_STORAGE[phi_dtype]
+
+    def build(cell: Cell, lane_align: int = LANE) -> LaunchSpec:
+        Dp, Kp = _pads(cell, lane_align)
+        L, A = cell.L, max(cell.A, 1)
+        W = round_up(cell.W_s, phi_tile) if phi_dtype != "float32" \
+            else cell.W_s
+        scalars = [
             Scalar("word_ids", (Dp, L)),
             Scalar("word_topics", (W, A)),
-        ),
-        inputs=(
-            Block("est_counts", (Dp, 1), (Dp, L), (0, L - 1)),
-            Block("ev_counts", (Dp, 1), (Dp, L), (0, L - 1)),
-            Block("theta_in", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
-            Block("phi_norm", (W, Kp), (W, Kp), (0, 0), carried=True),
-        ),
-        outputs=(
-            Block("theta_out", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
-            Block("est_ll", (1, Dp, 1), (L, Dp, 1), (L - 1, 0, 0)),
-            Block("ev_ll", (1, Dp, 1), (L, Dp, 1), (L - 1, 0, 0)),
-        ),
-        scratch=(
-            Block("rows_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
-            Block("acc_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
-            Block("mask_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
-        ),
-        # flat: wid(0) wtop(1) est(2) ev(3) theta(4) phi(5)
-        aliases={4: 0},
-    )
+        ]
+        if phi_dtype == "int8":
+            scalars.append(Scalar("phi_scale", (W,), dtype="float32"))
+        n_scal = len(scalars)
+        return LaunchSpec(
+            kernel=(
+                "theta_sweep" if phi_dtype == "float32"
+                else f"theta_sweep_{'bf16' if phi_dtype == 'bfloat16' else 'int8'}"
+            ),
+            grid=((THETA_CHUNK_SWEEPS + 1) * L,),  # sweeps + eq. 21 columns
+            scalars=tuple(scalars),
+            inputs=(
+                Block("est_counts", (Dp, 1), (Dp, L), (0, L - 1)),
+                Block("ev_counts", (Dp, 1), (Dp, L), (0, L - 1)),
+                Block("theta_in", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+                Block("phi_norm", (W, Kp), (W, Kp), (0, 0), carried=True,
+                      dtype=phi_dtype, dtype_bytes=phi_bytes),
+            ),
+            outputs=(
+                Block("theta_out", (Dp, Kp), (Dp, Kp), (0, 0), carried=True),
+                Block("est_ll", (1, Dp, 1), (L, Dp, 1), (L - 1, 0, 0)),
+                Block("ev_ll", (1, Dp, 1), (L, Dp, 1), (L - 1, 0, 0)),
+            ),
+            scratch=(
+                Block("rows_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+                Block("acc_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+                Block("mask_scratch", (Dp, Kp), (Dp, Kp), (0, 0)),
+            ),
+            # flat: wid(0) wtop(1) [scale] est ev theta phi — θ̂ donated
+            aliases={n_scal + 2: 0},
+        )
+
+    return build
+
+
+_theta_sweep_spec = _theta_sweep_spec_for("float32")
 
 
 # ---------------------------------------------------------------------------
@@ -365,6 +403,22 @@ KERNEL_CONTRACTS: Dict[str, LaunchContract] = {
             equations=("eq. 11", "eq. 21"),
             description="fused frozen-φ inference fixed point (§2.4)",
             build=_theta_sweep_spec,
+        ),
+        LaunchContract(
+            name="theta_sweep_bf16",
+            module="repro.kernels.theta_sweep",
+            entry="theta_sweep_pallas",
+            equations=("eq. 11", "eq. 21"),
+            description="frozen-φ inference, bf16 serving φ (dequant-on-read)",
+            build=_theta_sweep_spec_for("bfloat16"),
+        ),
+        LaunchContract(
+            name="theta_sweep_int8",
+            module="repro.kernels.theta_sweep",
+            entry="theta_sweep_pallas",
+            equations=("eq. 11", "eq. 21"),
+            description="frozen-φ inference, int8 serving φ + per-row scales",
+            build=_theta_sweep_spec_for("int8"),
         ),
         LaunchContract(
             name="foem_estep",

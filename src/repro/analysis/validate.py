@@ -77,21 +77,29 @@ def _check_word_topics(word_topics, num_rows: int, num_topics: int) -> None:
     )
 
 
+#: Minimum second-minor (sublane) tile extent of the φ block per serving
+#: storage dtype — mirrors ``theta_sweep.PHI_SUBLANE`` (kept literal here:
+#: this module is import-light and must not pull in jax).
+_PHI_SUBLANE = {"float32": SUBLANE, "bfloat16": 16, "int8": 32}
+
+
 def _check_sublane(num_rows: int, use_pallas, interpret: bool,
-                   what: str) -> None:
+                   what: str, phi_dtype: str = "float32") -> None:
     """The compiled kernels carry the (W_s, K) working set as whole-array
-    blocks; Mosaic requires the second-minor extent on the f32 sublane
-    boundary.  The wrappers pad D and K but deliberately not W_s (the
-    sharded engine's row slices must stay exact), so an explicitly forced
-    compiled launch with a ragged W_s is a contract violation — refuse it
-    here instead of deep inside Mosaic.  (The auto path simply falls back
-    to the portable sweep; interpret mode has no layout constraint.)"""
-    if use_pallas is True and not interpret and num_rows % SUBLANE:
+    blocks; Mosaic requires the second-minor extent on the dtype's sublane
+    boundary (8 rows for f32, 16 for bf16, 32 for int8).  The wrappers pad
+    D and K but deliberately not W_s (the sharded engine's row slices must
+    stay exact), so an explicitly forced compiled launch with a ragged W_s
+    is a contract violation — refuse it here instead of deep inside
+    Mosaic.  (The auto path simply falls back to the portable sweep;
+    interpret mode has no layout constraint.)"""
+    tile = _PHI_SUBLANE[phi_dtype]
+    if use_pallas is True and not interpret and num_rows % tile:
         raise ContractError(
             f"{what}: the phi working set has W_s = {num_rows} rows, not a "
-            f"multiple of the {SUBLANE}-row f32 sublane tile required by "
-            f"the compiled kernel; pad the vocab shard to a multiple of "
-            f"{SUBLANE} or drop use_pallas=True"
+            f"multiple of the {tile}-row {phi_dtype} sublane tile required "
+            f"by the compiled kernel; pad the vocab shard to a multiple of "
+            f"{tile} or drop use_pallas=True"
         )
 
 
@@ -167,8 +175,27 @@ def validate_infer_args(
     plan=None,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
+    phi_dtype: str = "float32",
 ) -> None:
-    """Check every ``ops.infer`` argument contract; raise ContractError."""
+    """Check every ``ops.infer`` argument contract; raise ContractError.
+
+    ``phi_dtype`` is the requested serving *storage* dtype of the frozen
+    φ block (``InferPlan.phi_dtype``); ``phi_norm`` itself still arrives
+    as the caller's f32 array — quantization happens after validation,
+    inside the dispatch.
+    """
+    _require(
+        phi_dtype in _PHI_SUBLANE,
+        f"phi_dtype must be one of {tuple(_PHI_SUBLANE)}, got "
+        f"{phi_dtype!r}",
+    )
+    if phi_dtype != "float32":
+        _require(
+            plan is None or plan.axis_name is None,
+            "quantized serving φ (phi_dtype != float32) is a single-shard "
+            "serving feature; a sharded InferPlan must keep phi_dtype="
+            "'float32'",
+        )
     _require(
         word_ids.ndim == 2 and _is_int(word_ids),
         f"word_ids must be a (D, L) integer array, got shape "
@@ -205,4 +232,5 @@ def validate_infer_args(
     )
     _check_word_topics(word_topics, phi_norm.shape[0], K)
     _check_plan(plan)
-    _check_sublane(phi_norm.shape[0], use_pallas, interpret, "infer")
+    _check_sublane(phi_norm.shape[0], use_pallas, interpret, "infer",
+                   phi_dtype)

@@ -1,6 +1,7 @@
 """Core library: the paper's contribution (EM / online EM / FOEM for LDA)."""
 from repro.core.types import (
     GlobalStats,
+    InferPlan,
     LDAConfig,
     LocalState,
     MinibatchData,
@@ -9,11 +10,18 @@ from repro.core.types import (
     uniform_responsibilities,
 )
 from repro.core import em, foem, sem, scheduling, perplexity, baselines
-from repro.core.streaming import ParameterStore, StoreStats, StreamPrefetcher
+from repro.core.streaming import (
+    CacheStats,
+    HotRowCache,
+    ParameterStore,
+    StoreStats,
+    StreamPrefetcher,
+)
 from repro.core.trainer import FOEMTrainer
 
 __all__ = [
     "GlobalStats",
+    "InferPlan",
     "LDAConfig",
     "LocalState",
     "MinibatchData",
@@ -26,6 +34,8 @@ __all__ = [
     "scheduling",
     "perplexity",
     "baselines",
+    "CacheStats",
+    "HotRowCache",
     "ParameterStore",
     "StoreStats",
     "StreamPrefetcher",

@@ -27,7 +27,7 @@ import numpy as np
 from repro.core import em
 from repro.core import scheduling as sched_lib
 from repro.core.types import (
-    InferResult, LDAConfig, MinibatchData, SchedulerState,
+    InferPlan, InferResult, LDAConfig, MinibatchData, SchedulerState,
     uniform_responsibilities,
 )
 from repro.kernels import ops as kops
@@ -134,6 +134,7 @@ def infer_heldout(
     active_topics: int = 0,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
+    phi_dtype: str = "float32",
 ) -> InferResult:
     """Full §2.4 inference on a held-out minibatch — the config adapter
     over ``kernels.ops.infer`` every evaluation consumer shares.
@@ -141,7 +142,9 @@ def infer_heldout(
     ``est``/``ev`` must share ``word_ids`` (``split_heldout_counts``
     guarantees it); ``ev=None`` fits only (serving).  Returns the full
     ``InferResult`` — θ̂, sweeps run, and the eq. 3/eq. 21 logliks
-    measured in-launch.
+    measured in-launch.  ``phi_dtype`` selects the serving storage dtype
+    of the frozen φ block (``InferPlan``); the quant bench measures
+    eq. 21 drift of bf16/int8 against f32 through this knob.
     """
     res = kops.infer(
         est.word_ids, est.counts, init_theta(key, est, cfg), phi_norm,
@@ -155,6 +158,7 @@ def infer_heldout(
         check_every=cfg.ppl_check_every if check_every is None else check_every,
         rel_tol=cfg.ppl_rel_tol if rel_tol is None else rel_tol,
         use_pallas=use_pallas, interpret=interpret,
+        plan=InferPlan(phi_dtype=phi_dtype),
         debug_checks=cfg.debug_checks,
     )
     return res

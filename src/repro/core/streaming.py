@@ -128,20 +128,24 @@ def _read_record(path: str) -> Optional[Tuple[dict, dict]]:
 
 @dataclasses.dataclass
 class StoreStats:
-    """I/O accounting used by the Table-5 benchmark."""
+    """I/O accounting used by the Table-5 benchmark and the serving bench."""
 
     disk_reads: int = 0      # rows read from the backing store
     disk_writes: int = 0     # rows written to the backing store
     buffer_hits: int = 0     # rows served from the hot buffer
     evictions: int = 0
+    promotions: int = 0      # rows promoted into the buffer by insert-on-read
     prefetch_hits: int = 0   # minibatches whose rows were already staged
     overlap_seconds: float = 0.0  # host I/O time hidden behind device compute
 
     def reset(self) -> None:
         self.disk_reads = self.disk_writes = 0
-        self.buffer_hits = self.evictions = 0
+        self.buffer_hits = self.evictions = self.promotions = 0
         self.prefetch_hits = 0
         self.overlap_seconds = 0.0
+
+    def snapshot(self) -> "StoreStats":
+        return dataclasses.replace(self)
 
 
 class ParameterStore:
@@ -224,18 +228,26 @@ class ParameterStore:
 
     # ------------------------------------------------------------------ I/O
 
-    def fetch_rows(self, word_ids: np.ndarray) -> np.ndarray:
+    def fetch_rows(
+        self, word_ids: np.ndarray, promote: bool = True
+    ) -> np.ndarray:
         """Read φ̂ rows for a minibatch's unique vocabulary — one block I/O.
 
         Buffer hits are gathered from the hot buffer, misses from the memmap
         with a single fancy-indexed read; missed rows are then *promoted*
         into the buffer (insert-on-read, clean) so a read-heavy stream still
         accumulates hits under the same LRU eviction policy as writes.
+
+        ``promote=False`` skips that insert-on-read: a layered read cache
+        (``HotRowCache``) that already retains the miss must not *also*
+        promote it here, or every serving miss would be double-cached —
+        once in the serving cache and once in the training buffer, evicting
+        genuinely training-hot rows and double-counting the promotion.
         """
-        return self.fetch_rows_versioned(word_ids)[0]
+        return self.fetch_rows_versioned(word_ids, promote=promote)[0]
 
     def fetch_rows_versioned(
-        self, word_ids: np.ndarray
+        self, word_ids: np.ndarray, promote: bool = True
     ) -> Tuple[np.ndarray, int]:
         """``fetch_rows`` plus the ``write_version`` the read is consistent
         with — the prefetch pipeline's reconciliation token."""
@@ -262,7 +274,9 @@ class ParameterStore:
             if n_hit == 0:                        # cold stream fast path
                 out = self._arr[ids]
                 self.stats.disk_reads += len(ids)
-                self._insert(ids, out, dirty=False)
+                if promote:
+                    self.stats.promotions += len(ids)
+                    self._insert(ids, out, dirty=False)
                 return out, self.write_version
             out = np.empty((len(ids), self.K), self.dtype)
             hit_idx = np.flatnonzero(hit)
@@ -275,7 +289,9 @@ class ParameterStore:
             rows = self._arr[miss_ids]
             out[miss_idx] = rows
             self.stats.disk_reads += len(miss_ids)
-            self._insert(miss_ids, rows, dirty=False)
+            if promote:
+                self.stats.promotions += len(miss_ids)
+                self._insert(miss_ids, rows, dirty=False)
             return out, self.write_version
 
     def write_rows(self, word_ids: np.ndarray, rows: np.ndarray) -> int:
@@ -538,6 +554,16 @@ class ParameterStore:
 
     # ------------------------------------------------------------- helpers
 
+    def stats_window(self, reset: bool = True) -> StoreStats:
+        """Snapshot the I/O counters, optionally zeroing them — the serving
+        engine samples per-request-window hit/miss/promotion rates with
+        this instead of differencing cumulative totals."""
+        with self._lock:
+            snap = self.stats.snapshot()
+            if reset:
+                self.stats.reset()
+            return snap
+
     def dense_phi(self) -> np.ndarray:
         """Materialise the live (W, K) matrix (tests / small corpora only)."""
         self.flush()
@@ -553,6 +579,151 @@ class ParameterStore:
     def rows_for_bytes(num_topics: int, nbytes: float, dtype=np.float32) -> int:
         """Translate a Table-5 style buffer size in bytes into W* rows."""
         return int(nbytes // (num_topics * np.dtype(dtype).itemsize))
+
+
+# ---------------------------------------------------------------------------
+# Serving-side hot-word row cache — read-only LRU above the store
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Hit/miss accounting for one :class:`HotRowCache` window."""
+
+    hits: int = 0            # rows served from the cache
+    misses: int = 0          # rows fetched through the store
+    invalidations: int = 0   # whole-cache drops on φ̂ version change
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class HotRowCache:
+    """Read-only hot-word φ̂-row LRU layered over a :class:`ParameterStore`.
+
+    Serving traffic is Zipf-skewed: a few hundred head words dominate every
+    request batch, but each ``TopicServer`` request localizes its own
+    vocabulary, so the store's training buffer — tuned for minibatch
+    streams and shared with the write-back path — sees the same head rows
+    re-requested under lock contention with training I/O.  This cache keeps
+    those rows in a serving-owned, read-only buffer:
+
+    * misses fall through with ``store.fetch_rows(..., promote=False)`` so
+      a serving miss is cached exactly once (here), never double-promoted
+      into the training LRU;
+    * the whole cache invalidates when ``store.write_version`` moves — the
+      frozen-φ serving contract means version changes are rare (model
+      refresh), so correctness costs one bulk drop instead of per-row
+      coherence;
+    * hit/miss counters are windowed (``window_stats``) so the engine can
+      report per-request-batch rates.
+
+    Same array-backed LRU discipline as the store buffer (ids/clock/slot
+    vectors, batched eviction); rows within one ``fetch`` must be unique —
+    they are a request batch's deduplicated local vocabulary.
+    """
+
+    def __init__(self, store: ParameterStore, capacity: int):
+        self.store = store
+        self.capacity = int(capacity)
+        self.K = store.K
+        self._version = store.write_version
+        self._lock = threading.Lock()
+        self._buf = np.zeros((self.capacity, self.K), store.dtype)
+        self._ids = np.full((self.capacity,), -1, np.int64)
+        self._clock_v = np.zeros((self.capacity,), np.int64)
+        self._slot_of = np.full((store.capacity,), -1, np.int64)
+        self._clock = 0
+        self.stats = CacheStats()        # cumulative
+        self._window = CacheStats()      # since last window_stats(reset=True)
+
+    def _count(self, hits: int = 0, misses: int = 0, inval: int = 0) -> None:
+        for s in (self.stats, self._window):
+            s.hits += hits
+            s.misses += misses
+            s.invalidations += inval
+
+    def _invalidate(self) -> None:
+        self._ids.fill(-1)
+        self._slot_of.fill(-1)
+        self._count(inval=1)
+
+    def fetch(self, word_ids: np.ndarray) -> np.ndarray:
+        """Gather φ̂ rows for a request batch's unique vocabulary."""
+        ids = np.asarray(word_ids, np.int64)
+        if self.capacity == 0:
+            self._count(misses=len(ids))
+            return self.store.fetch_rows(ids, promote=False)
+        with self._lock:
+            if self.store.write_version != self._version:
+                self._invalidate()
+                self._version = self.store.write_version
+            slots = self._slot_of[ids]
+            hit = slots >= 0
+            n_hit = int(hit.sum())
+            if n_hit == len(ids):                 # head-word fast path
+                out = self._buf[slots]
+                self._touch(slots)
+                self._count(hits=n_hit)
+                return out
+            miss_idx = np.flatnonzero(~hit)
+            miss_ids = ids[miss_idx]
+            rows = self.store.fetch_rows(miss_ids, promote=False)
+            if n_hit == 0:
+                out = rows
+            else:
+                out = np.empty((len(ids), self.K), self._buf.dtype)
+                hit_idx = np.flatnonzero(hit)
+                hit_slots = slots[hit_idx]
+                out[hit_idx] = self._buf[hit_slots]
+                self._touch(hit_slots)
+                out[miss_idx] = rows
+            self._count(hits=n_hit, misses=len(miss_ids))
+            self._insert(miss_ids, rows)
+            return out
+
+    def _touch(self, slots: np.ndarray) -> None:
+        n = len(slots)
+        if n:
+            self._clock_v[slots] = np.arange(self._clock, self._clock + n)
+            self._clock += n
+
+    def _insert(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        n_new = len(ids)
+        if n_new > self.capacity:                 # keep the batch's tail
+            ids, rows = ids[-self.capacity:], rows[-self.capacity:]
+            n_new = self.capacity
+        if n_new == 0:
+            return
+        free = np.flatnonzero(self._ids < 0)
+        need = n_new - len(free)
+        if need > 0:
+            occupied = np.flatnonzero(self._ids >= 0)
+            oldest = occupied[
+                np.argpartition(self._clock_v[occupied], need - 1)[:need]
+            ]
+            self._slot_of[self._ids[oldest]] = -1
+            self._ids[oldest] = -1
+            free = np.concatenate([free, oldest])
+        tgt = free[:n_new]
+        self._buf[tgt] = rows
+        self._ids[tgt] = ids
+        self._slot_of[ids] = tgt
+        self._touch(tgt)
+
+    def resident_rows(self) -> int:
+        return int((self._ids >= 0).sum())
+
+    def window_stats(self, reset: bool = True) -> CacheStats:
+        """Hit/miss counters since the last window; the engine calls this
+        once per flushed batch to surface per-batch cache rates."""
+        with self._lock:
+            snap = dataclasses.replace(self._window)
+            if reset:
+                self._window = CacheStats()
+            return snap
 
 
 # ---------------------------------------------------------------------------

@@ -203,6 +203,43 @@ class SweepPlan:
             raise ValueError(f"unknown SweepPlan.impl {self.impl!r}")
 
 
+@dataclasses.dataclass(frozen=True)
+class InferPlan:
+    """Execution plan for ``kernels.ops.infer`` — the serving sibling of
+    :class:`SweepPlan`.
+
+    ``axis_name``/``impl`` carry exactly the SweepPlan semantics (a
+    sharded axis implies the portable path; ``impl`` overrides backend
+    selection).  ``phi_dtype`` additionally picks the *storage* dtype of
+    the frozen, read-only φ block:
+
+    * ``"float32"`` (default) — the fp32 path, bitwise-unchanged from a
+      plan-less call;
+    * ``"bfloat16"`` — φ is cast to bf16 and dequantized on read inside
+      the kernel, halving the φ block's VMEM (2× the servable W_s×K);
+    * ``"int8"`` — symmetric per-row int8 quantization
+      (``theta_sweep.quantize_phi``) with the f32 row scales
+      scalar-prefetched; 4× smaller φ block.
+
+    φ is inference-only under this plan (§2.4: the M-step for φ is off),
+    so quantization error never compounds — it is directly measurable as
+    eq. 21 held-out perplexity drift (see ``benchmarks/bench_serving.py``
+    ``--suite quant``).  θ̂ and all fixed-point arithmetic stay f32.
+    """
+
+    axis_name: Optional[str] = None
+    impl: str = "auto"          # auto | pallas | interpret | portable
+    phi_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+    def __post_init__(self):
+        if self.impl not in ("auto", "pallas", "interpret", "portable"):
+            raise ValueError(f"unknown InferPlan.impl {self.impl!r}")
+        if self.phi_dtype not in ("float32", "bfloat16", "int8"):
+            raise ValueError(
+                f"unknown InferPlan.phi_dtype {self.phi_dtype!r}"
+            )
+
+
 class SweepResult(NamedTuple):
     """Everything one column-serial Gauss-Seidel sweep produces.
 

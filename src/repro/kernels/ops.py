@@ -34,7 +34,7 @@ from jax import lax
 
 from repro.analysis.budget import SUBLANE
 from repro.analysis.validate import validate_infer_args, validate_sweep_args
-from repro.core.types import InferResult, SweepPlan, SweepResult
+from repro.core.types import InferPlan, InferResult, SweepPlan, SweepResult
 from repro.kernels import ref
 from repro.kernels.foem_estep import fused_estep_pallas
 from repro.kernels.gs_sweep import fits_vmem, gs_sweep_pallas
@@ -44,7 +44,13 @@ from repro.kernels.sharded_sweep import (
     sharded_fold_pallas,
     sharded_probe_pallas,
 )
-from repro.kernels.theta_sweep import theta_fits_vmem, theta_sweep_pallas
+from repro.kernels.theta_sweep import (
+    PHI_SUBLANE,
+    dequantize_phi,
+    quantize_phi,
+    theta_fits_vmem,
+    theta_sweep_pallas,
+)
 from repro.kernels.topk_estep import topk_estep_pallas
 
 
@@ -801,7 +807,7 @@ def infer(
     rel_tol: jax.Array | float = 0.0,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
-    plan: Optional[SweepPlan] = None,          # execution plan (mesh axis etc.)
+    plan: Optional[SweepPlan | InferPlan] = None,  # execution plan
     debug_checks: bool = False,                # numerical-invariant sanitizer
 ) -> InferResult:
     """Frozen-φ inference for unseen documents — THE serving entry point.
@@ -844,11 +850,21 @@ def infer(
       restructuring).  Sharded plans imply the portable path (a collective
       cannot cross a Pallas kernel boundary); the returned ``theta`` is
       the shard's topic slice, the logliks are already globally reduced.
+    * ``plan`` may also be an :class:`~repro.core.types.InferPlan`, whose
+      ``phi_dtype`` selects the serving *storage* dtype of the frozen φ
+      block: ``"bfloat16"``/``"int8"`` quantize once up front
+      (``theta_sweep.quantize_phi`` — per-row scales for int8) and the
+      kernel dequantizes each gathered row on read, shrinking the VMEM φ
+      block 2×/4×.  The portable mirror dequantizes the same values, so
+      kernel/portable parity is preserved under quantization; with the
+      default ``"float32"`` the dispatch is bitwise-identical to a
+      plan-less call.
     * Argument contracts are validated eagerly (``ContractError``);
       ``debug_checks=True`` runs the ``repro.analysis.sanitizer``
       invariants on the result (jitted callers wrap with
       ``checkify.checkify``).
     """
+    phi_dtype = getattr(plan, "phi_dtype", "float32") if plan else "float32"
     forced_pallas = use_pallas is True or (
         plan is not None and plan.axis_name is None and plan.impl == "pallas"
     )
@@ -856,7 +872,7 @@ def infer(
         word_ids, est_counts, theta0, phi_norm,
         ev_counts=ev_counts, word_topics=word_topics, plan=plan,
         use_pallas=True if forced_pallas else use_pallas,
-        interpret=interpret,
+        interpret=interpret, phi_dtype=phi_dtype,
     )
     D, L = word_ids.shape
     K = theta0.shape[-1]
@@ -893,28 +909,42 @@ def infer(
             interpret = False           # explicit False wins: pure-jnp oracle
         elif use_pallas is None:
             use_pallas = (
-                on_tpu() and theta_fits_vmem(phi_norm.shape[0], D, K)
-                and phi_norm.shape[0] % SUBLANE == 0
+                on_tpu()
+                and theta_fits_vmem(phi_norm.shape[0], D, K,
+                                    phi_dtype=phi_dtype)
+                and phi_norm.shape[0] % PHI_SUBLANE[phi_dtype] == 0
             )
+
+    # Quantize the frozen φ block ONCE, outside the while_loop: both paths
+    # then read the same stored values, so kernel/portable parity holds
+    # under quantization.  The f32 path never touches phi_norm.
+    phi_store, phi_scale = phi_norm, None
+    if phi_dtype != "float32":
+        phi_store, phi_scale = quantize_phi(phi_norm, phi_dtype)
 
     if use_pallas or interpret:
         lane_align = 128 if (use_pallas and not interpret) else 1
 
         def chunk(theta):
             return theta_sweep_pallas(
-                word_ids, est_counts, ev, theta, phi_norm, word_topics,
+                word_ids, est_counts, ev, theta, phi_store, word_topics,
+                phi_scale,
                 alpha_m1=alpha_m1, num_sweeps=check_every,
                 lane_align=lane_align, interpret=interpret,
             )
     else:
+        phi_read = (
+            phi_norm if phi_dtype == "float32"
+            else dequantize_phi(phi_store, phi_scale)
+        )
         word_masks = (
-            _word_lane_masks(phi_norm, word_topics)
+            _word_lane_masks(phi_read, word_topics)
             if word_topics is not None else None
         )
 
         def chunk(theta):
             return _infer_chunk_portable(
-                word_ids, est_counts, ev, theta, phi_norm, word_masks,
+                word_ids, est_counts, ev, theta, phi_read, word_masks,
                 alpha_m1=alpha_m1, k_alpha=k_alpha, num_sweeps=check_every,
                 axis_name=axis_name,
             )

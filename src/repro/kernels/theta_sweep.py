@@ -48,6 +48,18 @@ Convergence is decided OUTSIDE the launch: the dispatch layer
 estimation-split perplexity moves less than ``rel_tol`` (the same relative
 stop rule as training, ``LDAConfig.ppl_rel_tol``).
 
+Quantized serving φ (``InferPlan.phi_dtype``): because φ is frozen and
+read-only at serving time, it may enter the launch as bf16 or as int8
+values with a per-row f32 scale (``quantize_phi``).  The kernel
+dequantizes ON READ — each gathered (1, K) row is cast back to f32 (and
+scaled, for int8) as it lands in the f32 ``rows`` scratch — so every
+downstream fixed-point and eq. 21 operation is unchanged f32 arithmetic.
+Only the big (W_s, K) φ block shrinks (2× for bf16, 4× for int8), which
+is what doubles/quadruples the servable W_s×K per launch; the int8 scale
+vector rides in SMEM next to the word ids.  The f32 path is bitwise
+untouched: the quantized ref/cast code is not even staged when
+``phi_norm`` arrives as f32.
+
 VMEM budget: θ̂ in/out + the gathered-rows, accumulator and (scheduled)
 mask scratches are (D, K) blocks next to the (W_s, K) φ block; the
 dispatch falls back to the portable jnp mirror when the working set
@@ -67,38 +79,93 @@ from repro.analysis.budget import DEFAULT_VMEM_BUDGET
 from repro.analysis.checks import kernel_fits_vmem
 
 
+#: Serving φ storage dtypes ``ops.infer`` accepts (InferPlan.phi_dtype).
+PHI_DTYPES = ("float32", "bfloat16", "int8")
+
+#: Minimum second-minor (sublane) tile extent per φ storage dtype — the
+#: Mosaic layout constraint a compiled launch's W_s must be a multiple of.
+PHI_SUBLANE = {"float32": 8, "bfloat16": 16, "int8": 32}
+
+#: phi_dtype -> registered LaunchContract name (quantized variants).
+_PHI_CONTRACT = {
+    "float32": "theta_sweep",
+    "bfloat16": "theta_sweep_bf16",
+    "int8": "theta_sweep_int8",
+}
+
+
 def theta_fits_vmem(num_rows: int, num_docs: int, num_topics: int,
-                    budget: int = DEFAULT_VMEM_BUDGET) -> bool:
+                    budget: int = DEFAULT_VMEM_BUDGET,
+                    phi_dtype: str = "float32") -> bool:
     """Can the inference kernel's live VMEM set fit for one launch?
 
-    Delegates to the ``theta_sweep`` contract in ``repro.analysis``: the
-    carried θ̂ pair (in + aliased out), the read-only φ block, the
-    rows/accumulator/mask scratches and the per-column split/loglik
-    blocks, at the padded shapes.
+    Delegates to the ``theta_sweep`` contract in ``repro.analysis`` (or
+    its quantized ``theta_sweep_bf16``/``theta_sweep_int8`` variant): the
+    carried θ̂ pair (in + aliased out), the read-only φ block at the
+    serving storage dtype, the rows/accumulator/mask scratches and the
+    per-column split/loglik blocks, at the padded shapes.
     """
-    return kernel_fits_vmem("theta_sweep", num_rows, num_docs, num_topics,
-                            budget)
+    return kernel_fits_vmem(_PHI_CONTRACT[phi_dtype], num_rows, num_docs,
+                            num_topics, budget)
+
+
+def quantize_phi(phi_norm: jax.Array, phi_dtype: str):
+    """Quantize a normalised (W_s, K) φ block for read-only serving.
+
+    Returns ``(values, scale)`` where ``scale`` is ``None`` except for
+    int8, which uses symmetric per-row quantization: ``scale_w =
+    max_k |φ_w(k)| / 127`` (1.0 for all-zero rows, e.g. vocab padding)
+    and ``values = round(φ_w / scale_w)``.  Per-ROW scaling matters:
+    dequantize-then-gather and gather-then-dequantize are then bitwise
+    identical, so the in-kernel on-read dequantization matches the
+    portable mirror exactly.
+    """
+    if phi_dtype == "float32":
+        return phi_norm, None
+    if phi_dtype == "bfloat16":
+        return phi_norm.astype(jnp.bfloat16), None
+    if phi_dtype == "int8":
+        amax = jnp.max(jnp.abs(phi_norm), axis=-1)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+        q = jnp.round(phi_norm / scale[:, None])
+        return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+    raise ValueError(
+        f"unknown phi_dtype {phi_dtype!r}; expected one of {PHI_DTYPES}"
+    )
+
+
+def dequantize_phi(values: jax.Array,
+                   scale: Optional[jax.Array]) -> jax.Array:
+    """Invert :func:`quantize_phi` (the portable mirror's read path)."""
+    out = values.astype(jnp.float32)
+    if scale is not None:
+        out = out * scale[:, None]
+    return out
 
 
 def _make_theta_kernel(*, alpha_m1: float, k_actual: int, num_cols: int,
-                       num_sweeps: int, active_topics: int):
-    """Kernel body for a static (sweeps, A) configuration.
+                       num_sweeps: int, active_topics: int,
+                       quantized: bool = False, has_scale: bool = False):
+    """Kernel body for a static (sweeps, A, φ-dtype) configuration.
 
-    Ref order: scalar prefetch (wid[, word-topics]), inputs (est counts
-    column, ev counts column, θ̂, φ), outputs (θ̂ carried; est/ev log-
-    predictive columns), scratch (gathered rows, sweep accumulator[, lane
-    mask]).  ``active_topics == 0`` builds the dense variant.
+    Ref order: scalar prefetch (wid[, word-topics][, φ row scales]),
+    inputs (est counts column, ev counts column, θ̂, φ), outputs (θ̂
+    carried; est/ev log-predictive columns), scratch (gathered rows,
+    sweep accumulator[, lane mask]).  ``active_topics == 0`` builds the
+    dense variant; ``quantized`` casts each gathered φ row back to f32 on
+    read (``has_scale`` additionally multiplies by the word's
+    scalar-prefetched int8 scale) — the f32 variant stages no cast at all.
     """
     scheduled = active_topics > 0
 
     def kernel(*refs):
-        if scheduled:
-            (wid_ref, wtop_ref, cnt_ref, ev_ref, theta_in_ref, phi_ref,
-             theta_ref, est_ref, evll_ref, rows_ref, acc_ref, mask_ref) = refs
-        else:
-            (wid_ref, cnt_ref, ev_ref, theta_in_ref, phi_ref,
-             theta_ref, est_ref, evll_ref, rows_ref, acc_ref) = refs
-            wtop_ref = mask_ref = None
+        rest = list(refs)
+        wid_ref = rest.pop(0)
+        wtop_ref = rest.pop(0) if scheduled else None
+        scale_ref = rest.pop(0) if has_scale else None
+        (cnt_ref, ev_ref, theta_in_ref, phi_ref,
+         theta_ref, est_ref, evll_ref, rows_ref, acc_ref) = rest[:9]
+        mask_ref = rest[9] if scheduled else None
 
         l = pl.program_id(0)
         D, K = theta_ref.shape
@@ -123,7 +190,14 @@ def _make_theta_kernel(*, alpha_m1: float, k_actual: int, num_cols: int,
 
             def go(d, _):
                 w = wid_ref[d, col]
-                rows_ref[pl.ds(d, 1), :] = phi_ref[pl.ds(w, 1), :]
+                row = phi_ref[pl.ds(w, 1), :]
+                if quantized:
+                    # dequantize on read: the f32 rows scratch receives
+                    # exact f32 arithmetic from here on
+                    row = row.astype(rows_ref.dtype)
+                    if has_scale:
+                        row = row * scale_ref[w]
+                rows_ref[pl.ds(d, 1), :] = row
                 if with_mask:
                     m = jnp.zeros((1, K), theta_in_ref.dtype)
                     for a in range(active_topics):  # static unroll, A ≈ 16
@@ -190,8 +264,10 @@ def theta_sweep_pallas(
     est_counts: jax.Array,     # (D, L) float32 — estimation (80%) split
     ev_counts: jax.Array,      # (D, L) float32 — evaluation (20%) split
     theta: jax.Array,          # (D, K) θ̂ sufficient statistics (carried)
-    phi_norm: jax.Array,       # (W_s, K) NORMALISED φ (eq. 10), frozen
+    phi_norm: jax.Array,       # (W_s, K) NORMALISED φ (eq. 10), frozen;
+                               # f32, bf16 or int8 (see quantize_phi)
     word_topics: Optional[jax.Array] = None,  # (W_s, A) int32: scheduled fit
+    phi_scale: Optional[jax.Array] = None,    # (W_s,) f32: int8 row scales
     *,
     alpha_m1: float,
     num_sweeps: int,
@@ -209,6 +285,11 @@ def theta_sweep_pallas(
     counts ⇒ zero θ̂ fold and zero partials, so padding is exact);
     ``lane_align`` pads the topic axis — φ's padded lanes carry zeros, so
     they never enter the responsibilities or the likelihood.
+
+    A non-f32 ``phi_norm`` selects the quantized-read variant: the φ
+    block stays at its storage dtype in VMEM and each gathered row is
+    dequantized on read (int8 additionally needs ``phi_scale``, the
+    per-row scales of :func:`quantize_phi`, scalar-prefetched to SMEM).
     """
     if num_sweeps < 1:
         raise ValueError("num_sweeps must be >= 1")
@@ -217,6 +298,10 @@ def theta_sweep_pallas(
     Wrows = phi_norm.shape[0]
     scheduled = word_topics is not None
     A = word_topics.shape[-1] if scheduled else 0
+    quantized = phi_norm.dtype != theta.dtype
+    has_scale = phi_scale is not None
+    if phi_norm.dtype == jnp.int8 and not has_scale:
+        raise ValueError("int8 phi_norm requires phi_scale row scales")
 
     pad_d = (-D) % 8
     pad_k = (-K) % lane_align if lane_align > 1 else 0
@@ -230,16 +315,13 @@ def theta_sweep_pallas(
 
     kernel = _make_theta_kernel(
         alpha_m1=alpha_m1, k_actual=K, num_cols=L, num_sweeps=num_sweeps,
-        active_topics=A,
+        active_topics=A, quantized=quantized, has_scale=has_scale,
     )
     grid_len = num_sweeps * L + L              # sweeps + eq. 21 columns
 
-    if scheduled:
-        def idx(fn):
-            return lambda l, wid, wt: fn(l)
-    else:
-        def idx(fn):
-            return lambda l, wid: fn(l)
+    def idx(fn):
+        # trailing args are the scalar-prefetch refs (wid[, wtop][, scale])
+        return lambda l, *scalars: fn(l)
 
     col_of = lambda l: jax.lax.rem(l, L)
 
@@ -269,12 +351,15 @@ def theta_sweep_pallas(
     operands = [word_ids]
     if scheduled:
         operands.append(word_topics)
+    if has_scale:
+        operands.append(phi_scale)
+    n_scalars = len(operands)
     operands += [est_counts, ev_counts, theta, phi_norm]
-    # flat operands: wid(0) [wtop(1)] est ev theta phi — θ̂ donated
-    theta_idx = 4 if scheduled else 3
+    # flat operands: wid(0) [wtop] [scale] est ev theta phi — θ̂ donated
+    theta_idx = n_scalars + 2
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2 if scheduled else 1,
+        num_scalar_prefetch=n_scalars,
         grid=(grid_len,),
         in_specs=in_specs,
         out_specs=out_specs,

@@ -10,12 +10,39 @@ dispatch (``kernels.ops.infer``): convergence-stopped chunks of the
 single-launch θ sweep kernel on TPU, the jnp mirror elsewhere, with the
 eq. 21 log-predictive partials available in the same launch for
 lifelong held-out evaluation.
+
+The high-throughput path is :class:`ServingEngine` — continuous batching
+over :class:`TopicServer`'s fixed jit shapes::
+
+      submit() ──► admission queue (per-L-bucket in-flight slots)
+                      │  collector thread: flush when a bucket fills
+                      │  or its oldest request hits max_delay_ms
+                      ▼
+      bounded launch queue ──► launcher thread
+                      │  localize_vocab → fetch φ̂ rows (HotRowCache →
+                      │  ParameterStore) → pad to the (D, L, W_s) bucket
+                      │  → one `_infer_local` launch (pre-warmed traces)
+                      ▼
+      per-request futures resolve with (θ_d, latency)
+
+Admission never blocks on compute: while the launcher executes batch *s*,
+the collector keeps admitting and assembling batch *s+1* (the launch
+queue is the only backpressure).  Per-document PRNG keys make results
+independent of how requests were packed into batches, so continuous
+batching is semantically invisible.  ``phi_dtype`` serves a quantized
+(bf16/int8) read-only φ block through the same launches; the
+:class:`TrafficGenerator` drives the stack with Zipf word mixes and
+Poisson arrivals for the BENCH_serve SLO cells.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
+import queue
+import threading
 import time
+from concurrent.futures import Future
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -23,10 +50,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, LDA_ARCH
-from repro.core import LDAConfig, ParameterStore
+from repro.core import HotRowCache, LDAConfig, ParameterStore
 from repro.core import em
 from repro.core.perplexity import init_theta, serving_active_topics
-from repro.core.types import MinibatchData
+from repro.core.types import InferPlan, MinibatchData, uniform_responsibilities
 from repro.data import synthetic_lda_corpus
 from repro.kernels import ops as kops
 from repro.models import build
@@ -40,18 +67,32 @@ def _round_up(n: int, multiple: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "fit_sweeps", "check_every", "active_topics",
-                     "use_pallas", "interpret"),
+                     "use_pallas", "interpret", "phi_dtype"),
 )
 def _infer_local(key, word_ids, counts, ev_counts, rows, phi_k, cfg,
                  fit_sweeps, check_every, rel_tol, active_topics,
-                 use_pallas, interpret):
+                 use_pallas, interpret, phi_dtype="float32"):
     """One jitted request batch: normalise the streamed (W_s, K) view
     (eq. 10 with the *global* W smoothing mass), fit θ̂ through
-    ``ops.infer`` and return the eq. 9 mixtures + diagnostics."""
+    ``ops.infer`` and return the eq. 9 mixtures + diagnostics.
+
+    ``key`` is either one batch key (legacy: one init stream folded over
+    the whole (D, L, K) block — a document's init then depends on its slot
+    in the batch) or a (D, 2) *per-document* key stack: each document's
+    θ̂ init draws from its own stream, so the result is invariant to how
+    the continuous-batching engine packed requests into slots.
+    """
+    if key.ndim == 2:        # per-document keys: slot-invariant init
+        L = word_ids.shape[1]
+        mu0 = jax.vmap(
+            lambda k: uniform_responsibilities(k, (L, cfg.K), cfg.dtype)
+        )(key)
+        theta0 = em.fold_theta(mu0, counts)
+    else:
+        theta0 = init_theta(key, MinibatchData(word_ids, counts), cfg)
     phi_norm = em.normalize_phi(rows, phi_k, cfg, vocab_size=cfg.W)
     res = kops.infer(
-        word_ids, counts, init_theta(key, MinibatchData(word_ids, counts),
-                                     cfg), phi_norm,
+        word_ids, counts, theta0, phi_norm,
         alpha_m1=cfg.alpha_m1, ev_counts=ev_counts,
         word_topics=(
             serving_active_topics(phi_norm, active_topics)
@@ -59,6 +100,7 @@ def _infer_local(key, word_ids, counts, ev_counts, rows, phi_k, cfg,
         ),
         max_sweeps=fit_sweeps, check_every=check_every, rel_tol=rel_tol,
         use_pallas=use_pallas, interpret=interpret,
+        plan=InferPlan(phi_dtype=phi_dtype),
         debug_checks=cfg.debug_checks,
     )
     return em.normalize_theta(res.theta, cfg), res.sweeps, res.ev_loglik
@@ -80,6 +122,12 @@ class TopicServer:
     ``active_topics > 0`` restricts each word's fit support to its top-A
     topics by φ mass (the §3.1 machinery at serving time), and
     ``use_pallas``/``interpret`` force the kernel/oracle dispatch.
+
+    Serving-specific knobs: ``phi_dtype`` stores the frozen φ block in
+    bf16/int8 inside the fused kernel (dequantize-on-read; f32 results
+    bitwise-unchanged by default) and ``hot_rows > 0`` layers a read-only
+    hot-word row LRU (:class:`~repro.core.streaming.HotRowCache`) over
+    the store, sized for the Zipf head of request traffic.
     """
 
     def __init__(self, store: ParameterStore, cfg: LDAConfig,
@@ -89,7 +137,9 @@ class TopicServer:
                  active_topics: int = 0,
                  use_pallas: Optional[bool] = None,
                  interpret: bool = False,
-                 vocab_pad: int = 512):
+                 vocab_pad: int = 512,
+                 phi_dtype: str = "float32",
+                 hot_rows: int = 0):
         self.store = store
         self.cfg = cfg
         self.fit_sweeps = fit_sweeps
@@ -101,14 +151,23 @@ class TopicServer:
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.vocab_pad = max(1, vocab_pad)   # W_s bucketing for jit reuse
+        self.phi_dtype = phi_dtype
+        self.hot_cache = (
+            HotRowCache(store, hot_rows) if hot_rows > 0 else None
+        )
         self.last_sweeps = 0                 # fixed-point sweeps of last call
+
+    def _fetch_rows(self, uniq: np.ndarray) -> np.ndarray:
+        if self.hot_cache is not None:
+            return self.hot_cache.fetch(uniq)
+        return self.store.fetch_rows(uniq)
 
     def _run(self, word_ids: np.ndarray, counts: np.ndarray,
              ev_counts: Optional[np.ndarray], key: Optional[jax.Array]):
         if key is None:
             key = jax.random.PRNGKey(0)      # deterministic by default
         uniq, local = localize_vocab(word_ids)
-        rows = self.store.fetch_rows(uniq)                 # streamed φ̂
+        rows = self._fetch_rows(uniq)                      # streamed φ̂
         # pad the local vocab to a bucket boundary so jit traces are reused
         # across requests (padded rows are never indexed by `local`)
         pad = _round_up(len(uniq), self.vocab_pad) - len(uniq)
@@ -125,6 +184,7 @@ class TopicServer:
             jnp.asarray(rows), jnp.asarray(self.store.phi_k, jnp.float32),
             self.cfg, self.fit_sweeps, self.check_every, self.rel_tol,
             self.active_topics, self.use_pallas, self.interpret,
+            self.phi_dtype,
         )
         if self.cfg.debug_checks:
             # functionalize the sanitizer checks through the jitted batch
@@ -185,6 +245,400 @@ class TopicServer:
             yield chunk, theta[: len(chunk)]
 
 
+# ---------------------------------------------------------------------------
+# Continuous batching — the high-throughput serving engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Request:
+    """One admitted document, waiting in an in-flight slot."""
+
+    seq: int
+    word_ids: np.ndarray         # (n,) token word ids (unpadded)
+    counts: np.ndarray           # (n,) token counts
+    key: np.ndarray              # (2,) uint32 per-document PRNG key
+    future: Future
+    t_submit: float
+
+
+class ServingEngine:
+    """Continuous batching over :class:`TopicServer`'s fixed jit shapes.
+
+    Two stages, decoupled by a bounded launch queue so admission never
+    blocks on compute:
+
+    * ``submit`` (caller thread) appends the request to the in-flight
+      slots of its document-length bucket — O(1) under a lock — and
+      returns a :class:`~concurrent.futures.Future`;
+    * the *collector* thread flushes a bucket into the launch queue when
+      it fills its ``max_batch`` slots, or when its **oldest** request has
+      waited ``max_delay_ms`` (deadline-aware: a straggling slot never
+      holds a full bucket hostage, a lone request never waits more than
+      the deadline);
+    * the *launcher* thread pads each flushed batch to the
+      (``max_batch``, L-bucket) jit shape (tail slots are empty
+      documents, exactly like ``infer_stream``'s tail padding), runs one
+      ``_infer_local`` launch and resolves the futures.
+
+    Every request gets a *per-document* PRNG key, so a document's θ is
+    independent of which slot/batch the collector packed it into —
+    continuous batching is semantically invisible (bitwise, under
+    ``rel_tol=0``).  ``prewarm()`` compiles the whole (L-bucket ×
+    W_s-bucket) trace grid up front; ``compile_count()`` exposes the
+    jit-cache size so benches can assert no recompilation under traffic.
+    """
+
+    def __init__(self, server: TopicServer, *,
+                 max_batch: int = 64,
+                 bucket_multiple: int = 16,
+                 max_delay_ms: float = 5.0,
+                 max_len: int = 256,
+                 queue_depth: int = 4,
+                 seed: int = 0):
+        self.server = server
+        self.max_batch = int(max_batch)
+        self.bucket_multiple = int(bucket_multiple)
+        self.max_delay = float(max_delay_ms) / 1e3
+        self.max_len = int(max_len)
+        self.queue_depth = int(queue_depth)
+        self._base_key = np.asarray(jax.random.PRNGKey(seed), np.uint32)
+        self._pending: dict = {}             # L bucket -> list[_Request]
+        self._seq = 0
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: "queue.Queue" = queue.Queue(maxsize=self.queue_depth)
+        self._stop = False
+        self._resolved = 0                   # futures resolved (ok or error)
+        self.latencies: List[float] = []     # per request, submit -> resolve
+        self.batch_log: List[dict] = []      # per launched batch
+        self._collector = threading.Thread(
+            target=self._collect_loop, name="serve-collector", daemon=True
+        )
+        self._launcher = threading.Thread(
+            target=self._launch_loop, name="serve-launcher", daemon=True
+        )
+        self._collector.start()
+        self._launcher.start()
+
+    # ------------------------------------------------------------- admission
+
+    def _bucket(self, n: int) -> int:
+        return _round_up(max(n, 1), self.bucket_multiple)
+
+    def submit(self, word_ids: np.ndarray, counts: Optional[np.ndarray] = None,
+               key: Optional[np.ndarray] = None) -> Future:
+        """Admit one document; resolves to its (K,) normalized θ (eq. 9)."""
+        w = np.asarray(word_ids, np.int32).ravel()
+        c = (np.ones(len(w), np.float32) if counts is None
+             else np.asarray(counts, np.float32).ravel())
+        if len(w) > self.max_len:
+            raise ValueError(
+                f"document has {len(w)} tokens > engine max_len "
+                f"{self.max_len}; raise max_len at construction"
+            )
+        fut: Future = Future()
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("ServingEngine is closed")
+            seq = self._seq
+            self._seq += 1
+            if key is None:
+                # distinct per-request stream, no per-request jax dispatch
+                key = self._base_key.copy()
+                key[1] ^= np.uint32(seq)
+            req = _Request(seq, w, c, np.asarray(key, np.uint32), fut,
+                           time.perf_counter())
+            self._pending.setdefault(self._bucket(len(w)), []).append(req)
+            self._cond.notify()
+        return fut
+
+    # ------------------------------------------------------------- collector
+
+    def _collect_loop(self) -> None:
+        while True:
+            flush: List[Tuple[int, List[_Request]]] = []
+            with self._cond:
+                while True:
+                    if self._stop and not self._pending:
+                        break
+                    now = time.perf_counter()
+                    deadline = None
+                    for L, reqs in self._pending.items():
+                        if len(reqs) >= self.max_batch or self._stop:
+                            flush.append((L, reqs[: self.max_batch]))
+                            rest = reqs[self.max_batch:]
+                            self._pending[L] = rest
+                            continue
+                        age_out = reqs[0].t_submit + self.max_delay
+                        if age_out <= now:
+                            flush.append((L, reqs))
+                            self._pending[L] = []
+                        elif deadline is None or age_out < deadline:
+                            deadline = age_out
+                    self._pending = {
+                        L: r for L, r in self._pending.items() if r
+                    }
+                    if flush or (self._stop and not self._pending):
+                        break
+                    self._cond.wait(
+                        timeout=None if deadline is None else deadline - now
+                    )
+                stopping = self._stop and not self._pending
+            for item in flush:       # bounded put OUTSIDE the lock:
+                self._queue.put(item)  # backpressure must not stall submit()
+            if stopping and not flush:
+                self._queue.put(None)
+                return
+
+    # -------------------------------------------------------------- launcher
+
+    def _launch_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            L, reqs = item
+            try:
+                self._launch(L, reqs)
+            except BaseException as e:   # resolve, never hang the callers
+                n_err = 0
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                        n_err += 1
+                with self._lock:
+                    self._resolved += n_err
+
+    def _launch(self, L: int, reqs: List[_Request]) -> None:
+        D = self.max_batch
+        w = np.zeros((D, L), np.int32)
+        c = np.zeros((D, L), np.float32)
+        keys = np.zeros((D, 2), np.uint32)
+        for i, r in enumerate(reqs):
+            w[i, : len(r.word_ids)] = r.word_ids
+            c[i, : len(r.counts)] = r.counts
+            keys[i] = r.key
+        t0 = time.perf_counter()
+        theta = self.server.infer(w, c, key=jnp.asarray(keys))
+        t1 = time.perf_counter()
+        cache = self.server.hot_cache
+        cw = cache.window_stats() if cache is not None else None
+        rec = {
+            "L": L, "filled": len(reqs), "capacity": D,
+            "launch_seconds": t1 - t0,
+            "cache_hits": cw.hits if cw else 0,
+            "cache_misses": cw.misses if cw else 0,
+        }
+        for i, r in enumerate(reqs):
+            r.future.set_result(np.asarray(theta[i]))
+        with self._lock:
+            self._resolved += len(reqs)
+            self.batch_log.append(rec)
+            self.latencies.extend(t1 - r.t_submit for r in reqs)
+
+    # -------------------------------------------------------------- plumbing
+
+    def prewarm(self, lengths: Optional[Sequence[int]] = None,
+                vocab_sizes: Optional[Sequence[int]] = None) -> int:
+        """Compile the (L-bucket × W_s-bucket) trace grid up front.
+
+        Defaults cover every shape the admission path can produce: L
+        buckets are the ``bucket_multiple`` grid up to ``max_len``; W_s
+        buckets are the ``vocab_pad`` grid up to the largest unique vocab
+        a full batch can touch (min(W, max_batch·L)).  Returns the jit
+        cache size afterwards — under subsequent traffic
+        ``compile_count()`` must not move past it.
+        """
+        srv = self.server
+        if lengths is None:
+            lengths = range(self.bucket_multiple, self.max_len + 1,
+                            self.bucket_multiple)
+        count = 0
+        for L in lengths:
+            Lb = self._bucket(L)
+            if Lb != L:
+                continue
+            vs = vocab_sizes
+            if vs is None:
+                reach = min(srv.cfg.W, self.max_batch * Lb)
+                vs = range(srv.vocab_pad,
+                           _round_up(reach, srv.vocab_pad) + 1,
+                           srv.vocab_pad)
+            for ws in vs:
+                n = min(ws, srv.cfg.W, self.max_batch * Lb)
+                if _round_up(n, srv.vocab_pad) != ws:
+                    continue          # bucket not reachable at this (D, L)
+                w = (np.arange(self.max_batch * Lb, dtype=np.int64) % n)
+                w = w.reshape(self.max_batch, Lb).astype(np.int32)
+                c = np.ones_like(w, np.float32)
+                keys = np.zeros((self.max_batch, 2), np.uint32)
+                srv.infer(w, c, key=jnp.asarray(keys))
+                count += 1
+        # prewarm traffic must not pollute the serving counters
+        if srv.hot_cache is not None:
+            srv.hot_cache.window_stats(reset=True)
+            srv.hot_cache.stats = type(srv.hot_cache.stats)()
+        srv.store.stats_window(reset=True)
+        return self.compile_count()
+
+    @staticmethod
+    def compile_count() -> int:
+        """Size of ``_infer_local``'s jit cache — the recompilation probe."""
+        return _infer_local._cache_size()
+
+    def metrics(self, reset: bool = False) -> dict:
+        """Latency/throughput/cache summary over the recorded window."""
+        with self._lock:
+            lats = np.asarray(self.latencies, np.float64)  # lint: host-f64
+            log = list(self.batch_log)
+            if reset:
+                self.latencies = []
+                self.batch_log = []
+        out = {
+            "requests": int(lats.size),
+            "batches": len(log),
+            "mean_fill": (
+                float(np.mean([b["filled"] for b in log])) if log else 0.0
+            ),
+            "cache_hits": int(sum(b["cache_hits"] for b in log)),
+            "cache_misses": int(sum(b["cache_misses"] for b in log)),
+        }
+        if lats.size:
+            out.update(
+                p50_ms=float(np.percentile(lats, 50) * 1e3),
+                p99_ms=float(np.percentile(lats, 99) * 1e3),
+                mean_ms=float(lats.mean() * 1e3),
+            )
+        return out
+
+    def drain(self) -> None:
+        """Block until every admitted request has resolved."""
+        while True:
+            with self._lock:
+                idle = not self._pending and self._queue.empty()
+                resolved, admitted = self._resolved, self._seq
+            if idle and resolved >= admitted:
+                return
+            time.sleep(0.001)
+
+    def close(self) -> None:
+        """Flush remaining slots, stop both threads (idempotent)."""
+        with self._cond:
+            if self._stop:
+                return
+            self._stop = True
+            self._cond.notify()
+        self._collector.join()
+        self._launcher.join()
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Synthetic traffic — Zipf word mix, Poisson arrivals, QPS ramps
+# ---------------------------------------------------------------------------
+
+
+class TrafficGenerator:
+    """Deterministic synthetic request traffic for the serving bench.
+
+    Documents draw their tokens from a Zipf(``zipf_exponent``) word
+    distribution over a seeded permutation of the vocabulary (the
+    realistic skew the hot-row cache exploits); arrivals are Poisson —
+    i.i.d. exponential gaps at each stage's rate — with ``stages`` giving
+    a QPS ramp as ``(qps, num_requests)`` segments.  ``trace`` precomputes
+    everything (sampling never runs inside the timed loop);
+    ``replay`` submits a trace either paced (latency measurement) or
+    back-to-back (sustained-throughput measurement).
+    """
+
+    def __init__(self, vocab_size: int, *,
+                 zipf_exponent: float = 1.1,
+                 doc_len: Tuple[int, int] = (16, 64),
+                 seed: int = 0):
+        self.vocab = int(vocab_size)
+        self.doc_len = doc_len
+        self.rng = np.random.default_rng(seed)
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)  # lint: host-f64
+        p = ranks ** -float(zipf_exponent)
+        self._p = p / p.sum()
+        self._word_of_rank = self.rng.permutation(self.vocab)
+
+    def document(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One bag-of-words request: (unique word ids, counts)."""
+        lo, hi = self.doc_len
+        n_tokens = int(self.rng.integers(lo, hi + 1))
+        ranks = self.rng.choice(self.vocab, size=n_tokens, p=self._p)
+        uniq, counts = np.unique(self._word_of_rank[ranks],
+                                 return_counts=True)
+        return uniq.astype(np.int32), counts.astype(np.float32)
+
+    def trace(self, stages: Sequence[Tuple[float, int]]
+              ) -> List[Tuple[float, np.ndarray, np.ndarray]]:
+        """Precompute ``(arrival_seconds, word_ids, counts)`` requests for
+        a QPS ramp of ``(qps, num_requests)`` stages."""
+        out = []
+        t = 0.0
+        for qps, n in stages:
+            gaps = self.rng.exponential(1.0 / float(qps), int(n))
+            for g in gaps:
+                t += float(g)
+                w, c = self.document()
+                out.append((t, w, c))
+        return out
+
+    @staticmethod
+    def replay(trace, submit, pace: bool = True) -> List[Future]:
+        """Drive ``submit(word_ids, counts)`` with a precomputed trace.
+
+        ``pace=True`` honours the arrival timestamps (open-loop latency
+        measurement: late arrivals are submitted immediately, queueing
+        delay counts against the server); ``pace=False`` submits
+        back-to-back (closed-loop sustained-QPS measurement).
+        """
+        futures = []
+        t0 = time.perf_counter()
+        for t_arr, w, c in trace:
+            if pace:
+                delay = t0 + t_arr - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            futures.append(submit(w, c))
+        return futures
+
+
+def serve_traffic(args, server: TopicServer) -> None:
+    """Drive the continuous-batching engine with synthetic Zipf/Poisson
+    traffic and report the SLO numbers (p50/p99 latency, QPS, cache)."""
+    gen = TrafficGenerator(args.vocab, seed=123)
+    trace = gen.trace([(args.qps, args.requests)])
+    with ServingEngine(server, max_batch=args.batch,
+                       max_delay_ms=args.max_delay_ms,
+                       max_len=_round_up(gen.doc_len[1], 16)) as eng:
+        compiled = eng.prewarm()
+        t0 = time.time()
+        futs = TrafficGenerator.replay(trace, eng.submit, pace=args.pace)
+        for f in futs:
+            f.result()
+        dt = time.time() - t0
+        m = eng.metrics()
+        assert eng.compile_count() == compiled, "recompiled under traffic!"
+    print(f"served {m['requests']} requests in {dt:.2f}s "
+          f"({m['requests']/dt:.1f} QPS sustained, target {args.qps})")
+    print(f"  latency p50 {m.get('p50_ms', 0):.1f}ms  "
+          f"p99 {m.get('p99_ms', 0):.1f}ms  "
+          f"batches {m['batches']} (mean fill {m['mean_fill']:.1f})")
+    if server.hot_cache is not None:
+        s = server.hot_cache.stats
+        print(f"  hot-row cache: {s.hits} hits / {s.misses} misses "
+              f"({100 * s.hit_rate:.1f}%)")
+
+
 def serve_lda(args) -> None:
     cfg = LDAConfig(num_topics=args.topics, vocab_size=args.vocab)
     store = ParameterStore(args.workdir, num_topics=args.topics,
@@ -194,7 +648,11 @@ def serve_lda(args) -> None:
         raise SystemExit(
             f"no trained φ̂ under {args.workdir}; run launch/train.py first"
         )
-    server = TopicServer(store, cfg, active_topics=args.active_topics)
+    server = TopicServer(store, cfg, active_topics=args.active_topics,
+                         phi_dtype=args.phi_dtype, hot_rows=args.hot_rows)
+    if args.traffic:
+        serve_traffic(args, server)
+        return
     corpus, _ = synthetic_lda_corpus(args.requests, args.vocab,
                                      args.topics, seed=123)
     ids = list(range(corpus.num_docs))
@@ -266,6 +724,23 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=512)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--gen-tokens", type=int, default=32)
+    ap.add_argument("--traffic", action="store_true",
+                    help="drive the continuous-batching engine with "
+                         "synthetic Zipf/Poisson traffic and report "
+                         "p50/p99 latency + sustained QPS")
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="offered request rate for --traffic")
+    ap.add_argument("--pace", action="store_true",
+                    help="honour arrival timestamps (open-loop latency "
+                         "run) instead of submitting back-to-back")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="continuous-batching flush deadline")
+    ap.add_argument("--phi-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"),
+                    help="serving storage dtype of the frozen φ block")
+    ap.add_argument("--hot-rows", type=int, default=0,
+                    help="capacity of the serving hot-word φ-row cache "
+                         "(0 = disabled)")
     args = ap.parse_args()
     if args.arch == LDA_ARCH:
         serve_lda(args)

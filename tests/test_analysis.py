@@ -51,9 +51,14 @@ REF_CELL = REFERENCE_CELLS[0][1]     # BENCH_sweep full
 # ---------------------------------------------------------------------------
 
 def test_reference_cells_fit_compiled():
+    from repro.analysis import QUANT_KERNELS, QUANT_REFERENCE_CELLS
+
     reports = assert_reference_cells()          # raises on any failure
     assert {r.kernel for r in reports} == set(KERNEL_CONTRACTS)
-    assert len(reports) == len(KERNEL_CONTRACTS) * len(REFERENCE_CELLS)
+    assert len(reports) == (
+        len(KERNEL_CONTRACTS) * len(REFERENCE_CELLS)
+        + len(QUANT_KERNELS) * len(QUANT_REFERENCE_CELLS)
+    )
     # the ROADMAP W_s=8k/K=128 target is among the gated cells
     assert any("8k" in r.label or r.cell.W_s == 8192 for r in reports)
 
@@ -102,6 +107,22 @@ def test_fit_boundary_matches_legacy_heuristics():
     assert fits_vmem(8192, 256, 128) == kernel_fits_vmem(
         "gs_sweep", 8192, 256, 128
     )
+
+
+def test_quantized_phi_extends_fit_boundary():
+    """The quantized-serving showcase: at W_s=32k/D=256/K=128 the f32 φ
+    block alone blows the VMEM budget, while bf16 and int8 storage fit —
+    the static model certifies the 'halving VMEM doubles servable W_s×K'
+    claim before any kernel runs."""
+    from repro.kernels.theta_sweep import theta_fits_vmem
+
+    assert not kernel_fits_vmem("theta_sweep", 32768, 256, 128)
+    assert kernel_fits_vmem("theta_sweep_bf16", 32768, 256, 128)
+    assert kernel_fits_vmem("theta_sweep_int8", 32768, 256, 128)
+    for dt in ("float32", "bfloat16", "int8"):
+        assert theta_fits_vmem(32768, 256, 128, phi_dtype=dt) == (
+            dt != "float32"
+        )
 
 
 def test_estep_token_block_rule():

@@ -1,0 +1,227 @@
+"""Continuous-batching serving engine: slot-invariance, deadline flush,
+compile stability under traffic, hot-row cache semantics, and the
+deterministic traffic generator.
+
+The contract: ``ServingEngine`` packs asynchronously submitted documents
+into ``TopicServer``'s fixed jit shapes without changing any answer — a
+document's θ̂ is bitwise the same whether it arrived alone, mid-batch, or
+padded next to strangers (per-document PRNG keys) — and the whole trace
+grid compiles once at ``prewarm()`` time, never under traffic.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HotRowCache, LDAConfig, ParameterStore
+from repro.launch.serve import ServingEngine, TopicServer, TrafficGenerator
+
+K, W = 8, 96
+
+
+@pytest.fixture()
+def server(tmp_path):
+    rng = np.random.default_rng(0)
+    phi = rng.gamma(1.0, 1.0, (W, K)).astype(np.float32) * 1e4
+    store = ParameterStore(str(tmp_path / "phi"), num_topics=K,
+                           vocab_capacity=W, buffer_rows=0)
+    store.write_rows(np.arange(W), phi)
+    store.phi_k[:] = phi.sum(0)
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    return TopicServer(store, cfg, fit_sweeps=10, rel_tol=0.0,
+                       check_every=10, vocab_pad=32, hot_rows=48)
+
+
+def _doc(rng, n):
+    uniq = rng.choice(W, size=n, replace=False).astype(np.int32)
+    return uniq, rng.integers(1, 5, n).astype(np.float32)
+
+
+def test_engine_matches_direct_batch_bitwise(server):
+    """Continuous batching is semantically invisible: a doc's θ̂ equals a
+    hand-padded direct ``server.infer`` launch with the same per-doc key,
+    regardless of slot position or co-batched strangers (rel_tol=0)."""
+    rng = np.random.default_rng(1)
+    docs = [_doc(rng, n) for n in (5, 9, 3, 8)]
+    keys = np.asarray(rng.integers(0, 2**32, (4, 2), dtype=np.uint64),
+                      np.uint32)
+
+    with ServingEngine(server, max_batch=4, bucket_multiple=16,
+                       max_delay_ms=50.0, max_len=16) as eng:
+        futs = [eng.submit(w, c, key=k) for (w, c), k in zip(docs, keys)]
+        got = [f.result(timeout=30) for f in futs]
+
+    # direct launch: same docs in DIFFERENT slot order, same per-doc keys
+    order = [2, 0, 3, 1]
+    wp = np.zeros((4, 16), np.int32)
+    cp = np.zeros((4, 16), np.float32)
+    kp = np.zeros((4, 2), np.uint32)
+    for slot, i in enumerate(order):
+        w, c = docs[i]
+        wp[slot, : len(w)] = w
+        cp[slot, : len(c)] = c
+        kp[slot] = keys[i]
+    theta = np.asarray(server.infer(wp, cp, key=jnp.asarray(kp)))
+    for slot, i in enumerate(order):
+        np.testing.assert_array_equal(got[i], theta[slot])
+
+
+def test_deadline_flush_resolves_partial_batch(server):
+    """A lone request must not wait for the bucket to fill: the collector
+    flushes once the oldest request ages past max_delay_ms."""
+    with ServingEngine(server, max_batch=64, bucket_multiple=16,
+                       max_delay_ms=20.0, max_len=16) as eng:
+        rng = np.random.default_rng(2)
+        w, c = _doc(rng, 6)
+        theta = eng.submit(w, c).result(timeout=30)
+        assert theta.shape == (K,)
+        assert eng.batch_log and eng.batch_log[0]["filled"] == 1
+
+
+def test_prewarm_pins_compile_count_under_traffic(server):
+    """After prewarm() the jit cache must not grow, whatever mix of doc
+    lengths the traffic produces — every reachable (L, W_s) bucket was
+    compiled up front."""
+    with ServingEngine(server, max_batch=4, bucket_multiple=8,
+                       max_delay_ms=2.0, max_len=16) as eng:
+        compiled = eng.prewarm()
+        gen = TrafficGenerator(W, doc_len=(2, 14), seed=3)
+        futs = [eng.submit(*gen.document()) for _ in range(40)]
+        for f in futs:
+            f.result(timeout=30)
+        eng.drain()
+        assert eng.compile_count() == compiled
+        m = eng.metrics()
+        assert m["requests"] == 40
+        assert m["p99_ms"] >= m["p50_ms"] > 0.0
+
+
+def test_engine_rejects_oversized_and_closed(server):
+    eng = ServingEngine(server, max_len=16, max_delay_ms=1.0)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(np.arange(17, dtype=np.int32))
+    eng.close()
+    eng.close()                                   # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(np.arange(4, dtype=np.int32))
+
+
+def test_close_flushes_pending_requests(server):
+    """close() must resolve every admitted request, even ones still
+    sitting in a partially-filled slot."""
+    eng = ServingEngine(server, max_batch=64, bucket_multiple=16,
+                        max_delay_ms=10_000.0, max_len=16)
+    rng = np.random.default_rng(4)
+    futs = [eng.submit(*_doc(rng, 5)) for _ in range(3)]
+    eng.close()
+    for f in futs:
+        assert f.result(timeout=30).shape == (K,)
+
+
+# ---------------------------------------------------------------------------
+# Hot-row cache
+# ---------------------------------------------------------------------------
+
+
+def _store(tmp_path, buffer_rows=16):
+    rng = np.random.default_rng(7)
+    phi = rng.random((W, K)).astype(np.float32)
+    store = ParameterStore(str(tmp_path / "phi"), num_topics=K,
+                           vocab_capacity=W, buffer_rows=buffer_rows)
+    store.write_rows(np.arange(W), phi)
+    return store, phi
+
+
+def test_hot_row_cache_returns_store_rows(tmp_path):
+    store, phi = _store(tmp_path)
+    cache = HotRowCache(store, capacity=32)
+    ids = np.asarray([3, 17, 40, 3], np.int64)
+    np.testing.assert_array_equal(cache.fetch(ids), phi[ids])
+    # second fetch is all hits and still exact
+    np.testing.assert_array_equal(cache.fetch(ids), phi[ids])
+    win = cache.window_stats(reset=True)
+    assert win.hits + win.misses == 8
+    assert win.hits >= 4
+    assert cache.window_stats().hits == 0          # window reset
+
+
+def test_hot_row_cache_invalidates_on_store_write(tmp_path):
+    """A training write bumps the store version; the read-only cache must
+    drop everything rather than serve stale φ rows."""
+    store, _ = _store(tmp_path)
+    cache = HotRowCache(store, capacity=32)
+    ids = np.asarray([1, 2, 3], np.int64)
+    cache.fetch(ids)
+    new_rows = np.full((3, K), 7.5, np.float32)
+    store.write_rows(ids, new_rows)
+    np.testing.assert_array_equal(cache.fetch(ids), new_rows)
+    assert cache.stats.invalidations == 1
+
+
+def test_hot_row_cache_misses_do_not_promote_into_store_buffer(tmp_path):
+    """Serving reads through the cache must not double-buffer: the cache
+    fetches misses with promote=False, so the store's own LRU stays
+    untouched (no promotions, no inserts)."""
+    store, _ = _store(tmp_path, buffer_rows=8)
+    store.stats_window(reset=True)
+    cache = HotRowCache(store, capacity=32)
+    cache.fetch(np.asarray([5, 6, 7], np.int64))
+    cache.fetch(np.asarray([8, 9], np.int64))
+    swin = store.stats_window(reset=True)
+    assert swin.promotions == 0
+    assert swin.buffer_hits == 0
+    # a direct (training-path) read still promotes
+    store.fetch_rows(np.asarray([10, 11], np.int64))
+    assert store.stats_window().promotions == 2
+
+
+def test_hot_row_cache_eviction_keeps_capacity(tmp_path):
+    store, phi = _store(tmp_path)
+    cache = HotRowCache(store, capacity=4)
+    cache.fetch(np.arange(4, dtype=np.int64))
+    assert cache.resident_rows() == 4
+    np.testing.assert_array_equal(
+        cache.fetch(np.asarray([50, 51], np.int64)), phi[50:52])
+    assert cache.resident_rows() == 4              # evicted, not grown
+    # zero-capacity cache is a counting passthrough
+    off = HotRowCache(store, capacity=0)
+    np.testing.assert_array_equal(off.fetch(np.asarray([2], np.int64)),
+                                  phi[2:3])
+    assert off.stats.misses == 1 and off.stats.hits == 0
+
+
+# ---------------------------------------------------------------------------
+# Traffic generator
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_generator_deterministic_and_zipf_skewed():
+    a = TrafficGenerator(W, doc_len=(4, 12), seed=11)
+    b = TrafficGenerator(W, doc_len=(4, 12), seed=11)
+    ta = a.trace([(100.0, 20), (400.0, 20)])
+    tb = b.trace([(100.0, 20), (400.0, 20)])
+    assert len(ta) == len(tb) == 40
+    for (t1, w1, c1), (t2, w2, c2) in zip(ta, tb):
+        assert t1 == t2
+        np.testing.assert_array_equal(w1, w2)
+        np.testing.assert_array_equal(c1, c2)
+    # arrivals are sorted and the QPS ramp compresses the gaps
+    times = [t for t, _, _ in ta]
+    assert times == sorted(times)
+    # Zipf mix: a handful of hot words dominate the token mass
+    counts = np.zeros(W)
+    for _, w, c in ta:
+        counts[w] += c
+    top8 = np.sort(counts)[::-1][:8].sum()
+    assert top8 / counts.sum() > 0.25
+
+
+def test_traffic_replay_unpaced_preserves_order():
+    gen = TrafficGenerator(W, doc_len=(4, 8), seed=5)
+    trace = gen.trace([(1000.0, 10)])
+    seen = []
+    futs = TrafficGenerator.replay(
+        trace, lambda w, c: seen.append((w, c)) or len(seen), pace=False)
+    assert futs == list(range(1, 11))
+    for (_, w, c), (w2, c2) in zip(trace, seen):
+        np.testing.assert_array_equal(w, w2)
+        np.testing.assert_array_equal(c, c2)

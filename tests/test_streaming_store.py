@@ -237,3 +237,37 @@ def test_fetch_beyond_capacity_raises_explanatory_error(tmp_path):
     st = _mk(tmp_path, buffer_rows=4)
     with pytest.raises(ValueError, match="exceeds store capacity"):
         st.fetch_rows(np.array([150]))          # capacity is 100
+
+
+def test_promotion_counter_and_stats_window(tmp_path):
+    """satellite: promotions are counted once per disk-read row, and
+    stats_window() gives a reset-able per-batch view without disturbing
+    the cumulative counters."""
+    st = _mk(tmp_path, buffer_rows=8)
+    st.fetch_rows(np.array([1, 2, 3]))           # cold: 3 promotions
+    assert st.stats.promotions == 3
+    win = st.stats_window(reset=True)
+    assert win.promotions == 3 and win.disk_reads == 3
+    st.fetch_rows(np.array([1, 2, 3]))           # warm: no promotion
+    win = st.stats_window(reset=True)
+    assert win.promotions == 0 and win.buffer_hits == 3
+    # the window reset did not zero anything mid-flight: counters add up
+    assert st.stats_window().buffer_hits == 0
+
+
+def test_fetch_rows_promote_false_reads_without_caching(tmp_path):
+    """satellite fix: serving reads (promote=False) must not insert into
+    the LRU buffer — the old insert-on-read double-counted rows already
+    held by the serving-side hot cache."""
+    st = _mk(tmp_path, buffer_rows=8)
+    vals = st.fetch_rows(np.array([5, 6]), promote=False)
+    assert st.stats.promotions == 0
+    st.stats.reset()
+    st.fetch_rows(np.array([5, 6]), promote=False)
+    assert st.stats.disk_reads == 2              # still cold: never cached
+    assert st.stats.buffer_hits == 0
+    # versioned variant honours the flag too
+    _, ver = st.fetch_rows_versioned(np.array([5, 6]), promote=False)
+    assert st.stats.promotions == 0 and ver == st.write_version
+    np.testing.assert_array_equal(vals, st.fetch_rows(np.array([5, 6])))
+    assert st.stats.promotions == 2              # default path still promotes

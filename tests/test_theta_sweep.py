@@ -395,3 +395,151 @@ def test_topic_server_stream_and_evaluate(tmp_path):
     theta, ppl = server.evaluate(w, est_c, ev_c)
     assert theta.shape == (8, K)
     assert np.isfinite(ppl) and 1.0 < ppl < W
+
+
+# ---------------------------------------------------------------------------
+# Quantized serving φ (InferPlan.phi_dtype): parity, drift, invariances
+# ---------------------------------------------------------------------------
+
+def _quant_run(phi_dtype, D=8, L=6, K=16, W=64, seed=2, **kw):
+    from repro.core.types import InferPlan
+
+    est, ev, phi_wk, phi_k = _state(D, L, K, W, seed=seed)
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(0), est, cfg)
+    return kops.infer(
+        est.word_ids, est.counts, theta0, phi_norm,
+        alpha_m1=cfg.alpha_m1, ev_counts=ev.counts,
+        max_sweeps=20, check_every=10, rel_tol=0.0,
+        plan=InferPlan(phi_dtype=phi_dtype), **kw,
+    ), float(ev.counts.sum())
+
+
+@pytest.mark.parametrize("phi_dtype", ["bfloat16", "int8"])
+def test_quantized_kernel_matches_portable(phi_dtype):
+    """Kernel (interpret) and portable mirror read the SAME stored quantized
+    values, so their θ̂/logliks must agree to fp accumulation order."""
+    rk, _ = _quant_run(phi_dtype, use_pallas=True, interpret=True)
+    rp, _ = _quant_run(phi_dtype, use_pallas=False)
+    np.testing.assert_allclose(rk.theta, rp.theta, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(rk.ev_loglik, rp.ev_loglik, rtol=2e-5)
+
+
+@pytest.mark.parametrize("how", ["kernel", "portable"])
+@pytest.mark.parametrize("phi_dtype", ["bfloat16", "int8"])
+def test_quantized_eq21_drift_within_tolerance(how, phi_dtype):
+    """bf16/int8 serving φ must hold the declared SLO: < 1% relative
+    eq. 21 perplexity drift vs f32 at iso-sweeps."""
+    kw = (dict(use_pallas=True, interpret=True) if how == "kernel"
+          else dict(use_pallas=False))
+    r32, ntok = _quant_run("float32", **kw)
+    rq, _ = _quant_run(phi_dtype, **kw)
+    ppl32 = float(jnp.exp(-r32.ev_loglik / ntok))
+    pplq = float(jnp.exp(-rq.ev_loglik / ntok))
+    assert abs(pplq / ppl32 - 1.0) < 0.01
+
+
+@pytest.mark.parametrize("how", ["kernel", "portable"])
+def test_phi_dtype_float32_is_bitwise_noop(how):
+    """InferPlan(phi_dtype='float32') must be bitwise identical to no plan
+    at all — the quantization feature cannot perturb the default path."""
+    from repro.core.types import InferPlan
+
+    kw = (dict(use_pallas=True, interpret=True) if how == "kernel"
+          else dict(use_pallas=False))
+    est, ev, phi_wk, phi_k = _state(8, 6, 16, 64, seed=4)
+    cfg = LDAConfig(num_topics=16, vocab_size=64)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(1), est, cfg)
+    args = (est.word_ids, est.counts, theta0, phi_norm)
+    shared = dict(alpha_m1=cfg.alpha_m1, ev_counts=ev.counts,
+                  max_sweeps=20, check_every=10, rel_tol=0.0, **kw)
+    r0 = kops.infer(*args, **shared)
+    r1 = kops.infer(*args, plan=InferPlan(phi_dtype="float32"), **shared)
+    np.testing.assert_array_equal(np.asarray(r0.theta), np.asarray(r1.theta))
+    assert float(r0.ev_loglik) == float(r1.ev_loglik)
+
+
+@pytest.mark.parametrize("phi_dtype", ["bfloat16", "int8"])
+def test_quantized_doc_padding_invariance(phi_dtype):
+    """Padding docs with zero-count tokens stays bitwise-invisible under a
+    quantized φ (the padded rows quantize to the same stored values)."""
+    from repro.core.types import InferPlan
+
+    est, ev, phi_wk, phi_k = _state(6, 5, 8, 64, seed=9)
+    cfg = LDAConfig(num_topics=8, vocab_size=64)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(3), est, cfg)
+    kw = dict(alpha_m1=cfg.alpha_m1, max_sweeps=10, check_every=10,
+              rel_tol=0.0, plan=InferPlan(phi_dtype=phi_dtype),
+              use_pallas=True, interpret=True)
+    base = kops.infer(est.word_ids, est.counts, theta0, phi_norm, **kw)
+    padL = jnp.concatenate(
+        [est.word_ids, jnp.zeros((6, 3), est.word_ids.dtype)], axis=1)
+    padC = jnp.concatenate(
+        [est.counts, jnp.zeros((6, 3), est.counts.dtype)], axis=1)
+    padded = kops.infer(padL, padC, theta0, phi_norm, **kw)
+    np.testing.assert_array_equal(np.asarray(base.theta),
+                                  np.asarray(padded.theta))
+
+
+def test_quantize_phi_roundtrip_properties():
+    """quantize/dequantize invariants: f32 passthrough, int8 per-row scale
+    symmetry, zero rows stay exactly zero, bounded elementwise error."""
+    from repro.kernels.theta_sweep import dequantize_phi, quantize_phi
+
+    rng = np.random.default_rng(0)
+    phi = jnp.asarray(rng.random((32, 16)).astype(np.float32))
+    phi = phi.at[5].set(0.0)                     # an all-zero row
+
+    v, s = quantize_phi(phi, "float32")
+    assert v is phi and s is None
+
+    v, s = quantize_phi(phi, "bfloat16")
+    assert v.dtype == jnp.bfloat16 and s is None
+    err = np.abs(np.asarray(dequantize_phi(v, s)) - np.asarray(phi))
+    assert err.max() <= 2.0 ** -8                # bf16 has 8 mantissa bits
+
+    v, s = quantize_phi(phi, "int8")
+    assert v.dtype == jnp.int8 and s.shape == (32,)
+    deq = np.asarray(dequantize_phi(v, s))
+    assert np.all(deq[5] == 0.0)
+    amax = np.asarray(jnp.max(jnp.abs(phi), axis=-1))
+    assert np.all(np.abs(deq - np.asarray(phi))
+                  <= amax[:, None] / 127.0 * 0.5 + 1e-7)
+
+
+def test_quantized_int8_requires_scale():
+    """An int8 φ operand without its per-row scale vector is a contract
+    violation the wrapper must refuse eagerly."""
+    est, _, phi_wk, phi_k = _state(8, 4, 8, 64)
+    cfg = LDAConfig(num_topics=8, vocab_size=64)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(0), est, cfg)
+    from repro.kernels.theta_sweep import quantize_phi
+
+    q, _scale = quantize_phi(phi_norm, "int8")
+    with pytest.raises(ValueError, match="scale"):
+        theta_sweep_pallas(
+            est.word_ids, est.counts, jnp.zeros_like(est.counts),
+            theta0, q, alpha_m1=cfg.alpha_m1, num_sweeps=2, interpret=True,
+        )
+
+
+def test_quantized_sharded_plan_rejected():
+    """Quantized serving φ is a single-shard feature: a sharded InferPlan
+    must be refused at the dispatch boundary."""
+    from repro.analysis import ContractError
+    from repro.core.types import InferPlan
+
+    est, _, phi_wk, phi_k = _state(8, 4, 8, 64)
+    cfg = LDAConfig(num_topics=8, vocab_size=64)
+    phi_norm = em.normalize_phi(phi_wk, phi_k, cfg)
+    theta0 = _theta0(jax.random.PRNGKey(0), est, cfg)
+    with pytest.raises(ContractError, match="single-shard"):
+        kops.infer(
+            est.word_ids, est.counts, theta0, phi_norm,
+            alpha_m1=cfg.alpha_m1, max_sweeps=10,
+            plan=InferPlan(axis_name="model", phi_dtype="int8"),
+        )
