@@ -1,0 +1,120 @@
+"""Lifelong train-while-serve benchmark — the versioned φ hot-swap path.
+
+One suite (section ``lifelong`` of ``BENCH_lifelong.json``): run the
+end-to-end scenario from ``repro.launch.lifelong`` at the reference
+serving cell D=256, L=64, K=128, W=8192 — a trainer thread publishing
+committed snapshots on a cadence while the continuous-batching engine
+replays Zipf/Poisson traffic against whichever version is newest — and
+pin the protocol's costs:
+
+  * ``swap_seconds_max``       — hot-swap latency (crc verify + re-quantize
+    + per-version cache invalidation + epoch install);
+  * ``staleness_versions_max`` — how many committed versions behind the
+    newest publish any launch served (bounded by ``retain`` by
+    construction — the Cappé SA staleness argument);
+  * ``p50_ms``/``p99_ms``      — serving latency ACROSS publishes (the
+    tail must survive hot-swaps, not just steady state);
+  * publish cadence/coverage   — ≥ 3 publishes, zero failed requests,
+    every response tagged with a committed snapshot version.
+
+``--quick`` runs the CI smoke cell and writes ``BENCH_lifelong_quick.json``
+so the pinned baseline can't be clobbered.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+
+from benchmarks.bench_serving import _merge_out
+from benchmarks.common import csv_row
+from repro.launch import lifelong
+
+RETAIN = 2
+
+
+def _suite_lifelong(quick: bool, rows, workdir: str):
+    if quick:
+        kw = dict(topics=32, vocab=512, docs=128, minibatch=128, steps=6,
+                  publish_every=2, requests=48, doc_len=(8, 16),
+                  max_batch=32, fit_sweeps=10, hot_rows=64)
+    else:
+        # the BENCH_serve reference cell: D=256 docs/minibatch, L=64 token
+        # bucket, K=128 topics, W=8192 vocab
+        kw = dict(topics=128, vocab=8192, docs=256, minibatch=256, steps=12,
+                  publish_every=4, requests=256, doc_len=(32, 64),
+                  max_batch=64, fit_sweeps=20, hot_rows=1024)
+    # scratch store owned by this bench: a stale manifest from a different
+    # cell (quick vs full K) would fail the store's restart consistency check
+    shutil.rmtree(workdir, ignore_errors=True)
+    report = lifelong.run_lifelong(
+        workdir=workdir, retain=RETAIN, seed=0, **kw
+    )
+
+    # --- the acceptance gates this bench pins ---
+    assert report["publishes"] >= 3, report["publishes"]
+    assert report["failed_requests"] == 0, report["failed_requests"]
+    assert not report["uncommitted_versions"], report["uncommitted_versions"]
+    assert report["staleness_versions_max"] <= RETAIN, (
+        report["staleness_versions_max"], RETAIN,
+    )
+    assert not report["recompiled"], "jit recompiled across hot-swaps"
+
+    cell = f"D{kw['minibatch']}_K{kw['topics']}_W{kw['vocab']}"
+    rows.append(csv_row(
+        f"lifelong_swap_{cell}", report["swap_seconds_max"] * 1e6,
+        f"swaps={len(report['swap_log'])}"
+        f"_staleness={report['staleness_versions_max']}v",
+    ))
+    rows.append(csv_row(
+        f"lifelong_p99_{cell}", report["p99_ms"] * 1e3,
+        f"p50={report['p50_ms']:.1f}ms_requests={report['requests']}"
+        f"_publishes={report['publishes']}",
+    ))
+    section = {
+        "cell": dict(kw, retain=RETAIN),
+        "publishes": report["publishes"],
+        "publish_log": report["publish_log"],
+        "swap_log": report["swap_log"],
+        "swap_seconds_max": report["swap_seconds_max"],
+        "staleness_versions_max": report["staleness_versions_max"],
+        "requests": report["requests"],
+        "failed_requests": report["failed_requests"],
+        "served_versions": [report["served_version_min"],
+                            report["served_version_max"]],
+        "p50_ms": report["p50_ms"],
+        "p99_ms": report["p99_ms"],
+        "mean_fill": report["mean_fill"],
+        "heldout_ppl": report["heldout_ppl"],
+        "shift_events": report["shift_events"],
+        "wall_seconds": report["wall_seconds"],
+    }
+    msg = (f"{report['publishes']} publishes, swap ≤ "
+           f"{report['swap_seconds_max']*1e3:.2f}ms, p99 "
+           f"{report['p99_ms']:.1f}ms, staleness ≤ "
+           f"{report['staleness_versions_max']}v")
+    return section, msg
+
+
+def main(rows=None, argv=None):
+    rows = rows if rows is not None else []
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small smoke cell (CI)")
+    ap.add_argument("--workdir", default="/tmp/repro_bench_lifelong",
+                    help="scratch dir for the scenario's parameter store")
+    ap.add_argument("--out", default=None,
+                    help="output path; quick runs default to a separate "
+                         "file so they can't clobber the pinned baseline")
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.out is None:
+        args.out = ("BENCH_lifelong_quick.json" if args.quick
+                    else "BENCH_lifelong.json")
+    section, msg = _suite_lifelong(args.quick, rows, args.workdir)
+    _merge_out(args.out, {"lifelong": section}, args.quick)
+    print(f"# wrote {args.out} (lifelong: {msg})", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(argv=sys.argv[1:])

@@ -20,6 +20,9 @@ Prints ``name,us_per_call,derived`` CSV rows for:
              cache (bench_serving → BENCH_serve.json, per-suite sections)
   * serve-latency / serve-quant / serve-cache  the focused serving
              sub-suites (bench_serving --suite ...), opt-in via --only
+  * lifelong the train-while-serve scenario: versioned φ hot-swap latency,
+             staleness bound, serving p99 across publishes
+             (bench_lifelong → BENCH_lifelong.json)
 
 ``python -m benchmarks.run [--only fig7,table5,sweep,scheduled,...] [--quick]``
 (``--quick`` currently applies to the sweep suites' smoke cell.)
@@ -35,6 +38,7 @@ import traceback
 from benchmarks import (
     bench_complexity,
     bench_convergence,
+    bench_lifelong,
     bench_minibatch,
     bench_scheduling,
     bench_serving,
@@ -57,6 +61,7 @@ SUITES = {
     "serve-latency": bench_serving.main_latency,
     "serve-quant": bench_serving.main_quant,
     "serve-cache": bench_serving.main_cache,
+    "lifelong": bench_lifelong.main,
 }
 
 #: focused subsets of a broader suite — opt-in via --only so default runs

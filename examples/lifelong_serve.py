@@ -1,0 +1,31 @@
+"""Lifelong train-while-serve: one FOEMTrainer publishing versioned φ
+snapshots while a ServingEngine serves topic mixtures against them —
+zero-downtime hot-swaps, every response tagged with its committed
+snapshot version (the paper's "never stops training" deployment mode).
+
+    PYTHONPATH=src python examples/lifelong_serve.py           # full demo
+    PYTHONPATH=src python examples/lifelong_serve.py --quick   # CI smoke
+"""
+import sys
+
+from repro.launch import lifelong
+
+
+def main():
+    quick = "--quick" in sys.argv[1:]
+    if quick:
+        argv = ["--quick", "--workdir", "/tmp/foem_lifelong_smoke"]
+    else:
+        argv = [
+            "--workdir", "/tmp/foem_lifelong_demo",
+            "--topics", "64", "--vocab", "4096", "--docs", "256",
+            "--minibatch", "256", "--steps", "12", "--publish-every", "3",
+            "--requests", "256", "--hot-rows", "512",
+        ]
+    report = lifelong.main(argv)
+    assert report["failed_requests"] == 0, report
+    assert not report["uncommitted_versions"], report
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,7 @@ ROOTS = (
     "repro.runtime.elastic",      # elastic fault-tolerant driver
     "repro.launch.train",
     "repro.launch.serve",
+    "repro.launch.lifelong",      # train-while-serve driver
     "repro.launch.dryrun",
     "repro.launch.roofline",
     "repro.data.uci",

@@ -10,14 +10,17 @@ from repro.core.types import (
     uniform_responsibilities,
 )
 from repro.core import em, foem, sem, scheduling, perplexity, baselines
+from repro.core.scheduling import ShiftDetector, ShiftEvent
 from repro.core.streaming import (
     CacheStats,
     HotRowCache,
     ParameterStore,
+    PhiSnapshot,
+    SnapshotPublisher,
     StoreStats,
     StreamPrefetcher,
 )
-from repro.core.trainer import FOEMTrainer
+from repro.core.trainer import FOEMTrainer, StepMetrics
 
 __all__ = [
     "GlobalStats",
@@ -37,6 +40,11 @@ __all__ = [
     "CacheStats",
     "HotRowCache",
     "ParameterStore",
+    "PhiSnapshot",
+    "ShiftDetector",
+    "ShiftEvent",
+    "SnapshotPublisher",
+    "StepMetrics",
     "StoreStats",
     "StreamPrefetcher",
     "FOEMTrainer",

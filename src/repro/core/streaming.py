@@ -59,7 +59,7 @@ import struct
 import threading
 import time
 import zlib
-from typing import Iterable, Iterator, NamedTuple, Optional, Tuple
+from typing import Iterable, Iterator, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -202,6 +202,9 @@ class ParameterStore:
         self.stats = StoreStats()
         self.write_version = 0                   # bumps on every write_rows
         self.flush_version = 0                   # bumps on every committed flush
+        # rows written since the last take_changed() — the publish delta a
+        # SnapshotPublisher turns into per-version cache epoch invalidation
+        self._changed = np.zeros((int(vocab_capacity),), bool)
         self.faults = faults                     # seeded fault-injection plan
         self.recovered_from_wal = False          # last open replayed a WAL
         self._lock = threading.RLock()
@@ -300,6 +303,7 @@ class ParameterStore:
         with self._lock:
             ids = np.asarray(word_ids, np.int64)
             rows = np.asarray(rows, self.dtype)
+            self._changed[ids] = True
             if self.buffer_rows > 0:
                 self._insert(ids, rows, dirty=True)
             else:
@@ -564,6 +568,35 @@ class ParameterStore:
                 self.stats.reset()
             return snap
 
+    def bump_pipeline_stats(
+        self, overlap_seconds: float = 0.0, prefetch_hit: bool = False
+    ) -> Tuple[int, int, int]:
+        """Credit the prefetch pipeline's counters and return the current
+        ``(disk_reads, disk_writes, buffer_hits)`` totals — one locked
+        read-modify-read so a concurrent ``stats_window(reset=True)`` can
+        neither lose the bump nor observe a torn delta (the trainer used
+        to ``+=`` these fields without the lock)."""
+        with self._lock:
+            self.stats.overlap_seconds += overlap_seconds
+            if prefetch_hit:
+                self.stats.prefetch_hits += 1
+            return (
+                self.stats.disk_reads,
+                self.stats.disk_writes,
+                self.stats.buffer_hits,
+            )
+
+    def take_changed(self, reset: bool = True) -> np.ndarray:
+        """Row ids written since the last take — the delta one φ publish
+        covers.  ``SnapshotPublisher.publish`` drains this under the store
+        lock so per-version cache invalidation drops exactly the rows that
+        changed instead of the whole cache."""
+        with self._lock:
+            ids = np.flatnonzero(self._changed)
+            if reset:
+                self._changed[ids] = False
+            return ids
+
     def dense_phi(self) -> np.ndarray:
         """Materialise the live (W, K) matrix (tests / small corpora only)."""
         self.flush()
@@ -582,6 +615,193 @@ class ParameterStore:
 
 
 # ---------------------------------------------------------------------------
+# Versioned φ snapshots — the lifelong train-while-serve publish protocol
+# ---------------------------------------------------------------------------
+
+
+def _host_quantize_rows(
+    phi: np.ndarray, phi_dtype: str
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Host-side mirror of ``kernels.theta_sweep.quantize_phi`` for snapshot
+    storage: bf16 cast (exact f32 round-trip for serving reads) or symmetric
+    per-row int8 (``scale_w = max_k |φ_w(k)| / 127``, 1.0 for all-zero rows).
+    Falls back to f32 storage when ``ml_dtypes`` is unavailable — a memory
+    regression, never a correctness one."""
+    if phi_dtype in (None, "float32"):
+        return phi, None
+    if phi_dtype == "bfloat16":
+        try:
+            import ml_dtypes
+        except ImportError:
+            return phi, None
+        return phi.astype(ml_dtypes.bfloat16), None
+    if phi_dtype == "int8":
+        amax = np.abs(phi).max(axis=-1)
+        scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+        q = np.clip(np.round(phi / scale[:, None]), -127, 127)
+        return q.astype(np.int8), scale
+    raise ValueError(
+        f"unknown phi_dtype {phi_dtype!r}; expected float32/bfloat16/int8"
+    )
+
+
+class PhiSnapshot:
+    """One immutable, crc-manifested φ version — the publish unit of the
+    lifelong train-while-serve protocol.
+
+    A snapshot owns read-only copies of the full (capacity, K) φ̂ block and
+    the (K,) topic totals as of one committed flush, stamped with the
+    publish ``version`` (the subscriber-facing epoch), the store's
+    ``write_version``/``flush_version`` it captured, and the row ids the
+    publish changed (``changed_ids`` — what per-version cache invalidation
+    drops).  ``crc`` is computed over the copied bytes at publish;
+    ``verify()`` recomputes it, so a reader holding a torn or mutated φ
+    fails loudly instead of serving garbage.
+
+    Readers *pin* a version by simply holding the reference: nothing the
+    trainer does after publish can change these arrays, so an in-flight
+    request batch is consistent end to end.  ``quantize`` memoizes the
+    bf16/int8 serving storage per dtype — built once per version at
+    hot-swap time, shared by every subsequent launch on this version.
+    """
+
+    def __init__(self, *, version: int, phi: np.ndarray, phi_k: np.ndarray,
+                 step: int, live_vocab: int, write_version: int,
+                 flush_version: int, changed_ids: np.ndarray):
+        phi = np.ascontiguousarray(phi)
+        phi.setflags(write=False)
+        phi_k = np.ascontiguousarray(phi_k)
+        phi_k.setflags(write=False)
+        changed_ids = np.ascontiguousarray(np.asarray(changed_ids, np.int64))
+        changed_ids.setflags(write=False)
+        self.version = int(version)
+        self.phi = phi                 # (capacity, K) read-only
+        self.phi_k = phi_k             # (K,) read-only
+        self.step = int(step)
+        self.live_vocab = int(live_vocab)
+        self.write_version = int(write_version)
+        self.flush_version = int(flush_version)
+        self.changed_ids = changed_ids
+        self.crc = self._crc()
+        self._quant: dict = {}
+        self._quant_lock = threading.Lock()
+
+    @property
+    def K(self) -> int:
+        return self.phi.shape[1]
+
+    def _crc(self) -> int:
+        crc = zlib.crc32(self.phi)
+        crc = zlib.crc32(self.phi_k, crc)
+        header = f"{self.version}:{self.step}:{self.write_version}".encode()
+        return zlib.crc32(header, crc)
+
+    def verify(self) -> bool:
+        """Recompute the manifest crc — a torn/mutated φ fails here."""
+        return self._crc() == self.crc
+
+    def fetch_rows(self, word_ids: np.ndarray) -> np.ndarray:
+        """Gather (len(ids), K) f32 rows — always from THIS version."""
+        return np.asarray(
+            self.phi[np.asarray(word_ids, np.int64)], np.float32
+        )
+
+    def quantize(
+        self, phi_dtype: str
+    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Memoized ``(values, scale)`` serving storage of this version
+        (thread-safe: the first caller builds, everyone else shares)."""
+        key = phi_dtype or "float32"
+        with self._quant_lock:
+            got = self._quant.get(key)
+            if got is None:
+                got = _host_quantize_rows(self.phi, key)
+                self._quant[key] = got
+            return got
+
+
+class SnapshotPublisher:
+    """Versioned φ publish/subscribe over a :class:`ParameterStore`.
+
+    ``publish()`` is the trainer-side commit: under the store lock it
+    drives the WAL-committed ``ParameterStore.flush()`` (the durable
+    commit point — a crash mid-publish recovers to a consistent version
+    by the PR-7 protocol), captures an immutable :class:`PhiSnapshot` of
+    the post-flush state, drains the store's changed-row delta, and
+    stamps the next monotonically increasing snapshot version.  The last
+    ``retain`` versions stay referenced so readers pinned to an older
+    epoch finish their in-flight batches before the arrays are dropped;
+    the staleness bound of any launch is therefore ≤ ``retain`` versions
+    by construction.
+
+    Readers never block writers: ``latest()`` is one lock-protected list
+    read, ``wait_for(version)`` parks on a condition until the trainer
+    catches up.  Generalizes the PR-1 prefetcher's ``write_version``
+    reconciliation from row-level to whole-φ epochs.
+    """
+
+    def __init__(self, store: ParameterStore, retain: int = 2):
+        if retain < 1:
+            raise ValueError("retain must be >= 1")
+        self.store = store
+        self.retain = int(retain)
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._snaps: List[PhiSnapshot] = []
+        self.version = 0                  # last published version (0 = none)
+        self.publish_log: List[dict] = []
+
+    def publish(self) -> PhiSnapshot:
+        """Commit the current φ (WAL flush) and publish it as a snapshot."""
+        t0 = time.perf_counter()
+        with self._cond:                      # serialize publishers
+            with self.store._lock:            # atomic wrt trainer writes
+                self.store.flush()            # ---- the COMMIT point ----
+                snap = PhiSnapshot(
+                    version=self.version + 1,
+                    phi=self.store._arr.copy(),
+                    phi_k=self.store.phi_k.copy(),
+                    step=self.store.step,
+                    live_vocab=self.store.live_vocab,
+                    write_version=self.store.write_version,
+                    flush_version=self.store.flush_version,
+                    changed_ids=self.store.take_changed(reset=True),
+                )
+            self.version = snap.version
+            self._snaps.append(snap)
+            del self._snaps[: -self.retain]
+            self.publish_log.append({
+                "version": snap.version,
+                "step": snap.step,
+                "changed_rows": int(len(snap.changed_ids)),
+                "seconds": time.perf_counter() - t0,
+            })
+            self._cond.notify_all()
+        return snap
+
+    def latest(self) -> Optional[PhiSnapshot]:
+        with self._lock:
+            return self._snaps[-1] if self._snaps else None
+
+    def get(self, version: int) -> Optional[PhiSnapshot]:
+        """A still-retained snapshot by version (None once aged out)."""
+        with self._lock:
+            for snap in self._snaps:
+                if snap.version == version:
+                    return snap
+            return None
+
+    def wait_for(self, version: int,
+                 timeout: Optional[float] = None) -> Optional[PhiSnapshot]:
+        """Block until ``version`` (or newer) is published; None on timeout."""
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: self.version >= version, timeout=timeout
+            )
+            return self._snaps[-1] if ok else None
+
+
+# ---------------------------------------------------------------------------
 # Serving-side hot-word row cache — read-only LRU above the store
 # ---------------------------------------------------------------------------
 
@@ -592,7 +812,8 @@ class CacheStats:
 
     hits: int = 0            # rows served from the cache
     misses: int = 0          # rows fetched through the store
-    invalidations: int = 0   # whole-cache drops on φ̂ version change
+    invalidations: int = 0   # epoch installs / whole-cache drops
+    rows_dropped: int = 0    # resident rows evicted by invalidation
 
     @property
     def hit_rate(self) -> float:
@@ -613,10 +834,17 @@ class HotRowCache:
     * misses fall through with ``store.fetch_rows(..., promote=False)`` so
       a serving miss is cached exactly once (here), never double-promoted
       into the training LRU;
-    * the whole cache invalidates when ``store.write_version`` moves — the
-      frozen-φ serving contract means version changes are rare (model
+    * unpinned caches invalidate whole when ``store.write_version`` moves —
+      the frozen-φ serving contract means version changes are rare (model
       refresh), so correctness costs one bulk drop instead of per-row
       coherence;
+    * under the lifelong publish protocol the server instead calls
+      ``install_version(v, changed_ids)`` at each hot-swap: only the rows
+      the publish actually changed are dropped (per-version *epoch*
+      invalidation), so the Zipf head survives a publish and the hit rate
+      doesn't reset to zero every cadence; fetches then pass the pinned
+      epoch + snapshot source so a straggler launch on an older version
+      bypasses the cache instead of mixing epochs;
     * hit/miss counters are windowed (``window_stats``) so the engine can
       report per-request-batch rates.
 
@@ -636,28 +864,84 @@ class HotRowCache:
         self._clock_v = np.zeros((self.capacity,), np.int64)
         self._slot_of = np.full((store.capacity,), -1, np.int64)
         self._clock = 0
+        self._pinned = False             # True once install_version() ran
         self.stats = CacheStats()        # cumulative
         self._window = CacheStats()      # since last window_stats(reset=True)
 
-    def _count(self, hits: int = 0, misses: int = 0, inval: int = 0) -> None:
+    def _count(self, hits: int = 0, misses: int = 0, inval: int = 0,
+               rows_dropped: int = 0) -> None:
         for s in (self.stats, self._window):
             s.hits += hits
             s.misses += misses
             s.invalidations += inval
+            s.rows_dropped += rows_dropped
 
     def _invalidate(self) -> None:
+        dropped = int((self._ids >= 0).sum())
         self._ids.fill(-1)
         self._slot_of.fill(-1)
-        self._count(inval=1)
+        self._count(inval=1, rows_dropped=dropped)
 
-    def fetch(self, word_ids: np.ndarray) -> np.ndarray:
-        """Gather φ̂ rows for a request batch's unique vocabulary."""
-        ids = np.asarray(word_ids, np.int64)
-        if self.capacity == 0:
-            self._count(misses=len(ids))
-            return self.store.fetch_rows(ids, promote=False)
+    def install_version(self, version: int,
+                        changed_ids: Optional[np.ndarray] = None) -> int:
+        """Pin the cache to a published φ epoch, dropping only the rows the
+        publish changed.  ``changed_ids=None`` drops everything (the
+        conservative fallback).  Returns the number of rows dropped; after
+        the first call the cache stops auto-invalidating on raw
+        ``store.write_version`` movement — the publish protocol owns epoch
+        transitions."""
         with self._lock:
-            if self.store.write_version != self._version:
+            if changed_ids is None:
+                dropped = int((self._ids >= 0).sum())
+                self._ids.fill(-1)
+                self._slot_of.fill(-1)
+            else:
+                ids = np.asarray(changed_ids, np.int64)
+                ids = ids[ids < len(self._slot_of)]
+                slots = self._slot_of[ids]
+                res = slots >= 0
+                dropped = int(res.sum())
+                if dropped:
+                    s = slots[res]
+                    self._slot_of[self._ids[s]] = -1
+                    self._ids[s] = -1
+            self._pinned = True
+            self._version = int(version)
+            self._count(inval=1, rows_dropped=dropped)
+            return dropped
+
+    def reset_stats(self) -> None:
+        """Zero both counters under the lock (prewarm discards warm-up
+        traffic without racing a concurrent launcher fetch)."""
+        with self._lock:
+            self.stats = CacheStats()
+            self._window = CacheStats()
+
+    def fetch(self, word_ids: np.ndarray, source=None,
+              version: Optional[int] = None) -> np.ndarray:
+        """Gather φ̂ rows for a request batch's unique vocabulary.
+
+        ``source`` (anything with ``fetch_rows(ids) -> (n, K) f32``, e.g. a
+        pinned snapshot view) replaces the store as the miss path;
+        ``version`` is the caller's pinned epoch — if it differs from the
+        cache's installed epoch the fetch bypasses the cache entirely (a
+        straggler on an old version must not pollute the new epoch, and
+        must not read rows cached from it)."""
+        ids = np.asarray(word_ids, np.int64)
+        if source is not None:
+            fill = source.fetch_rows
+        else:
+            def fill(miss):
+                return self.store.fetch_rows(miss, promote=False)
+        if self.capacity == 0:
+            with self._lock:
+                self._count(misses=len(ids))
+            return fill(ids)
+        with self._lock:
+            if version is not None and int(version) != self._version:
+                self._count(misses=len(ids))
+                return fill(ids)
+            if not self._pinned and self.store.write_version != self._version:
                 self._invalidate()
                 self._version = self.store.write_version
             slots = self._slot_of[ids]
@@ -670,7 +954,7 @@ class HotRowCache:
                 return out
             miss_idx = np.flatnonzero(~hit)
             miss_ids = ids[miss_idx]
-            rows = self.store.fetch_rows(miss_ids, promote=False)
+            rows = fill(miss_ids)
             if n_hit == 0:
                 out = rows
             else:

@@ -46,6 +46,10 @@ class StepMetrics:
     buffer_hits: int
     prefetch_hit: bool = False      # rows were staged before we needed them
     overlap_seconds: float = 0.0    # host I/O hidden behind device compute
+    residual_mass: float = float("nan")  # eq. 36 Σ r_w at sweep exit (foem)
+    published_version: int = -1     # φ snapshot published at this step (-1: none)
+    shift_events: Tuple = ()        # ShiftEvents the detector fired this step
+    scheduler_refresh: bool = False  # step ran with extra warm-up sweeps
 
 
 class FOEMTrainer:
@@ -61,6 +65,10 @@ class FOEMTrainer:
         algorithm: str = "foem",   # "foem" | "sem"
         prefetch_depth: int = 1,   # 0 = fully synchronous host I/O
         faults: Optional[fault_lib.FaultPlan] = None,
+        publisher=None,            # streaming.SnapshotPublisher | None
+        publish_every: int = 0,    # publish a φ snapshot every N steps
+        shift_detector=None,       # scheduling.ShiftDetector | None
+        refresh_extra_sweeps: int = 2,  # extra warm-ups on a detected shift
     ):
         if store.K != cfg.K:
             raise ValueError("store/config topic count mismatch")
@@ -71,29 +79,39 @@ class FOEMTrainer:
         self.algorithm = algorithm
         self.prefetch_depth = int(prefetch_depth)
         self.faults = faults
+        self.publisher = publisher
+        self.publish_every = int(publish_every)
+        self.shift_detector = shift_detector
+        self.refresh_extra_sweeps = int(refresh_extra_sweeps)
         # steps whose contribution a seeded "drop" fault discarded — the
         # re-issue queue a driver replays through MinibatchStream
         self.dropped_steps: List[int] = []
         self.history: List[StepMetrics] = []
         # snapshot of cumulative store I/O counters at the last step boundary
-        self._stats_base = (
-            store.stats.disk_reads, store.stats.disk_writes,
-            store.stats.buffer_hits,
-        )
+        # (read under the store lock — a concurrent stats_window(reset) from
+        # the serving side must not observe a torn triple)
+        self._stats_base = store.bump_pipeline_stats()
         # jit cache keyed by (D_s, L, W_s-padded) static shapes
         self._jit_cache: Dict = {}
 
     # ------------------------------------------------------------------
 
-    def _local_step_fn(self, algorithm: str):
-        cfg = self.cfg
+    def _local_step_fn(self, algorithm: str, cfg: Optional[LDAConfig] = None):
+        if cfg is None:
+            cfg = self.cfg
 
         if algorithm == "foem":
             def run(key, batch, phi_rows, phi_k, live_w):
                 res = foem.foem_minibatch(
                     key, batch, phi_rows, phi_k, cfg, vocab_size=live_w
                 )
-                return res.phi_wk, res.phi_k, res.diag.sweeps_run, res.diag.final_train_ppl
+                return (
+                    res.phi_wk,
+                    res.phi_k,
+                    res.diag.sweeps_run,
+                    res.diag.final_train_ppl,
+                    res.diag.residual_mass,
+                )
         elif algorithm == "sem":
             def run(key, batch, phi_rows, phi_k, live_w):
                 stats = GlobalStats(phi_wk=phi_rows, phi_k=phi_k, step=jnp.int32(0))
@@ -105,6 +123,7 @@ class FOEMTrainer:
                     new_stats.phi_k,
                     diag.sweeps_run,
                     diag.final_train_ppl,
+                    jnp.float32(float("nan")),   # no residual scheduler
                 )
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -129,11 +148,23 @@ class FOEMTrainer:
 
         return run_checked
 
-    def _get_step_fn(self, shapes):
-        key = (self.algorithm, shapes)
+    def _get_step_fn(self, shapes, refresh: bool = False):
+        key = (self.algorithm, shapes, refresh)
         fn = self._jit_cache.get(key)
         if fn is None:
-            fn = self._local_step_fn(self.algorithm)
+            cfg = self.cfg
+            if refresh:
+                # a detected topic shift grants the step extra full
+                # (unscheduled) warm-up sweeps — the Fig. 4 residual
+                # re-initialisation applied mid-stream
+                cfg = dataclasses.replace(
+                    cfg,
+                    warmup_sweeps=min(
+                        cfg.max_sweeps,
+                        cfg.warmup_sweeps + self.refresh_extra_sweeps,
+                    ),
+                )
+            fn = self._local_step_fn(self.algorithm, cfg)
             self._jit_cache[key] = fn
         return fn
 
@@ -182,18 +213,22 @@ class FOEMTrainer:
             counts=jnp.asarray(mb.counts),
         )
         self.key, sub = jax.random.split(self.key)
+        refresh = (
+            self.shift_detector.consume_refresh()
+            if self.shift_detector is not None else False
+        )
         step_fn = self._get_step_fn(
-            (batch.word_ids.shape, phi_rows.shape)
+            (batch.word_ids.shape, phi_rows.shape), refresh=refresh
         )
         live_w = max(self.store.live_vocab, self.cfg.W)
-        new_rows, new_phi_k, sweeps, ppl = step_fn(
+        new_rows, new_phi_k, sweeps, ppl, res_mass = step_fn(
             sub, batch, jnp.asarray(phi_rows), jnp.asarray(phi_k), live_w
         )
         # One transfer for rows, totals AND the diagnostic scalars: fetching
         # int(sweeps)/float(ppl) separately would stall the prefetch pipeline
         # with two extra device syncs after the row sync.
-        new_rows, new_phi_k, sweeps, ppl = jax.device_get(
-            (new_rows, new_phi_k, sweeps, ppl)
+        new_rows, new_phi_k, sweeps, ppl, res_mass = jax.device_get(
+            (new_rows, new_phi_k, sweeps, ppl, res_mass)
         )
         new_phi_k = np.asarray(new_phi_k, np.float64)  # lint: host-f64 — RAM accumulator
 
@@ -212,22 +247,43 @@ class FOEMTrainer:
         if self.checkpoint_every and self.store.step % self.checkpoint_every == 0:
             self.store.flush()
 
-        st = self.store.stats
-        st.overlap_seconds += overlap_seconds
-        if prefetch_hit:
-            st.prefetch_hits += 1
+        # --- lifelong: publish a committed φ snapshot on the cadence ---
+        published = -1
+        if (
+            self.publisher is not None
+            and self.publish_every
+            and self.store.step % self.publish_every == 0
+        ):
+            published = self.publisher.publish().version
+
+        # --- topic-shift detection over this step's stream signals ---
+        events: Tuple = ()
+        if self.shift_detector is not None:
+            events = tuple(self.shift_detector.update(
+                step=self.store.step,
+                residual_mass=float(res_mass),
+                perplexity=float(ppl),
+                phi_k=new_phi_k,
+            ))
+
         base = self._stats_base
-        self._stats_base = (st.disk_reads, st.disk_writes, st.buffer_hits)
+        self._stats_base = self.store.bump_pipeline_stats(
+            overlap_seconds=overlap_seconds, prefetch_hit=prefetch_hit
+        )
         m = StepMetrics(
             step=self.store.step,
             sweeps=int(sweeps),
             train_ppl=float(ppl),
             seconds=time.perf_counter() - t0,
-            disk_reads=st.disk_reads - base[0],
-            disk_writes=st.disk_writes - base[1],
-            buffer_hits=st.buffer_hits - base[2],
+            disk_reads=self._stats_base[0] - base[0],
+            disk_writes=self._stats_base[1] - base[1],
+            buffer_hits=self._stats_base[2] - base[2],
             prefetch_hit=prefetch_hit,
             overlap_seconds=overlap_seconds,
+            residual_mass=float(res_mass),
+            published_version=published,
+            shift_events=events,
+            scheduler_refresh=refresh,
         )
         self.history.append(m)
         return m, new_rows
@@ -245,17 +301,16 @@ class FOEMTrainer:
         """
         self.store.step += 1
         self.dropped_steps.append(self.store.step)
-        st = self.store.stats
         base = self._stats_base
-        self._stats_base = (st.disk_reads, st.disk_writes, st.buffer_hits)
+        self._stats_base = self.store.bump_pipeline_stats()
         m = StepMetrics(
             step=self.store.step,
             sweeps=0,
             train_ppl=float("nan"),
             seconds=time.perf_counter() - t0,
-            disk_reads=st.disk_reads - base[0],
-            disk_writes=st.disk_writes - base[1],
-            buffer_hits=st.buffer_hits - base[2],
+            disk_reads=self._stats_base[0] - base[0],
+            disk_writes=self._stats_base[1] - base[1],
+            buffer_hits=self._stats_base[2] - base[2],
         )
         self.history.append(m)
         return m

@@ -50,7 +50,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, LDA_ARCH
-from repro.core import HotRowCache, LDAConfig, ParameterStore
+from repro.core import (
+    HotRowCache,
+    LDAConfig,
+    ParameterStore,
+    PhiSnapshot,
+    SnapshotPublisher,
+)
 from repro.core import em
 from repro.core.perplexity import init_theta, serving_active_topics
 from repro.core.types import InferPlan, MinibatchData, uniform_responsibilities
@@ -62,6 +68,47 @@ from repro.sparse.docword import DocWordMatrix, bucketize, localize_vocab
 
 def _round_up(n: int, multiple: int) -> int:
     return ((n + multiple - 1) // multiple) * multiple
+
+
+class ThetaResult(np.ndarray):
+    """A (K,) θ mixture stamped with the committed φ snapshot version that
+    produced it (−1 when serving straight from the store, i.e. not
+    subscribed to a publisher).  Behaves exactly like the plain ndarray the
+    engine used to resolve — the version tag rides along as an attribute."""
+
+    version: int = -1
+
+    @staticmethod
+    def wrap(theta: np.ndarray, version: int) -> "ThetaResult":
+        out = np.asarray(theta).view(ThetaResult)
+        out.version = int(version)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class _ServingVersion:
+    """One pinned, immutable φ epoch the server launches against.
+
+    Holds the snapshot plus its (possibly quantized) serving storage —
+    built once at hot-swap (`TopicServer.refresh`) and shared by every
+    launch on this version.  In-flight launches keep their reference, so a
+    concurrent swap never tears a batch: rows and ``phi_k`` always come
+    from the same epoch.
+    """
+
+    snapshot: PhiSnapshot
+    version: int
+    phi_k: np.ndarray                  # (K,) float32
+    values: np.ndarray                 # (capacity, K) f32/bf16/int8 storage
+    scale: Optional[np.ndarray]        # (capacity,) f32 int8 scales, or None
+
+    def fetch_rows(self, word_ids: np.ndarray) -> np.ndarray:
+        """Dequantized f32 rows of THIS version (never the live store)."""
+        ids = np.asarray(word_ids, np.int64)
+        rows = np.asarray(self.values[ids], np.float32)
+        if self.scale is not None:
+            rows = rows * self.scale[ids][:, None]
+        return rows
 
 
 @functools.partial(
@@ -156,18 +203,90 @@ class TopicServer:
             HotRowCache(store, hot_rows) if hot_rows > 0 else None
         )
         self.last_sweeps = 0                 # fixed-point sweeps of last call
+        # --- lifelong publish/subscribe state ---
+        self._publisher: Optional[SnapshotPublisher] = None
+        self._active: Optional[_ServingVersion] = None   # pinned epoch
+        self.swap_log: List[dict] = []       # one record per hot-swap
+        self.last_version = -1               # version the last launch used
 
-    def _fetch_rows(self, uniq: np.ndarray) -> np.ndarray:
+    # -------------------------------------------------- lifelong hot-swap
+
+    def subscribe(self, publisher: SnapshotPublisher,
+                  refresh: bool = True) -> None:
+        """Serve committed φ snapshot versions from ``publisher`` instead
+        of the live store — the lifelong train-while-serve mode.  Once
+        subscribed, launches never read store rows again: a concurrent
+        trainer can write freely and the server only moves at
+        ``refresh()`` (called between launches by the engine)."""
+        self._publisher = publisher
+        if refresh:
+            self.refresh()
+
+    def refresh(self) -> bool:
+        """Hot-swap to the newest published version, if any.  Verifies the
+        snapshot's crc manifest, (re)builds the quantized serving storage,
+        installs the new epoch in the hot-row cache (dropping only the
+        rows the publish changed), and atomically replaces the pinned
+        epoch.  Zero downtime: in-flight launches finish on the old
+        version they captured.  Returns True iff a swap happened."""
+        pub = self._publisher
+        if pub is None:
+            return False
+        snap = pub.latest()
+        if snap is None:
+            return False
+        cur = self._active
+        if cur is not None and cur.version == snap.version:
+            return False
+        t0 = time.perf_counter()
+        if not snap.verify():
+            raise RuntimeError(
+                f"φ snapshot v{snap.version} fails its crc manifest — "
+                "torn or mutated publish; refusing to swap"
+            )
+        values, scale = snap.quantize(self.phi_dtype)   # re-quantize on swap
         if self.hot_cache is not None:
+            self.hot_cache.install_version(
+                snap.version, changed_ids=snap.changed_ids
+            )
+        sv = _ServingVersion(
+            snapshot=snap,
+            version=snap.version,
+            phi_k=np.asarray(snap.phi_k, np.float32),
+            values=values,
+            scale=scale,
+        )
+        self._active = sv                    # the atomic swap point
+        self.swap_log.append({
+            "version": snap.version,
+            "seconds": time.perf_counter() - t0,
+            "changed_rows": int(len(snap.changed_ids)),
+        })
+        return True
+
+    # ------------------------------------------------------------ inference
+
+    def _fetch_rows(self, uniq: np.ndarray,
+                    active: Optional[_ServingVersion] = None) -> np.ndarray:
+        if self.hot_cache is not None:
+            if active is not None:
+                return self.hot_cache.fetch(
+                    uniq, source=active, version=active.version
+                )
             return self.hot_cache.fetch(uniq)
+        if active is not None:
+            return active.fetch_rows(uniq)
         return self.store.fetch_rows(uniq)
 
     def _run(self, word_ids: np.ndarray, counts: np.ndarray,
              ev_counts: Optional[np.ndarray], key: Optional[jax.Array]):
         if key is None:
             key = jax.random.PRNGKey(0)      # deterministic by default
+        # pin ONE epoch for the whole launch: rows and phi_k below both come
+        # from `active`, so a concurrent refresh() can never tear the batch
+        active = self._active
         uniq, local = localize_vocab(word_ids)
-        rows = self._fetch_rows(uniq)                      # streamed φ̂
+        rows = self._fetch_rows(uniq, active)              # streamed φ̂
         # pad the local vocab to a bucket boundary so jit traces are reused
         # across requests (padded rows are never indexed by `local`)
         pad = _round_up(len(uniq), self.vocab_pad) - len(uniq)
@@ -181,7 +300,11 @@ class TopicServer:
                 ev_counts if ev_counts is not None
                 else np.zeros_like(counts)
             ),
-            jnp.asarray(rows), jnp.asarray(self.store.phi_k, jnp.float32),
+            jnp.asarray(rows),
+            jnp.asarray(
+                active.phi_k if active is not None else self.store.phi_k,
+                jnp.float32,
+            ),
             self.cfg, self.fit_sweeps, self.check_every, self.rel_tol,
             self.active_topics, self.use_pallas, self.interpret,
             self.phi_dtype,
@@ -197,6 +320,7 @@ class TopicServer:
         else:
             theta, sweeps, ev_ll = _infer_local(*args)
         self.last_sweeps = int(sweeps)
+        self.last_version = active.version if active is not None else -1
         return np.asarray(theta), ev_ll
 
     def infer(self, word_ids: np.ndarray, counts: np.ndarray,
@@ -400,6 +524,10 @@ class ServingEngine:
                 return
             L, reqs = item
             try:
+                # hot-swap point: the launcher is the only thread that
+                # launches, so swapping BETWEEN launches gives zero
+                # downtime — no launch ever straddles two versions
+                self.server.refresh()
                 self._launch(L, reqs)
             except BaseException as e:   # resolve, never hang the callers
                 n_err = 0
@@ -422,6 +550,8 @@ class ServingEngine:
         t0 = time.perf_counter()
         theta = self.server.infer(w, c, key=jnp.asarray(keys))
         t1 = time.perf_counter()
+        version = self.server.last_version
+        pub = self.server._publisher
         cache = self.server.hot_cache
         cw = cache.window_stats() if cache is not None else None
         rec = {
@@ -429,13 +559,25 @@ class ServingEngine:
             "launch_seconds": t1 - t0,
             "cache_hits": cw.hits if cw else 0,
             "cache_misses": cw.misses if cw else 0,
+            # staleness audit trail: the version this launch served vs the
+            # newest committed version at launch time
+            "version": version,
+            "published_version": pub.version if pub is not None else -1,
         }
-        for i, r in enumerate(reqs):
-            r.future.set_result(np.asarray(theta[i]))
-        with self._lock:
-            self._resolved += len(reqs)
-            self.batch_log.append(rec)
-            self.latencies.extend(t1 - r.t_submit for r in reqs)
+        # count resolutions one by one: if set_result ever raises mid-loop
+        # (e.g. a cancelled future), the already-resolved prefix must still
+        # reach _resolved or drain() hangs forever on the lost counts
+        ok = 0
+        try:
+            for i, r in enumerate(reqs):
+                r.future.set_result(ThetaResult.wrap(np.array(theta[i]),
+                                                     version))
+                ok += 1
+        finally:
+            with self._lock:
+                self._resolved += ok
+                self.batch_log.append(rec)
+                self.latencies.extend(t1 - r.t_submit for r in reqs)
 
     # -------------------------------------------------------------- plumbing
 
@@ -475,10 +617,11 @@ class ServingEngine:
                 keys = np.zeros((self.max_batch, 2), np.uint32)
                 srv.infer(w, c, key=jnp.asarray(keys))
                 count += 1
-        # prewarm traffic must not pollute the serving counters
+        # prewarm traffic must not pollute the serving counters (both
+        # resets take their owner's lock — a concurrent launcher fetch
+        # must never observe a half-replaced stats object)
         if srv.hot_cache is not None:
-            srv.hot_cache.window_stats(reset=True)
-            srv.hot_cache.stats = type(srv.hot_cache.stats)()
+            srv.hot_cache.reset_stats()
         srv.store.stats_window(reset=True)
         return self.compile_count()
 
@@ -504,6 +647,15 @@ class ServingEngine:
             "cache_hits": int(sum(b["cache_hits"] for b in log)),
             "cache_misses": int(sum(b["cache_misses"] for b in log)),
         }
+        # staleness bound actually observed: how many committed versions
+        # behind the newest publish each launch served (lifelong mode only)
+        stale = [
+            b["published_version"] - b["version"]
+            for b in log
+            if b.get("version", -1) >= 0 and b.get("published_version", -1) >= 0
+        ]
+        if stale:
+            out["max_staleness_versions"] = int(max(stale))
         if lats.size:
             out.update(
                 p50_ms=float(np.percentile(lats, 50) * 1e3),

@@ -15,6 +15,13 @@ from repro.sparse import MinibatchStream
 
 jax.config.update("jax_enable_x64", False)
 
+# Concurrency harness hook: the CI `concurrency` job lowers the GIL switch
+# interval (e.g. REPRO_SWITCH_INTERVAL=0.0001) so the threaded suites see
+# far more preemption points per run than the 5 ms default allows.
+_si = os.environ.get("REPRO_SWITCH_INTERVAL")
+if _si:
+    sys.setswitchinterval(float(_si))
+
 
 @pytest.fixture(scope="session")
 def tiny_corpus():

@@ -1,0 +1,366 @@
+"""Lifelong train-while-serve: the versioned φ publish/subscribe protocol.
+
+The contract under test: a `FOEMTrainer` publishing committed snapshots
+while a `ServingEngine` serves concurrently must (a) never expose a torn
+or stale-beyond-`retain` φ — every response carries a committed snapshot
+version, (b) leave training bitwise untouched by serving (snapshots are
+read-only copies), and (c) hot-swap between launches with zero downtime.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FOEMTrainer,
+    HotRowCache,
+    LDAConfig,
+    ParameterStore,
+    ShiftDetector,
+    SnapshotPublisher,
+)
+from repro.core.perplexity import split_heldout_counts
+from repro.data import synthetic_lda_corpus
+from repro.launch.serve import (
+    ServingEngine,
+    ThetaResult,
+    TopicServer,
+    TrafficGenerator,
+)
+from repro.sparse import MinibatchStream
+from repro.sparse.docword import bucketize
+
+K, W = 8, 120
+
+
+def _store(tmp_path, name="phi", buffer_rows=0, seed=7):
+    rng = np.random.default_rng(seed)
+    phi = rng.gamma(1.0, 1.0, (W, K)).astype(np.float32) * 1e4
+    store = ParameterStore(str(tmp_path / name), num_topics=K,
+                          vocab_capacity=W + 16, buffer_rows=buffer_rows)
+    store.write_rows(np.arange(W), phi)
+    store.phi_k[:] = np.asarray(phi.sum(0), np.float64)  # lint: host-f64
+    store.ensure_vocab(W - 1)
+    return store, phi
+
+
+# ---------------------------------------------------------------------------
+# PhiSnapshot / SnapshotPublisher
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_immutable_and_crc_manifested(tmp_path):
+    store, phi = _store(tmp_path)
+    pub = SnapshotPublisher(store)
+    snap = pub.publish()
+    np.testing.assert_array_equal(snap.phi[:W], phi)
+    # read-only: a reader cannot mutate a published version
+    with pytest.raises(ValueError):
+        snap.phi[0, 0] = 1.0
+    assert snap.verify()
+    # a (forced) mutation fails the crc manifest loudly
+    snap.phi.setflags(write=True)
+    snap.phi[0, 0] += 1.0
+    assert not snap.verify()
+
+
+def test_publisher_versions_retention_and_wait(tmp_path):
+    store, _ = _store(tmp_path)
+    pub = SnapshotPublisher(store, retain=2)
+    assert pub.latest() is None and pub.version == 0
+    s1, s2, s3 = pub.publish(), pub.publish(), pub.publish()
+    assert (s1.version, s2.version, s3.version) == (1, 2, 3)
+    assert pub.latest() is s3
+    assert pub.get(2) is s2
+    assert pub.get(1) is None              # aged out (retain=2)
+    assert pub.wait_for(3, timeout=0.1) is s3
+    assert pub.wait_for(99, timeout=0.05) is None
+    with pytest.raises(ValueError):
+        SnapshotPublisher(store, retain=0)
+
+
+def test_publish_changed_ids_are_the_delta(tmp_path):
+    store, _ = _store(tmp_path)
+    pub = SnapshotPublisher(store)
+    s1 = pub.publish()                      # initial load wrote all W rows
+    assert len(s1.changed_ids) == W
+    store.write_rows(np.array([3, 7]), np.full((2, K), 5.0, np.float32))
+    s2 = pub.publish()
+    np.testing.assert_array_equal(s2.changed_ids, [3, 7])
+    s3 = pub.publish()                      # nothing written since
+    assert len(s3.changed_ids) == 0
+
+
+def test_snapshot_quantize_memoized_and_accurate(tmp_path):
+    store, phi = _store(tmp_path)
+    snap = SnapshotPublisher(store).publish()
+    v32, s32 = snap.quantize("float32")
+    assert s32 is None and v32 is snap.phi
+    vi, si = snap.quantize("int8")
+    assert vi.dtype == np.int8 and si.dtype == np.float32
+    assert snap.quantize("int8")[0] is vi   # memoized per dtype
+    deq = vi.astype(np.float32) * si[:, None]
+    # symmetric per-row int8: relative row error bounded by the step size
+    amax = np.abs(snap.phi).max(axis=1)
+    err = np.abs(deq - snap.phi).max(axis=1)
+    assert (err <= amax / 127.0 * 0.5 + 1e-6).all()
+
+
+def test_snapshot_fetch_rows_pins_the_version(tmp_path):
+    """A reader holding snapshot v must keep seeing v's rows no matter
+    what the trainer writes afterwards — in-flight pinning."""
+    store, phi = _store(tmp_path)
+    pub = SnapshotPublisher(store)
+    s1 = pub.publish()
+    store.write_rows(np.arange(W), np.zeros((W, K), np.float32))
+    pub.publish()
+    np.testing.assert_array_equal(
+        s1.fetch_rows(np.array([0, 5, 9])), phi[[0, 5, 9]]
+    )
+
+
+# ---------------------------------------------------------------------------
+# TopicServer hot-swap
+# ---------------------------------------------------------------------------
+
+
+def _server(store, **kw):
+    cfg = LDAConfig(num_topics=K, vocab_size=W)
+    kw.setdefault("hot_rows", 48)
+    return TopicServer(store, cfg, fit_sweeps=8, rel_tol=0.0,
+                       check_every=8, vocab_pad=64, **kw)
+
+
+def test_server_swaps_between_versions(tmp_path):
+    store, _ = _store(tmp_path)
+    pub = SnapshotPublisher(store, retain=2)
+    pub.publish()
+    srv = _server(store)
+    srv.subscribe(pub)
+    rng = np.random.default_rng(0)
+    w = rng.integers(0, W, (2, 16)).astype(np.int32)
+    c = np.ones_like(w, np.float32)
+    th1 = srv.infer(w, c)
+    assert srv.last_version == 1
+    store.write_rows(np.array([1]), np.full((1, K), 9.0, np.float32))
+    snap2 = pub.publish()
+    old = srv._active
+    assert srv.refresh() is True
+    assert srv.refresh() is False          # idempotent at the same version
+    th2 = srv.infer(w, c)
+    assert srv.last_version == 2
+    assert len(srv.swap_log) == 2          # subscribe() + the explicit swap
+    assert srv.swap_log[-1]["version"] == 2
+    # the OLD epoch's view still serves v1 rows: in-flight launches that
+    # captured it before the swap are never torn
+    assert old.fetch_rows(np.array([1]))[0, 0] != 9.0
+    np.testing.assert_array_equal(
+        srv._active.fetch_rows(np.array([1])), snap2.phi[1][None]
+    )
+    # swapping changed φ, so θ should actually differ
+    assert not np.array_equal(th1, th2)
+
+
+def test_server_refuses_corrupt_snapshot(tmp_path):
+    store, _ = _store(tmp_path)
+    pub = SnapshotPublisher(store)
+    snap = pub.publish()
+    snap.phi.setflags(write=True)
+    snap.phi[0, 0] += 1.0                  # torn publish
+    srv = _server(store, hot_rows=0)
+    with pytest.raises(RuntimeError, match="crc"):
+        srv.subscribe(pub)
+
+
+def test_hot_cache_epoch_invalidation_drops_only_changed_rows(tmp_path):
+    store, phi = _store(tmp_path)
+    pub = SnapshotPublisher(store)
+    s1 = pub.publish()
+    cache = HotRowCache(store, capacity=32)
+    cache.install_version(s1.version, changed_ids=s1.changed_ids)
+    ids = np.array([2, 3, 4, 5], np.int64)
+    cache.fetch(ids, source=s1, version=s1.version)     # warm 4 rows
+    store.write_rows(np.array([3]), np.full((1, K), 8.0, np.float32))
+    s2 = pub.publish()
+    dropped = cache.install_version(s2.version, changed_ids=s2.changed_ids)
+    assert dropped == 1                    # only the changed resident row
+    assert cache.resident_rows() == 3      # the Zipf head survived
+    got = cache.fetch(ids, source=s2, version=s2.version)
+    np.testing.assert_array_equal(got[1], np.full(K, 8.0, np.float32))
+    np.testing.assert_array_equal(got[0], phi[2])
+    win = cache.window_stats(reset=True)
+    assert win.hits == 3 and win.misses == 5 and win.rows_dropped == 1
+    # a straggler pinned to the old version bypasses the cache entirely
+    before = cache.resident_rows()
+    old_rows = cache.fetch(ids, source=s1, version=s1.version)
+    np.testing.assert_array_equal(old_rows, s1.fetch_rows(ids))
+    assert cache.resident_rows() == before # no pollution from the old epoch
+
+
+def test_quantized_serving_version_close_to_f32(tmp_path):
+    store, _ = _store(tmp_path)
+    pub = SnapshotPublisher(store)
+    pub.publish()
+    rng = np.random.default_rng(3)
+    w = rng.integers(0, W, (2, 16)).astype(np.int32)
+    c = np.ones_like(w, np.float32)
+    srv32 = _server(store, hot_rows=0)
+    srv32.subscribe(pub)
+    srv8 = _server(store, hot_rows=0, phi_dtype="int8")
+    srv8.subscribe(pub)
+    t32 = srv32.infer(w, c)
+    t8 = srv8.infer(w, c)
+    assert np.abs(t32 - t8).max() < 0.05   # int8 row quant ≈ f32 mixtures
+
+
+# ---------------------------------------------------------------------------
+# ShiftDetector wiring
+# ---------------------------------------------------------------------------
+
+
+def test_shift_detector_fires_and_latches_refresh():
+    det = ShiftDetector(warmup=3, threshold=4.0)
+    for i in range(6):
+        det.update(step=i, residual_mass=10.0 + 0.01 * i, perplexity=500.0)
+    assert det.consume_refresh() is False
+    evs = det.update(step=6, residual_mass=400.0, perplexity=500.0)
+    assert [e.kind for e in evs] == ["residual-shift"]
+    assert det.consume_refresh() is True
+    assert det.consume_refresh() is False  # latched: cleared on read
+    evs = det.update(step=7, perplexity=5000.0)
+    assert [e.kind for e in evs] == ["ppl-shift"]
+
+
+def test_shift_detector_topic_birth_death():
+    det = ShiftDetector(topic_floor_frac=0.05)
+    det.update(step=0, phi_k=np.array([1.0, 1.0, 1.0, 1e-4]))
+    evs = det.update(step=1, phi_k=np.array([1.0, 1e-4, 1.0, 1.0]))
+    kinds = {(e.kind, e.topic) for e in evs}
+    assert kinds == {("topic-birth", 3), ("topic-death", 1)}
+    assert det.consume_refresh() is False  # birth/death alone: no refresh
+
+
+def test_trainer_publishes_on_cadence_and_reports_metrics(tmp_path):
+    corpus, _ = synthetic_lda_corpus(60, W, 4, mean_doc_len=20, seed=1)
+    cfg = LDAConfig(num_topics=K, vocab_size=W, max_sweeps=6)
+    store = ParameterStore(str(tmp_path / "t"), num_topics=K,
+                           vocab_capacity=W + 16, buffer_rows=0)
+    pub = SnapshotPublisher(store, retain=3)
+    det = ShiftDetector(warmup=2)
+    tr = FOEMTrainer(cfg, store, seed=0, publisher=pub, publish_every=2,
+                     shift_detector=det)
+    ms = tr.fit_stream(
+        iter(MinibatchStream(corpus, 30, seed=0, epochs=None)), max_steps=6
+    )
+    assert [m.published_version for m in ms] == [-1, 1, -1, 2, -1, 3]
+    assert pub.version == 3
+    assert all(np.isfinite(m.residual_mass) for m in ms)
+    assert all(isinstance(m.shift_events, tuple) for m in ms)
+    # cadence publishes are committed: each one flushed the WAL
+    for snap_ver in (2, 3):
+        snap = pub.get(snap_ver)
+        assert snap is not None and snap.verify()
+
+
+# ---------------------------------------------------------------------------
+# The end-to-end train-while-serve scenario
+# ---------------------------------------------------------------------------
+
+
+def test_train_while_serve_end_to_end(tmp_path):
+    """Trainer publishing on a cadence while the engine replays a traffic
+    trace: every response used a committed version, nothing tears, and
+    training is bitwise identical to a run without any serving."""
+    corpus, _ = synthetic_lda_corpus(200, W, 4, mean_doc_len=24, seed=2)
+    cfg = LDAConfig(num_topics=K, vocab_size=W, max_sweeps=8)
+
+    store = ParameterStore(str(tmp_path / "live"), num_topics=K,
+                           vocab_capacity=W + 16, buffer_rows=16)
+    pub = SnapshotPublisher(store, retain=2)
+    trainer = FOEMTrainer(cfg, store, seed=5, publisher=pub,
+                          publish_every=2)
+    pub.publish()                              # v1: committed before traffic
+
+    srv = _server(store)
+    srv.subscribe(pub)
+    gen = TrafficGenerator(W, doc_len=(4, 14), seed=9)
+    trace = gen.trace([(500.0, 60)])
+
+    errors = []
+
+    def train_loop():
+        try:
+            trainer.fit_stream(
+                iter(MinibatchStream(corpus, 50, seed=1, epochs=None)),
+                max_steps=8,
+            )
+        except BaseException as e:
+            errors.append(e)
+
+    results = []
+    with ServingEngine(srv, max_batch=8, max_delay_ms=2.0,
+                       max_len=16) as eng:
+        th = threading.Thread(target=train_loop)
+        th.start()
+        futs = TrafficGenerator.replay(trace, eng.submit, pace=False)
+        for f in futs:
+            results.append(f.result(timeout=60))
+        th.join()
+        srv.refresh()
+        eng.drain()
+        batch_log = list(eng.batch_log)
+    assert not errors, errors
+
+    # ≥ 3 committed publishes (initial + cadence at steps 2,4,6,8)
+    assert pub.version >= 3
+    committed = {rec["version"] for rec in pub.publish_log}
+
+    # every response is tagged with a COMMITTED snapshot version
+    assert len(results) == 60
+    for theta in results:
+        assert isinstance(theta, ThetaResult)
+        assert theta.version in committed
+        assert theta.shape == (K,)
+        assert np.isfinite(np.asarray(theta)).all()
+
+    # the launcher swaps monotonically: served versions never go backwards
+    versions = [b["version"] for b in batch_log if b.get("version", -1) > 0]
+    assert versions == sorted(versions)
+    # ... and never ahead of the committed publish sequence
+    assert all(
+        b["version"] <= b["published_version"] for b in batch_log
+        if b.get("version", -1) > 0
+    )
+
+    # retained snapshots are still consistent after all the traffic
+    for rec in pub.publish_log:
+        snap = pub.get(rec["version"])
+        if snap is not None:
+            assert snap.verify()
+
+    # serving is read-only: training with traffic is BITWISE identical to
+    # the same training run without any serving attached
+    store2 = ParameterStore(str(tmp_path / "replica"), num_topics=K,
+                            vocab_capacity=W + 16, buffer_rows=16)
+    pub2 = SnapshotPublisher(store2, retain=2)
+    trainer2 = FOEMTrainer(cfg, store2, seed=5, publisher=pub2,
+                           publish_every=2)
+    pub2.publish()
+    trainer2.fit_stream(
+        iter(MinibatchStream(corpus, 50, seed=1, epochs=None)), max_steps=8
+    )
+    np.testing.assert_array_equal(store.dense_phi(), store2.dense_phi())
+    np.testing.assert_array_equal(store.phi_k, store2.phi_k)
+
+    # held-out perplexity through the lifelong server matches a fresh
+    # train-then-serve server on the replica store (same final φ)
+    srv.refresh()
+    srv2 = _server(store2, hot_rows=0)
+    srv2.subscribe(pub2)
+    ev_rng = np.random.default_rng(11)
+    w, c = bucketize(corpus, list(range(48)), pad_multiple=16)
+    est, ev = split_heldout_counts(c, ev_rng)
+    _, p1 = srv.evaluate(w, est, ev)
+    _, p2 = srv2.evaluate(w, est, ev)
+    assert abs(p1 / p2 - 1.0) < 1e-3

@@ -225,3 +225,107 @@ def test_traffic_replay_unpaced_preserves_order():
     for (_, w, c), (w2, c2) in zip(trace, seen):
         np.testing.assert_array_equal(w, w2)
         np.testing.assert_array_equal(c, c2)
+
+
+# ---------------------------------------------------------------------------
+# Concurrency stress: racing submitters, drain/close, hot-swaps under traffic
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_submitters_racing_drain_and_close(server):
+    """N submitter threads race the collector, a drain() caller, and the
+    final close(): every admitted future resolves exactly once, none are
+    lost, and the engine's resolved counter matches its admission counter."""
+    import sys
+    import threading
+
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-4)            # force frequent thread preemption
+    try:
+        eng = ServingEngine(server, max_batch=8, bucket_multiple=8,
+                            max_delay_ms=1.0, max_len=16)
+        eng.prewarm()
+        n_threads, per_thread = 6, 25
+        futures = [[] for _ in range(n_threads)]
+        barrier = threading.Barrier(n_threads + 1)
+        rejected = []
+
+        def submitter(tid):
+            rng = np.random.default_rng(100 + tid)
+            barrier.wait()
+            for _ in range(per_thread):
+                w, c = _doc(rng, int(rng.integers(2, 14)))
+                try:
+                    futures[tid].append(eng.submit(w, c))
+                except RuntimeError:       # lost the race with close()
+                    rejected.append(tid)
+
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        barrier.wait()
+        eng.drain()                        # races the submitters mid-flight
+        for th in threads:
+            th.join()
+        eng.close()                        # must flush everything admitted
+
+        admitted = [f for fs in futures for f in fs]
+        assert len(admitted) + len(rejected) == n_threads * per_thread
+        assert not rejected                # close() came after all joins
+        for f in admitted:
+            theta = f.result(timeout=30)   # resolved — no lost futures
+            assert theta.shape == (K,)
+            assert np.isfinite(np.asarray(theta)).all()
+        # exactly-once resolution: the engine's own books must balance
+        assert eng._resolved == eng._seq == len(admitted)
+        assert sum(b["filled"] for b in eng.batch_log) == len(admitted)
+    finally:
+        sys.setswitchinterval(old_interval)
+
+
+def test_hot_swap_under_traffic_keeps_compile_count_stable(server):
+    """A writer thread publishing new φ versions while traffic flows: the
+    launcher swaps between launches, every response is tagged with a
+    committed version, and no swap triggers a recompile."""
+    import threading
+
+    from repro.core import SnapshotPublisher
+
+    store = server.store
+    pub = SnapshotPublisher(store, retain=2)
+    server.subscribe(pub)
+
+    stop = threading.Event()
+
+    def writer():
+        rng = np.random.default_rng(42)
+        while not stop.is_set():
+            ids = rng.choice(W, size=8, replace=False)
+            rows = rng.gamma(1.0, 1.0, (8, K)).astype(np.float32) * 1e4
+            store.write_rows(ids, rows)
+            pub.publish()
+            stop.wait(0.005)
+
+    with ServingEngine(server, max_batch=4, bucket_multiple=8,
+                       max_delay_ms=1.0, max_len=16) as eng:
+        compiled = eng.prewarm()
+        wt = threading.Thread(target=writer)
+        wt.start()
+        try:
+            gen = TrafficGenerator(W, doc_len=(2, 14), seed=6)
+            futs = [eng.submit(*gen.document()) for _ in range(60)]
+            results = [f.result(timeout=30) for f in futs]
+        finally:
+            stop.set()
+            wt.join()
+        eng.drain()
+        assert eng.compile_count() == compiled    # swaps change no shapes
+        committed = {rec["version"] for rec in pub.publish_log}
+        for theta in results:
+            assert theta.version in committed
+            assert np.isfinite(np.asarray(theta)).all()
+        versions = [b["version"] for b in eng.batch_log
+                    if b.get("version", -1) > 0]
+        assert versions == sorted(versions)       # monotone swap order
+    assert len(server.swap_log) >= 2              # subscribe + ≥1 live swap

@@ -271,3 +271,206 @@ def test_fetch_rows_promote_false_reads_without_caching(tmp_path):
     assert st.stats.promotions == 0 and ver == st.write_version
     np.testing.assert_array_equal(vals, st.fetch_rows(np.array([5, 6])))
     assert st.stats.promotions == 2              # default path still promotes
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: windowed-stats races, and hypothesis property tests for the
+# versioning protocol (write_version monotonicity, versioned reconciliation,
+# epoch cache coherence).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st_
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # CI installs it; local
+    HAVE_HYPOTHESIS = False                       # runs skip gracefully
+
+    def given(**_kw):                             # no-op stand-ins so the
+        return lambda f: f                        # decorated tests still
+
+    def settings(**_kw):                          # collect (and then skip)
+        return lambda f: f
+
+    class st_:                                    # noqa: N801
+        @staticmethod
+        def none():
+            return None
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+
+def test_stats_window_reset_is_race_free(tmp_path):
+    """Regression for the windowed-stats race: a fetcher thread hammering
+    fetch_rows while the main thread drains stats_window(reset=True) must
+    conserve every access — the drained windows plus the final window sum
+    to exactly one count per fetched row (reads + hits, no loss, no
+    double-count from the read-modify-reset)."""
+    import sys
+    import threading
+
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-4)
+    try:
+        stc = _mk(tmp_path, buffer_rows=8)
+        n_fetches, batch = 400, 5
+        done = threading.Event()
+
+        def fetcher():
+            rng = np.random.default_rng(0)
+            for _ in range(n_fetches):
+                stc.fetch_rows(rng.integers(0, 50, batch).astype(np.int64))
+            done.set()
+
+        th = threading.Thread(target=fetcher)
+        reads = hits = 0
+        th.start()
+        while not done.is_set():
+            win = stc.stats_window(reset=True)
+            reads += win.disk_reads
+            hits += win.buffer_hits
+        th.join()
+        win = stc.stats_window(reset=True)
+        reads += win.disk_reads
+        hits += win.buffer_hits
+        assert reads + hits == n_fetches * batch
+    finally:
+        sys.setswitchinterval(old_interval)
+
+
+def test_hot_row_cache_window_stats_race_free(tmp_path):
+    """Same conservation law for HotRowCache's windowed CacheStats."""
+    import sys
+    import threading
+
+    from repro.core import HotRowCache
+
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-4)
+    try:
+        stc = _mk(tmp_path, buffer_rows=0)
+        stc.write_rows(np.arange(50), np.ones((50, 8), np.float32))
+        cache = HotRowCache(stc, capacity=16)
+        n_fetches, batch = 400, 5
+        done = threading.Event()
+
+        def fetcher():
+            rng = np.random.default_rng(1)
+            for _ in range(n_fetches):
+                cache.fetch(rng.integers(0, 50, batch).astype(np.int64))
+            done.set()
+
+        th = threading.Thread(target=fetcher)
+        total = 0
+        th.start()
+        while not done.is_set():
+            win = cache.window_stats(reset=True)
+            total += win.hits + win.misses
+        th.join()
+        win = cache.window_stats(reset=True)
+        total += win.hits + win.misses
+        assert total == n_fetches * batch
+        cache.reset_stats()
+        assert cache.stats.hits == 0 and cache.stats.misses == 0
+    finally:
+        sys.setswitchinterval(old_interval)
+
+
+if HAVE_HYPOTHESIS:
+    _ids_st = st_.lists(st_.integers(0, 39), min_size=1, max_size=8,
+                        unique=True)
+    _ops_st = st_.lists(
+        st_.tuples(st_.booleans(), _ids_st), min_size=1, max_size=24)
+    _rounds_st = st_.lists(_ids_st, min_size=1, max_size=10)
+
+
+@needs_hypothesis
+@settings(max_examples=30, deadline=None)
+@given(ops=_ops_st if HAVE_HYPOTHESIS else st_.none())
+def test_write_version_monotone_and_counts_writes(ops):
+    """write_version is monotone nondecreasing, bumps on every write_rows
+    (exactly once per call), and never moves on a read."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        stc = ParameterStore(os.path.join(d, "p"), num_topics=4,
+                             vocab_capacity=40, buffer_rows=4)
+        last = stc.write_version
+        writes = 0
+        for is_write, ids in ops:
+            a = np.asarray(ids, np.int64)
+            if is_write:
+                v = stc.write_rows(a, np.ones((len(a), 4), np.float32))
+                writes += 1
+                assert v > last
+            else:
+                _, v = stc.fetch_rows_versioned(a)
+                assert v == last
+            assert v >= last
+            last = v
+        assert stc.write_version == writes
+
+
+@needs_hypothesis
+@settings(max_examples=30, deadline=None)
+@given(ops=_ops_st if HAVE_HYPOTHESIS else st_.none())
+def test_versioned_fetch_reconciles_to_fresh_state(ops):
+    """The reconciliation protocol: take a versioned fetch, apply every
+    LATER write on top of it, and the patched view must equal a fresh
+    fetch — the version totally orders writes against reads."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        stc = ParameterStore(os.path.join(d, "p"), num_topics=4,
+                             vocab_capacity=40, buffer_rows=4)
+        base_ids = np.arange(40, dtype=np.int64)
+        snap, v0 = stc.fetch_rows_versioned(base_ids)
+        view = snap.copy()
+        for i, (is_write, ids) in enumerate(ops):
+            a = np.asarray(ids, np.int64)
+            if is_write:
+                rows = np.full((len(a), 4), float(i + 1), np.float32)
+                v = stc.write_rows(a, rows)
+                assert v > v0          # later write: must patch the view
+                view[a] = rows
+            else:
+                stc.fetch_rows(a)      # reads don't perturb the protocol
+        np.testing.assert_array_equal(view, stc.fetch_rows(base_ids))
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(rounds=_rounds_st if HAVE_HYPOTHESIS else st_.none())
+def test_epoch_cache_never_serves_stale_rows(rounds):
+    """Per-version epoch invalidation: interleave writes, publishes and
+    cached fetches arbitrarily — a version-pinned fetch through the cache
+    must ALWAYS equal the snapshot's own rows, never a stale resident."""
+    import tempfile
+
+    from repro.core import HotRowCache, SnapshotPublisher
+
+    with tempfile.TemporaryDirectory() as d:
+        stc = ParameterStore(os.path.join(d, "p"), num_topics=4,
+                             vocab_capacity=40, buffer_rows=0)
+        stc.write_rows(np.arange(40),
+                       np.zeros((40, 4), np.float32))
+        pub = SnapshotPublisher(stc, retain=2)
+        snap = pub.publish()
+        cache = HotRowCache(stc, capacity=8)
+        cache.install_version(snap.version, changed_ids=snap.changed_ids)
+        for i, ids in enumerate(rounds):
+            a = np.asarray(ids, np.int64)
+            if i % 2 == 1:             # odd rounds mutate + republish
+                stc.write_rows(a, np.full((len(a), 4), float(i),
+                                          np.float32))
+                snap = pub.publish()
+                cache.install_version(snap.version,
+                                      changed_ids=snap.changed_ids)
+            got = cache.fetch(a, source=snap, version=snap.version)
+            np.testing.assert_array_equal(got, snap.fetch_rows(a))
+            # and the cache's residents agree with the snapshot wholesale
+            resident = np.arange(40, dtype=np.int64)
+            np.testing.assert_array_equal(
+                cache.fetch(resident, source=snap, version=snap.version),
+                snap.fetch_rows(resident))
