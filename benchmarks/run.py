@@ -18,8 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows for:
              serving suites — fused-engine comparison, continuous-batching
              latency/QPS SLO cells, bf16/int8 quantized-φ drift, hot-row
              cache (bench_serving → BENCH_serve.json, per-suite sections)
-  * serve-latency / serve-quant / serve-cache  the focused serving
-             sub-suites (bench_serving --suite ...), opt-in via --only
+  * serve-latency / serve-quant / serve-cache / serve-replicas  the
+             focused serving sub-suites (bench_serving --suite ...),
+             opt-in via --only; serve-replicas pins sustained QPS vs
+             N ∈ {1,2,4} process replicas behind one admission router
   * lifelong the train-while-serve scenario: versioned φ hot-swap latency,
              staleness bound, serving p99 across publishes
              (bench_lifelong → BENCH_lifelong.json)
@@ -61,13 +63,14 @@ SUITES = {
     "serve-latency": bench_serving.main_latency,
     "serve-quant": bench_serving.main_quant,
     "serve-cache": bench_serving.main_cache,
+    "serve-replicas": bench_serving.main_replicas,
     "lifelong": bench_lifelong.main,
 }
 
 #: focused subsets of a broader suite — opt-in via --only so default runs
 #: don't measure the same cell twice
-SUBSET_SUITES = ("scheduled", "sharded",
-                 "serve-latency", "serve-quant", "serve-cache")
+SUBSET_SUITES = ("scheduled", "sharded", "serve-latency", "serve-quant",
+                 "serve-cache", "serve-replicas")
 
 
 def main() -> None:

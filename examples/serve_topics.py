@@ -8,6 +8,9 @@ and bucketized over the request stream (``TopicServer.infer_stream``).
 
     PYTHONPATH=src python examples/serve_topics.py           # full demo
     PYTHONPATH=src python examples/serve_topics.py --quick   # CI smoke
+
+    # multi-replica pool: Zipf/Poisson traffic over N worker processes
+    PYTHONPATH=src python examples/serve_topics.py --replicas 2
 """
 import os
 import sys
@@ -16,7 +19,11 @@ from repro.launch import serve, train
 
 
 def main():
-    quick = "--quick" in sys.argv[1:]
+    argv = sys.argv[1:]
+    quick = "--quick" in argv
+    replicas = 0
+    if "--replicas" in argv:
+        replicas = int(argv[argv.index("--replicas") + 1])
     if quick:
         workdir = "/tmp/foem_serve_smoke"
         topics, vocab = 16, 400
@@ -30,6 +37,11 @@ def main():
         train_args = ["--docs", "1500", "--minibatch", "256", "--steps",
                       "10", "--active-topics", "8", "--log-every", "5"]
         serve_args = ["--requests", "512", "--batch", "64"]
+    if replicas > 1:
+        # pool serving is traffic-driven: replay a Zipf/Poisson trace
+        # through the admission router in front of N worker processes
+        serve_args += ["--traffic", "--replicas", str(replicas),
+                       "--qps", "200"]
     common = ["--arch", "foem-lda", "--workdir", workdir,
               "--topics", str(topics), "--vocab", str(vocab)]
     if not os.path.exists(os.path.join(workdir, "store.json")):

@@ -43,6 +43,8 @@ ROOTS = (
     "repro.runtime.elastic",      # elastic fault-tolerant driver
     "repro.launch.train",
     "repro.launch.serve",
+    "repro.launch.replica",       # replica pool (lazy-loaded by serve
+                                  # --replicas to avoid an import cycle)
     "repro.launch.lifelong",      # train-while-serve driver
     "repro.launch.dryrun",
     "repro.launch.roofline",

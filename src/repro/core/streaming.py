@@ -176,6 +176,14 @@ class ParameterStore:
                      file is extended in chunks when exceeded).
     buffer_rows:     W* — max rows resident in the hot buffer (0 = unbuffered,
                      every access hits the backing store: Table 5's 0.0GB row).
+    readonly:        attach to an existing store without taking ownership:
+                     the memmap opens mode "r", recovery never rewrites disk
+                     state (a committed-but-unapplied WAL is overlaid on
+                     reads in memory instead of replayed), and every mutator
+                     raises.  This is the multi-process serving contract —
+                     a :class:`~repro.launch.replica.ReplicaPool` worker in
+                     another process must never race the owning trainer's
+                     WAL commit, so it attaches instead of opening.
     """
 
     MANIFEST = "store.json"
@@ -190,6 +198,7 @@ class ParameterStore:
         buffer_rows: int = 0,
         dtype=np.float32,
         faults: Optional[fault_lib.FaultPlan] = None,
+        readonly: bool = False,
     ):
         self.path = path
         self.K = int(num_topics)
@@ -207,6 +216,10 @@ class ParameterStore:
         self._changed = np.zeros((int(vocab_capacity),), bool)
         self.faults = faults                     # seeded fault-injection plan
         self.recovered_from_wal = False          # last open replayed a WAL
+        self.readonly = bool(readonly)
+        # readonly attach: committed-but-unapplied WAL rows, overlaid on
+        # fetches in memory (sorted ids + rows) — disk is never touched
+        self._overlay: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._lock = threading.RLock()
         # ---- array-backed LRU (empty slots carry id == -1) ----
         W_star = self.buffer_rows
@@ -216,8 +229,21 @@ class ParameterStore:
         self._buf_dirty = np.zeros((W_star,), bool)
         self._slot_of = np.full((self.capacity,), -1, np.int64)
         self._clock = 0
-        os.makedirs(path, exist_ok=True)
         backing = os.path.join(path, self.BACKING)
+        if self.readonly:
+            if not os.path.exists(backing):
+                raise FileNotFoundError(
+                    f"no store to attach to under {path} (missing "
+                    f"{self.BACKING}); readonly attach never creates one"
+                )
+            self._mm = np.memmap(
+                backing, dtype=self.dtype, mode="r",
+                shape=(self.capacity, self.K),
+            )
+            self._arr = np.asarray(self._mm)
+            self._attach()
+            return
+        os.makedirs(path, exist_ok=True)
         mode = "r+" if os.path.exists(backing) else "w+"
         self._mm = np.memmap(
             backing, dtype=self.dtype, mode=mode, shape=(self.capacity, self.K)
@@ -228,6 +254,63 @@ class ParameterStore:
         self._arr = np.asarray(self._mm)
         if mode == "r+":
             self._recover()
+
+    # -------------------------------------------------- readonly attach
+
+    @classmethod
+    def attach(cls, path: str, num_topics: int, vocab_capacity: int,
+               buffer_rows: int = 0, dtype=np.float32) -> "ParameterStore":
+        """Open an existing store read-only, without taking ownership.
+
+        The serving-process entry point: no recovery writes, no WAL
+        replay (a committed WAL is overlaid on reads in memory), and all
+        mutators raise.  Concurrent with the owner's flushes this reads a
+        consistent manifest version; under the replica pool the swap
+        payloads carry the authoritative φ bytes anyway.
+        """
+        return cls(path, num_topics, vocab_capacity,
+                   buffer_rows=buffer_rows, dtype=dtype, readonly=True)
+
+    def _attach(self) -> None:
+        """Readonly recovery scan: load the manifest, overlay (in memory)
+        any committed-but-unapplied WAL — never write a byte to disk."""
+        wal = self._wal_path()
+        if os.path.exists(wal):
+            rec = _read_record(wal)
+            if rec is not None:          # committed: newer than the memmap
+                arrays, meta = rec
+                ids = arrays["ids"].astype(np.int64)
+                order = np.argsort(ids)
+                self._overlay = (
+                    ids[order], arrays["rows"].astype(self.dtype)[order]
+                )
+                self._apply_manifest(
+                    {**meta, "phi_k": arrays["phi_k"].tolist()}
+                )
+                self.recovered_from_wal = True
+                return
+        self._load_manifest()
+
+    def _check_writable(self) -> None:
+        if self.readonly:
+            raise PermissionError(
+                "ParameterStore opened readonly (attach): serving "
+                "processes never write through the store — swaps arrive "
+                "via the snapshot publish protocol"
+            )
+
+    def _read_backing(self, ids: np.ndarray) -> np.ndarray:
+        """Backing-store gather, patched with the readonly WAL overlay."""
+        rows = self._arr[ids]
+        if self._overlay is not None:
+            o_ids, o_rows = self._overlay
+            pos = np.searchsorted(o_ids, ids)
+            pos = np.minimum(pos, len(o_ids) - 1)
+            hit = o_ids[pos] == ids
+            if hit.any():
+                rows = np.array(rows)          # un-alias the memmap view
+                rows[hit] = o_rows[pos[hit]]
+        return rows
 
     # ------------------------------------------------------------------ I/O
 
@@ -263,7 +346,7 @@ class ParameterStore:
                     "(static allocation for XLA)"
                 )
             if self.buffer_rows == 0:
-                out = self._arr[ids]
+                out = self._read_backing(ids)
                 self.stats.disk_reads += len(ids)
                 return out, self.write_version
             slots = self._slot_of[ids]
@@ -275,7 +358,7 @@ class ParameterStore:
                 self.stats.buffer_hits += n_hit
                 return out, self.write_version
             if n_hit == 0:                        # cold stream fast path
-                out = self._arr[ids]
+                out = self._read_backing(ids)
                 self.stats.disk_reads += len(ids)
                 if promote:
                     self.stats.promotions += len(ids)
@@ -289,7 +372,7 @@ class ParameterStore:
             self._touch(hit_slots)
             self.stats.buffer_hits += n_hit
             miss_ids = ids[miss_idx]
-            rows = self._arr[miss_ids]
+            rows = self._read_backing(miss_ids)
             out[miss_idx] = rows
             self.stats.disk_reads += len(miss_ids)
             if promote:
@@ -300,6 +383,7 @@ class ParameterStore:
     def write_rows(self, word_ids: np.ndarray, rows: np.ndarray) -> int:
         """Write updated rows back (coalesced) — buffered words stay dirty
         until eviction.  Returns the new ``write_version``."""
+        self._check_writable()
         with self._lock:
             ids = np.asarray(word_ids, np.int64)
             rows = np.asarray(rows, self.dtype)
@@ -433,6 +517,7 @@ class ParameterStore:
         pre-manifest) — the two sides of the commit the chaos tests kill
         at.
         """
+        self._check_writable()
         with self._lock:
             dirty_slots = np.flatnonzero(self._buf_dirty)
             d_ids = self._buf_ids[dirty_slots]
@@ -599,6 +684,9 @@ class ParameterStore:
 
     def dense_phi(self) -> np.ndarray:
         """Materialise the live (W, K) matrix (tests / small corpora only)."""
+        if self.readonly:
+            n = max(self.live_vocab, 1)
+            return np.asarray(self._read_backing(np.arange(n)))
         self.flush()
         return np.asarray(self._mm[: max(self.live_vocab, 1)])
 

@@ -386,41 +386,58 @@ class _Request:
     t_submit: float
 
 
-class ServingEngine:
-    """Continuous batching over :class:`TopicServer`'s fixed jit shapes.
+def pad_batch(L: int, reqs: Sequence[_Request], max_batch: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a flushed bucket to its ``(max_batch, L)`` jit shape.
 
-    Two stages, decoupled by a bounded launch queue so admission never
-    blocks on compute:
+    Tail slots are empty documents (exactly like ``infer_stream``'s tail
+    padding).  The padded arrays — not the request list — are the unit of
+    replica dispatch: re-issuing the identical payload after a worker
+    loss reproduces the launch bitwise.  Under ``rel_tol > 0`` the
+    convergence stop is batch-global, so re-issue parity REQUIRES
+    resending the same padded batch, never repacking the survivors.
+    """
+    w = np.zeros((max_batch, L), np.int32)
+    c = np.zeros((max_batch, L), np.float32)
+    keys = np.zeros((max_batch, 2), np.uint32)
+    for i, r in enumerate(reqs):
+        w[i, : len(r.word_ids)] = r.word_ids
+        c[i, : len(r.counts)] = r.counts
+        keys[i] = r.key
+    return w, c, keys
+
+
+class AdmissionRouter:
+    """Deadline-aware admission front: in-flight slots, collector thread
+    and a bounded flush queue, decoupled from whatever runs the batches.
+
+    PR 8 built this machinery inside :class:`ServingEngine`; it now
+    stands alone so the multi-replica pool
+    (:class:`repro.launch.replica.ReplicaPool`) can put the *identical*
+    admission semantics in front of N workers:
 
     * ``submit`` (caller thread) appends the request to the in-flight
-      slots of its document-length bucket — O(1) under a lock — and
-      returns a :class:`~concurrent.futures.Future`;
-    * the *collector* thread flushes a bucket into the launch queue when
-      it fills its ``max_batch`` slots, or when its **oldest** request has
+      slots of its document-length bucket — O(1) under a lock — stamps a
+      per-document PRNG key, and returns a Future;
+    * the *collector* thread flushes a bucket into the bounded queue when
+      it fills ``max_batch`` slots, or when its **oldest** request has
       waited ``max_delay_ms`` (deadline-aware: a straggling slot never
       holds a full bucket hostage, a lone request never waits more than
       the deadline);
-    * the *launcher* thread pads each flushed batch to the
-      (``max_batch``, L-bucket) jit shape (tail slots are empty
-      documents, exactly like ``infer_stream``'s tail padding), runs one
-      ``_infer_local`` launch and resolves the futures.
+    * the single consumer (the engine's launcher thread, or the pool's
+      dispatcher) pulls ``(L, reqs)`` items with :meth:`next_batch` and
+      reports outcomes through :meth:`resolve_batch` /
+      :meth:`fail_batch`, which keep the resolved/latency/batch
+      accounting that :meth:`drain` and :meth:`metrics` read.
 
-    Every request gets a *per-document* PRNG key, so a document's θ is
-    independent of which slot/batch the collector packed it into —
-    continuous batching is semantically invisible (bitwise, under
-    ``rel_tol=0``).  ``prewarm()`` compiles the whole (L-bucket ×
-    W_s-bucket) trace grid up front; ``compile_count()`` exposes the
-    jit-cache size so benches can assert no recompilation under traffic.
+    ``close()`` is idempotent and safe under concurrent callers: every
+    caller blocks until the collector is joined, so nobody can observe a
+    half-stopped router.
     """
 
-    def __init__(self, server: TopicServer, *,
-                 max_batch: int = 64,
-                 bucket_multiple: int = 16,
-                 max_delay_ms: float = 5.0,
-                 max_len: int = 256,
-                 queue_depth: int = 4,
-                 seed: int = 0):
-        self.server = server
+    def __init__(self, *, max_batch: int = 64, bucket_multiple: int = 16,
+                 max_delay_ms: float = 5.0, max_len: int = 256,
+                 queue_depth: int = 4, seed: int = 0):
         self.max_batch = int(max_batch)
         self.bucket_multiple = int(bucket_multiple)
         self.max_delay = float(max_delay_ms) / 1e3
@@ -439,18 +456,15 @@ class ServingEngine:
         self._collector = threading.Thread(
             target=self._collect_loop, name="serve-collector", daemon=True
         )
-        self._launcher = threading.Thread(
-            target=self._launch_loop, name="serve-launcher", daemon=True
-        )
         self._collector.start()
-        self._launcher.start()
 
     # ------------------------------------------------------------- admission
 
     def _bucket(self, n: int) -> int:
         return _round_up(max(n, 1), self.bucket_multiple)
 
-    def submit(self, word_ids: np.ndarray, counts: Optional[np.ndarray] = None,
+    def submit(self, word_ids: np.ndarray,
+               counts: Optional[np.ndarray] = None,
                key: Optional[np.ndarray] = None) -> Future:
         """Admit one document; resolves to its (K,) normalized θ (eq. 9)."""
         w = np.asarray(word_ids, np.int32).ravel()
@@ -464,7 +478,7 @@ class ServingEngine:
         fut: Future = Future()
         with self._cond:
             if self._stop:
-                raise RuntimeError("ServingEngine is closed")
+                raise RuntimeError("admission router is closed")
             seq = self._seq
             self._seq += 1
             if key is None:
@@ -515,63 +529,28 @@ class ServingEngine:
                 self._queue.put(None)
                 return
 
-    # -------------------------------------------------------------- launcher
+    # -------------------------------------------------------------- consumer
 
-    def _launch_loop(self) -> None:
-        while True:
-            item = self._queue.get()
-            if item is None:
-                return
-            L, reqs = item
-            try:
-                # hot-swap point: the launcher is the only thread that
-                # launches, so swapping BETWEEN launches gives zero
-                # downtime — no launch ever straddles two versions
-                self.server.refresh()
-                self._launch(L, reqs)
-            except BaseException as e:   # resolve, never hang the callers
-                n_err = 0
-                for r in reqs:
-                    if not r.future.done():
-                        r.future.set_exception(e)
-                        n_err += 1
-                with self._lock:
-                    self._resolved += n_err
+    def next_batch(self) -> Optional[Tuple[int, List[_Request]]]:
+        """Block for the next flushed ``(L, reqs)`` bucket.  ``None`` is
+        the shutdown sentinel: admission stopped and every pending slot
+        has been flushed ahead of it."""
+        return self._queue.get()
 
-    def _launch(self, L: int, reqs: List[_Request]) -> None:
-        D = self.max_batch
-        w = np.zeros((D, L), np.int32)
-        c = np.zeros((D, L), np.float32)
-        keys = np.zeros((D, 2), np.uint32)
-        for i, r in enumerate(reqs):
-            w[i, : len(r.word_ids)] = r.word_ids
-            c[i, : len(r.counts)] = r.counts
-            keys[i] = r.key
-        t0 = time.perf_counter()
-        theta = self.server.infer(w, c, key=jnp.asarray(keys))
+    def resolve_batch(self, reqs: Sequence[_Request], thetas,
+                      version: int, rec: dict) -> None:
+        """Resolve a launched bucket and commit its accounting (batch
+        record + per-request latencies).  Resolutions are counted one by
+        one: if ``set_result`` ever raises mid-loop (e.g. a cancelled
+        future), the already-resolved prefix must still reach
+        ``_resolved`` or ``drain()`` hangs forever on the lost counts."""
         t1 = time.perf_counter()
-        version = self.server.last_version
-        pub = self.server._publisher
-        cache = self.server.hot_cache
-        cw = cache.window_stats() if cache is not None else None
-        rec = {
-            "L": L, "filled": len(reqs), "capacity": D,
-            "launch_seconds": t1 - t0,
-            "cache_hits": cw.hits if cw else 0,
-            "cache_misses": cw.misses if cw else 0,
-            # staleness audit trail: the version this launch served vs the
-            # newest committed version at launch time
-            "version": version,
-            "published_version": pub.version if pub is not None else -1,
-        }
-        # count resolutions one by one: if set_result ever raises mid-loop
-        # (e.g. a cancelled future), the already-resolved prefix must still
-        # reach _resolved or drain() hangs forever on the lost counts
         ok = 0
         try:
             for i, r in enumerate(reqs):
-                r.future.set_result(ThetaResult.wrap(np.array(theta[i]),
-                                                     version))
+                r.future.set_result(
+                    ThetaResult.wrap(np.array(thetas[i]), version)
+                )
                 ok += 1
         finally:
             with self._lock:
@@ -579,56 +558,18 @@ class ServingEngine:
                 self.batch_log.append(rec)
                 self.latencies.extend(t1 - r.t_submit for r in reqs)
 
-    # -------------------------------------------------------------- plumbing
+    def fail_batch(self, reqs: Sequence[_Request],
+                   exc: BaseException) -> None:
+        """Resolve a failed bucket with ``exc`` — never hang the callers."""
+        n_err = 0
+        for r in reqs:
+            if not r.future.done():
+                r.future.set_exception(exc)
+                n_err += 1
+        with self._lock:
+            self._resolved += n_err
 
-    def prewarm(self, lengths: Optional[Sequence[int]] = None,
-                vocab_sizes: Optional[Sequence[int]] = None) -> int:
-        """Compile the (L-bucket × W_s-bucket) trace grid up front.
-
-        Defaults cover every shape the admission path can produce: L
-        buckets are the ``bucket_multiple`` grid up to ``max_len``; W_s
-        buckets are the ``vocab_pad`` grid up to the largest unique vocab
-        a full batch can touch (min(W, max_batch·L)).  Returns the jit
-        cache size afterwards — under subsequent traffic
-        ``compile_count()`` must not move past it.
-        """
-        srv = self.server
-        if lengths is None:
-            lengths = range(self.bucket_multiple, self.max_len + 1,
-                            self.bucket_multiple)
-        count = 0
-        for L in lengths:
-            Lb = self._bucket(L)
-            if Lb != L:
-                continue
-            vs = vocab_sizes
-            if vs is None:
-                reach = min(srv.cfg.W, self.max_batch * Lb)
-                vs = range(srv.vocab_pad,
-                           _round_up(reach, srv.vocab_pad) + 1,
-                           srv.vocab_pad)
-            for ws in vs:
-                n = min(ws, srv.cfg.W, self.max_batch * Lb)
-                if _round_up(n, srv.vocab_pad) != ws:
-                    continue          # bucket not reachable at this (D, L)
-                w = (np.arange(self.max_batch * Lb, dtype=np.int64) % n)
-                w = w.reshape(self.max_batch, Lb).astype(np.int32)
-                c = np.ones_like(w, np.float32)
-                keys = np.zeros((self.max_batch, 2), np.uint32)
-                srv.infer(w, c, key=jnp.asarray(keys))
-                count += 1
-        # prewarm traffic must not pollute the serving counters (both
-        # resets take their owner's lock — a concurrent launcher fetch
-        # must never observe a half-replaced stats object)
-        if srv.hot_cache is not None:
-            srv.hot_cache.reset_stats()
-        srv.store.stats_window(reset=True)
-        return self.compile_count()
-
-    @staticmethod
-    def compile_count() -> int:
-        """Size of ``_infer_local``'s jit cache — the recompilation probe."""
-        return _infer_local._cache_size()
+    # ------------------------------------------------------------ accounting
 
     def metrics(self, reset: bool = False) -> dict:
         """Latency/throughput/cache summary over the recorded window."""
@@ -675,13 +616,214 @@ class ServingEngine:
             time.sleep(0.001)
 
     def close(self) -> None:
-        """Flush remaining slots, stop both threads (idempotent)."""
+        """Stop admission, flush the remaining slots, join the collector.
+
+        Idempotent AND safe under concurrent callers: every caller blocks
+        on the join (``Thread.join`` is multi-caller safe), so no caller
+        returns while the collector is still flushing.
+        """
         with self._cond:
-            if self._stop:
-                return
             self._stop = True
-            self._cond.notify()
+            self._cond.notify_all()
         self._collector.join()
+
+
+def prewarm_server(srv: TopicServer, *, max_batch: int,
+                   bucket_multiple: int, max_len: int,
+                   lengths: Optional[Sequence[int]] = None,
+                   vocab_sizes: Optional[Sequence[int]] = None) -> int:
+    """Compile one server's (L-bucket × W_s-bucket) trace grid.
+
+    Shared by ``ServingEngine.prewarm`` and each pool replica — a worker
+    process owns its own jit cache, so the replica pool prewarms per
+    worker with exactly these launches.  Returns the launch count and
+    resets the cache/store stat windows so warm-up traffic doesn't
+    pollute the serving counters (both resets take their owner's lock —
+    a concurrent launcher fetch never observes a half-replaced stats
+    object).
+    """
+    if lengths is None:
+        lengths = range(bucket_multiple, max_len + 1, bucket_multiple)
+    count = 0
+    for L in lengths:
+        Lb = _round_up(max(L, 1), bucket_multiple)
+        if Lb != L:
+            continue
+        vs = vocab_sizes
+        if vs is None:
+            reach = min(srv.cfg.W, max_batch * Lb)
+            vs = range(srv.vocab_pad,
+                       _round_up(reach, srv.vocab_pad) + 1,
+                       srv.vocab_pad)
+        for ws in vs:
+            n = min(ws, srv.cfg.W, max_batch * Lb)
+            if _round_up(n, srv.vocab_pad) != ws:
+                continue              # bucket not reachable at this (D, L)
+            w = (np.arange(max_batch * Lb, dtype=np.int64) % n)
+            w = w.reshape(max_batch, Lb).astype(np.int32)
+            c = np.ones_like(w, np.float32)
+            keys = np.zeros((max_batch, 2), np.uint32)
+            srv.infer(w, c, key=jnp.asarray(keys))
+            count += 1
+    if srv.hot_cache is not None:
+        srv.hot_cache.reset_stats()
+    srv.store.stats_window(reset=True)
+    return count
+
+
+class ServingEngine:
+    """Continuous batching over :class:`TopicServer`'s fixed jit shapes.
+
+    Admission (in-flight slots, deadline-aware collector, bounded launch
+    queue, per-document PRNG keys) is an :class:`AdmissionRouter`; the
+    engine adds the single *launcher* thread that consumes flushed
+    buckets, pads each to its (``max_batch``, L-bucket) jit shape
+    (:func:`pad_batch`) and runs one ``_infer_local`` launch per bucket.
+    Admission never blocks on compute: the bounded queue is the only
+    backpressure.
+
+    Every request gets a *per-document* PRNG key, so a document's θ is
+    independent of which slot/batch the collector packed it into —
+    continuous batching is semantically invisible (bitwise, under
+    ``rel_tol=0``).  ``prewarm()`` compiles the whole (L-bucket ×
+    W_s-bucket) trace grid up front; ``compile_count()`` exposes the
+    jit-cache size so benches can assert no recompilation under traffic.
+    """
+
+    def __init__(self, server: TopicServer, *,
+                 max_batch: int = 64,
+                 bucket_multiple: int = 16,
+                 max_delay_ms: float = 5.0,
+                 max_len: int = 256,
+                 queue_depth: int = 4,
+                 seed: int = 0):
+        self.server = server
+        self.router = AdmissionRouter(
+            max_batch=max_batch, bucket_multiple=bucket_multiple,
+            max_delay_ms=max_delay_ms, max_len=max_len,
+            queue_depth=queue_depth, seed=seed,
+        )
+        self.max_batch = self.router.max_batch
+        self.bucket_multiple = self.router.bucket_multiple
+        self.max_delay = self.router.max_delay
+        self.max_len = self.router.max_len
+        self.queue_depth = self.router.queue_depth
+        self._launcher = threading.Thread(
+            target=self._launch_loop, name="serve-launcher", daemon=True
+        )
+        self._launcher.start()
+
+    # ------------------------------------------------------------- admission
+
+    # Accounting lives on the router; these delegations keep the PR-8
+    # test/bench surface (eng._resolved, eng._seq, eng.batch_log,
+    # eng.latencies) stable.
+
+    @property
+    def _resolved(self) -> int:
+        return self.router._resolved
+
+    @property
+    def _seq(self) -> int:
+        return self.router._seq
+
+    @property
+    def batch_log(self) -> List[dict]:
+        return self.router.batch_log
+
+    @property
+    def latencies(self) -> List[float]:
+        return self.router.latencies
+
+    def _bucket(self, n: int) -> int:
+        return self.router._bucket(n)
+
+    def submit(self, word_ids: np.ndarray, counts: Optional[np.ndarray] = None,
+               key: Optional[np.ndarray] = None) -> Future:
+        """Admit one document; resolves to its (K,) normalized θ (eq. 9)."""
+        return self.router.submit(word_ids, counts, key)
+
+    # -------------------------------------------------------------- launcher
+
+    def _launch_loop(self) -> None:
+        while True:
+            item = self.router.next_batch()
+            if item is None:
+                return
+            L, reqs = item
+            try:
+                # hot-swap point: the launcher is the only thread that
+                # launches, so swapping BETWEEN launches gives zero
+                # downtime — no launch ever straddles two versions
+                self.server.refresh()
+                self._launch(L, reqs)
+            except BaseException as e:   # resolve, never hang the callers
+                self.router.fail_batch(reqs, e)
+
+    def _launch(self, L: int, reqs: List[_Request]) -> None:
+        w, c, keys = pad_batch(L, reqs, self.max_batch)
+        t0 = time.perf_counter()
+        theta = self.server.infer(w, c, key=jnp.asarray(keys))
+        t1 = time.perf_counter()
+        version = self.server.last_version
+        pub = self.server._publisher
+        cache = self.server.hot_cache
+        cw = cache.window_stats() if cache is not None else None
+        rec = {
+            "L": L, "filled": len(reqs), "capacity": self.max_batch,
+            "launch_seconds": t1 - t0,
+            "cache_hits": cw.hits if cw else 0,
+            "cache_misses": cw.misses if cw else 0,
+            # staleness audit trail: the version this launch served vs the
+            # newest committed version at launch time
+            "version": version,
+            "published_version": pub.version if pub is not None else -1,
+        }
+        self.router.resolve_batch(reqs, theta, version, rec)
+
+    # -------------------------------------------------------------- plumbing
+
+    def prewarm(self, lengths: Optional[Sequence[int]] = None,
+                vocab_sizes: Optional[Sequence[int]] = None) -> int:
+        """Compile the (L-bucket × W_s-bucket) trace grid up front.
+
+        Defaults cover every shape the admission path can produce: L
+        buckets are the ``bucket_multiple`` grid up to ``max_len``; W_s
+        buckets are the ``vocab_pad`` grid up to the largest unique vocab
+        a full batch can touch (min(W, max_batch·L)).  Returns the jit
+        cache size afterwards — under subsequent traffic
+        ``compile_count()`` must not move past it.
+        """
+        prewarm_server(self.server, max_batch=self.max_batch,
+                       bucket_multiple=self.bucket_multiple,
+                       max_len=self.max_len, lengths=lengths,
+                       vocab_sizes=vocab_sizes)
+        return self.compile_count()
+
+    @staticmethod
+    def compile_count() -> int:
+        """Size of ``_infer_local``'s jit cache — the recompilation probe."""
+        return _infer_local._cache_size()
+
+    def metrics(self, reset: bool = False) -> dict:
+        """Latency/throughput/cache summary over the recorded window."""
+        return self.router.metrics(reset=reset)
+
+    def drain(self) -> None:
+        """Block until every admitted request has resolved."""
+        self.router.drain()
+
+    def close(self) -> None:
+        """Flush remaining slots, stop both threads.
+
+        Idempotent AND safe under concurrent callers: every caller blocks
+        until both the collector and the launcher are joined.  (The PR-8
+        version let a second closer return as soon as it saw the stop
+        flag, while the first was still joining — double-close by
+        thread-join luck; the threaded regression test in
+        ``test_serving_engine.py`` pins the fix.)
+        """
+        self.router.close()
         self._launcher.join()
 
     def __enter__(self) -> "ServingEngine":
@@ -765,10 +907,45 @@ class TrafficGenerator:
 
 
 def serve_traffic(args, server: TopicServer) -> None:
-    """Drive the continuous-batching engine with synthetic Zipf/Poisson
-    traffic and report the SLO numbers (p50/p99 latency, QPS, cache)."""
+    """Drive the continuous-batching engine — or, with ``--replicas N``,
+    the multi-replica pool — with synthetic Zipf/Poisson traffic and
+    report the SLO numbers (p50/p99 latency, QPS, cache)."""
     gen = TrafficGenerator(args.vocab, seed=123)
     trace = gen.trace([(args.qps, args.requests)])
+    replicas = int(getattr(args, "replicas", 1) or 1)
+    if replicas > 1:
+        # imported lazily: replica.py imports this module
+        from repro.launch.replica import ReplicaPool, ReplicaSpec
+
+        spec = ReplicaSpec(
+            store_path=args.workdir, cfg=server.cfg,
+            vocab_capacity=args.vocab, fit_sweeps=server.fit_sweeps,
+            rel_tol=server.rel_tol, check_every=server.check_every,
+            active_topics=server.active_topics, vocab_pad=server.vocab_pad,
+            phi_dtype=server.phi_dtype, hot_rows=args.hot_rows,
+        )
+        backend = getattr(args, "replica_backend", "process")
+        with ReplicaPool(spec, replicas=replicas, backend=backend,
+                         max_batch=args.batch,
+                         max_delay_ms=args.max_delay_ms,
+                         max_len=_round_up(gen.doc_len[1], 16)) as pool:
+            pool.wait_ready()
+            t0 = time.time()
+            futs = TrafficGenerator.replay(trace, pool.submit,
+                                           pace=args.pace)
+            for f in futs:
+                f.result()
+            dt = time.time() - t0
+            m = pool.metrics()
+        print(f"served {m['requests']} requests in {dt:.2f}s over "
+              f"{replicas} {backend} replicas "
+              f"({m['requests']/dt:.1f} QPS sustained, target {args.qps})")
+        print(f"  latency p50 {m.get('p50_ms', 0):.1f}ms  "
+              f"p99 {m.get('p99_ms', 0):.1f}ms  "
+              f"batches {m['batches']} (mean fill {m['mean_fill']:.1f}); "
+              f"dispatch {m['dispatch']}, deaths {m['deaths']}, "
+              f"respawns {m['respawns']}")
+        return
     with ServingEngine(server, max_batch=args.batch,
                        max_delay_ms=args.max_delay_ms,
                        max_len=_round_up(gen.doc_len[1], 16)) as eng:
@@ -893,6 +1070,15 @@ def main() -> None:
     ap.add_argument("--hot-rows", type=int, default=0,
                     help="capacity of the serving hot-word φ-row cache "
                          "(0 = disabled)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve --traffic through a ReplicaPool of N "
+                         "data-parallel workers (1 = the single-replica "
+                         "engine)")
+    ap.add_argument("--replica-backend", default="process",
+                    choices=("process", "thread"),
+                    help="replica isolation: one spawned process per "
+                         "replica (scales past the GIL) or in-process "
+                         "threads (the device-mesh degenerate case)")
     args = ap.parse_args()
     if args.arch == LDA_ARCH:
         serve_lda(args)

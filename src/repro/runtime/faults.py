@@ -47,13 +47,20 @@ import numpy as np
 
 # Named injection points — the four host-level boundaries of a FOEM step
 # (two-phase sweep entry, local-fold publication, store flush, manifest /
-# checkpoint publish).  Firing an unknown point is an error: a typo'd
-# point would silently never inject.
+# checkpoint publish) plus the serving tier's replica loop.  Firing an
+# unknown point is an error: a typo'd point would silently never inject.
 PRE_PROBE = "pre-probe"
 POST_FOLD = "post-fold"
 MID_FLUSH = "mid-flush"
 PRE_PUBLISH = "pre-publish"
-POINTS = (PRE_PROBE, POST_FOLD, MID_FLUSH, PRE_PUBLISH)
+#: Fired by a serving replica worker between receiving a batch and
+#: launching it (``shard`` = replica id, ``step`` = the worker's batch
+#: counter).  A ``hard=True`` kill SIGKILLs the worker process with the
+#: batch in flight — the ``ReplicaPool`` re-issue path's test generator;
+#: a soft kill raises inside the worker loop (the thread-backend
+#: equivalent: the replica dies, the process survives).
+REPLICA_KILL = "replica-kill"
+POINTS = (PRE_PROBE, POST_FOLD, MID_FLUSH, PRE_PUBLISH, REPLICA_KILL)
 
 KINDS = ("kill", "delay", "drop")
 

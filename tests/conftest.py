@@ -23,6 +23,23 @@ if _si:
     sys.setswitchinterval(float(_si))
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (process-pool chaos etc.); "
+        "skipped unless REPRO_RUN_SLOW=1",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("REPRO_RUN_SLOW"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: set REPRO_RUN_SLOW=1 to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
 @pytest.fixture(scope="session")
 def tiny_corpus():
     corpus, true_phi = synthetic_lda_corpus(

@@ -284,6 +284,56 @@ def test_concurrent_submitters_racing_drain_and_close(server):
         sys.setswitchinterval(old_interval)
 
 
+def test_close_is_idempotent_under_concurrent_callers(server):
+    """Regression: PR-8's close() only survived a second call by
+    thread-join luck — two racing closers could both reach the queue
+    sentinel/join sequence and deadlock or double-release.  The router
+    extraction made close() a real protocol: every concurrent caller
+    must return with the collector and launcher joined, every admitted
+    future resolved, and later submits must see the closed error."""
+    import sys
+    import threading
+
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-4)
+    try:
+        eng = ServingEngine(server, max_batch=64, bucket_multiple=16,
+                            max_delay_ms=10_000.0, max_len=16)
+        rng = np.random.default_rng(9)
+        futs = [eng.submit(*_doc(rng, 5)) for _ in range(5)]
+
+        n_closers, errs = 6, []
+        barrier = threading.Barrier(n_closers)
+
+        def closer(kind):
+            try:
+                barrier.wait()
+                if kind:           # drain() racing close() must also return
+                    eng.drain()
+                eng.close()
+            except Exception as e:             # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=closer, args=(i % 2,))
+                   for i in range(n_closers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+            assert not t.is_alive()            # no closer deadlocked
+        assert not errs
+        # the worker threads are actually joined, not leaked
+        assert not eng._launcher.is_alive()
+        assert not eng.router._collector.is_alive()
+        for f in futs:                          # close flushed the slot
+            assert f.result(timeout=1).shape == (K,)
+        with pytest.raises(RuntimeError, match="closed"):
+            eng.submit(np.arange(4, dtype=np.int32))
+        eng.close()                             # and still idempotent after
+    finally:
+        sys.setswitchinterval(old_interval)
+
+
 def test_hot_swap_under_traffic_keeps_compile_count_stable(server):
     """A writer thread publishing new φ versions while traffic flows: the
     launcher swaps between launches, every response is tagged with a

@@ -274,6 +274,81 @@ def test_fetch_rows_promote_false_reads_without_caching(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Readonly attach: the replica-pool workers' view of a store they don't own.
+# Attach must read the committed state (including a committed-but-unretired
+# WAL, overlaid in memory only) and must never mutate the backing files.
+# ---------------------------------------------------------------------------
+
+
+def test_attach_reads_flushed_state_readonly(tmp_path):
+    st = ParameterStore(str(tmp_path), num_topics=4, vocab_capacity=32,
+                        buffer_rows=8)
+    ids = np.arange(10, dtype=np.int32)
+    rows = np.random.default_rng(0).random((10, 4)).astype(np.float32)
+    st.ensure_vocab(9)
+    st.write_rows(ids, rows)
+    st.flush()
+
+    ro = ParameterStore.attach(str(tmp_path), num_topics=4,
+                               vocab_capacity=32)
+    assert ro.readonly and ro.live_vocab == 10
+    np.testing.assert_allclose(ro.fetch_rows(ids), rows)
+    dp = ro.dense_phi()
+    assert dp.shape == (10, 4)
+    np.testing.assert_allclose(dp, rows)
+    # every mutator is fenced off
+    with pytest.raises(PermissionError):
+        ro.write_rows(ids[:1], rows[:1])
+    with pytest.raises(PermissionError):
+        ro.flush()
+
+
+def test_attach_overlays_committed_wal_without_touching_disk(tmp_path):
+    """A committed-but-unretired WAL (owner crashed between COMMIT and
+    apply) must be visible to an attached reader — overlaid in memory:
+    the memmap bytes and the WAL file itself stay untouched, so the
+    owner's own crash recovery still replays it later."""
+    from repro.core import streaming as streaming_mod
+
+    st = ParameterStore(str(tmp_path), num_topics=4, vocab_capacity=32,
+                        buffer_rows=8)
+    ids = np.arange(10, dtype=np.int32)
+    rows = np.random.default_rng(0).random((10, 4)).astype(np.float32)
+    st.ensure_vocab(9)
+    st.write_rows(ids, rows)
+    st.flush()
+
+    # stage a second version up to (and including) the WAL COMMIT rename,
+    # but crash before the memmap apply: flush steps 1-2 only
+    rows2 = (rows + 1.0).astype(np.float32)
+    st.write_rows(ids, rows2)
+    with st._lock:
+        dirty = np.flatnonzero(st._buf_dirty)
+        d_ids = st._buf_ids[dirty]
+        order = np.argsort(d_ids)
+        d_ids = d_ids[order]
+        d_rows = st._buf[dirty[order]]
+        streaming_mod._write_record(
+            st._wal_path() + ".tmp",
+            {"ids": d_ids, "rows": d_rows, "phi_k": st.phi_k},
+            st._manifest_payload(version=st.flush_version + 1))
+        os.replace(st._wal_path() + ".tmp", st._wal_path())
+
+    mmap_path = str(tmp_path / "phi_wk.mmap")
+    with open(mmap_path, "rb") as f:
+        pre = f.read()
+
+    ro = ParameterStore.attach(str(tmp_path), num_topics=4,
+                               vocab_capacity=32)
+    assert ro.recovered_from_wal
+    np.testing.assert_allclose(ro.fetch_rows(d_ids), d_rows)
+    # the overlay is memory-only: WAL still present, memmap bit-identical
+    assert os.path.exists(st._wal_path())
+    with open(mmap_path, "rb") as f:
+        assert f.read() == pre
+
+
+# ---------------------------------------------------------------------------
 # Concurrency: windowed-stats races, and hypothesis property tests for the
 # versioning protocol (write_version monotonicity, versioned reconciliation,
 # epoch cache coherence).
